@@ -1,0 +1,402 @@
+"""Query corpus: 30-query hybrid benchmark (4 schemas) + 14 SemBench-style
+E-Commerce queries (paper §6.1, Fig. 5 operator mix).
+
+Composition mirrors the paper: Q1-Q3 use SP, Q4-Q30 use SFs, Q16, Q17,
+Q25, Q27-Q30 add SJ; complexity ranges from 1 table x 1 semantic operator
+to 6+ joins with 2-4 semantic filters (Q26-Q30).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+from repro.core import Q, col
+from repro.data import schemas as S
+
+
+@dataclass(frozen=True)
+class QuerySpec:
+    qid: str
+    schema: str  # key into repro.data.SCHEMAS
+    build: Callable[[], object]  # -> plan Node
+    out_cols: tuple[str, ...]
+    n_sf_hint: int = 1
+
+
+def _q(qid, schema, out_cols, n_sf, fn):
+    return QuerySpec(qid=qid, schema=schema, build=fn,
+                     out_cols=tuple(out_cols), n_sf_hint=n_sf)
+
+
+# ---------------------------------------------------------------------------
+# BookReview Q1-Q8
+# ---------------------------------------------------------------------------
+
+HYBRID: list[QuerySpec] = []
+
+HYBRID.append(_q("Q1", "bookreview", ["reviews.review_id", "sp.score"], 0,
+    lambda: (Q.scan("reviews")
+             .sem_project(S.REVIEW_SENTIMENT, "sp.score")
+             .where(col("sp.score") >= 4)
+             .select("reviews.review_id", "sp.score").build())))
+
+HYBRID.append(_q("Q2", "bookreview", ["books.title", "sp.score"], 0,
+    lambda: (Q.scan("books")
+             .join(Q.scan("reviews"), "books.book_id", "reviews.book_id")
+             .sem_project(S.REVIEW_SENTIMENT, "sp.score")
+             .where(col("sp.score") >= 4)
+             .where(col("reviews.helpful_vote") >= 30)
+             .select("books.title", "sp.score").build())))
+
+HYBRID.append(_q("Q3", "bookreview", ["reviews.book_id", "agg.avg_score"], 0,
+    lambda: (Q.scan("reviews")
+             .where(col("reviews.verified_purchase") == 1)
+             .sem_project(S.REVIEW_SENTIMENT, "sp.score")
+             .group_by(["reviews.book_id"],
+                       [("avg", "sp.score", "avg_score")]).build())))
+
+HYBRID.append(_q("Q4", "bookreview", ["books.title"], 1,
+    lambda: (Q.scan("books")
+             .sem_filter(S.BOOKS_ABOUT_AI)
+             .where(col("books.year") >= 2000)
+             .select("books.title").build())))
+
+HYBRID.append(_q("Q5", "bookreview", ["books.title", "reviews.review_id"], 2,
+    lambda: (Q.scan("books")
+             .join(Q.scan("reviews"), "books.book_id", "reviews.book_id")
+             .where(col("reviews.rating") >= 3)
+             .sem_filter(S.BOOKS_ABOUT_AI)
+             .sem_filter(S.REVIEW_POSITIVE)
+             .select("books.title", "reviews.review_id").build())))
+
+HYBRID.append(_q("Q6", "bookreview", ["reviews.review_id"], 1,
+    lambda: (Q.scan("reviews")
+             .where(col("reviews.rating") <= 2)
+             .sem_filter(S.REVIEW_MENTIONS_SHIPPING)
+             .select("reviews.review_id").build())))
+
+HYBRID.append(_q("Q7", "bookreview",
+                 ["users.user_id", "reviews.review_id"], 2,
+    lambda: (Q.scan("reviews")
+             .join(Q.scan("users"), "reviews.review_id", "users.user_id")
+             .sem_filter(S.USER_IS_EXPERT)
+             .sem_filter(S.REVIEW_POSITIVE)
+             .where(col("reviews.helpful_vote") >= 10)
+             .select("users.user_id", "reviews.review_id").build())))
+
+HYBRID.append(_q("Q8", "bookreview", ["books.title", "reviews.review_id"], 1,
+    lambda: (Q.scan("books")
+             .sem_filter(S.BOOK_SECOND_EDITION)
+             .join(Q.scan("reviews"), "books.book_id", "reviews.book_id")
+             .where(col("reviews.verified_purchase") == 1)
+             .where(col("reviews.rating") >= 5)
+             .where(col("reviews.helpful_vote") >= 50)
+             .order_by(("reviews.review_time", True))
+             .select("books.title", "reviews.review_id").build())))
+
+# ---------------------------------------------------------------------------
+# Yelp Q9-Q15
+# ---------------------------------------------------------------------------
+
+HYBRID.append(_q("Q9", "yelp", ["businesses.name"], 1,
+    lambda: (Q.scan("businesses")
+             .where(col("businesses.stars") >= 4.0)
+             .sem_filter(S.BIZ_FAMILY_FRIENDLY)
+             .select("businesses.name").build())))
+
+HYBRID.append(_q("Q10", "yelp", ["businesses.name", "yreviews.review_id"], 2,
+    lambda: (Q.scan("businesses")
+             .join(Q.scan("yreviews"), "businesses.biz_id", "yreviews.biz_id")
+             .where(col("yreviews.stars") >= 4)
+             .sem_filter(S.BIZ_UPSCALE)
+             .sem_filter(S.YELP_REVIEW_POSITIVE)
+             .select("businesses.name", "yreviews.review_id").build())))
+
+HYBRID.append(_q("Q11", "yelp", ["yreviews.review_id"], 1,
+    lambda: (Q.scan("yreviews")
+             .where(col("yreviews.useful") >= 10)
+             .sem_filter(S.YELP_REVIEW_SERVICE)
+             .select("yreviews.review_id").build())))
+
+HYBRID.append(_q("Q12", "yelp",
+                 ["yusers.user_id", "yreviews.review_id"], 2,
+    lambda: (Q.scan("yreviews")
+             .join(Q.scan("yusers"), "yreviews.user_id", "yusers.user_id")
+             .sem_filter(S.YELP_USER_LOCAL)
+             .sem_filter(S.YELP_REVIEW_POSITIVE)
+             .where(col("yusers.review_count") >= 50)
+             .select("yusers.user_id", "yreviews.review_id").build())))
+
+HYBRID.append(_q("Q13", "yelp", ["businesses.biz_id", "agg.cnt"], 1,
+    lambda: (Q.scan("businesses")
+             .join(Q.scan("yreviews"), "businesses.biz_id", "yreviews.biz_id")
+             .sem_filter(S.YELP_REVIEW_SERVICE)
+             .group_by(["businesses.biz_id"], [("count", "*", "cnt")])
+             .build())))
+
+HYBRID.append(_q("Q14", "yelp", ["businesses.name", "sp.food"], 0,
+    lambda: (Q.scan("businesses")
+             .join(Q.scan("yreviews"), "businesses.biz_id", "yreviews.biz_id")
+             .where(col("yreviews.stars") >= 3)
+             .sem_project(S.YELP_REVIEW_SCORE, "sp.food")
+             .where(col("sp.food") >= 4)
+             .select("businesses.name", "sp.food").build())))
+
+HYBRID.append(_q("Q15", "yelp",
+                 ["businesses.name", "yusers.user_id"], 3,
+    lambda: (Q.scan("businesses")
+             .join(Q.scan("yreviews"), "businesses.biz_id", "yreviews.biz_id")
+             .join(Q.scan("yusers"), "yreviews.user_id", "yusers.user_id")
+             .sem_filter(S.BIZ_FAMILY_FRIENDLY)
+             .sem_filter(S.YELP_REVIEW_POSITIVE)
+             .sem_filter(S.YELP_USER_LOCAL)
+             .where(col("yreviews.useful") >= 5)
+             .select("businesses.name", "yusers.user_id").build())))
+
+# ---------------------------------------------------------------------------
+# GoogleLocal Q16-Q20 (SJ in Q16-Q17)
+# ---------------------------------------------------------------------------
+
+HYBRID.append(_q("Q16", "googlelocal",
+                 ["places.place_id", "greviews.review_id"], 1,
+    lambda: (Q.scan("places")
+             .where(col("places.rating") >= 4.5)
+             .sem_join(Q.scan("greviews")
+                       .where(col("greviews.rating") <= 2)
+                       .where(col("greviews.time") >= 2022),
+                       S.GL_REVIEW_DESCRIBES_PLACE)
+             .select("places.place_id", "greviews.review_id").build())))
+
+HYBRID.append(_q("Q17", "googlelocal",
+                 ["places.place_id", "greviews.review_id"], 2,
+    lambda: (Q.scan("places")
+             .where(col("places.rating") >= 4.8)
+             .sem_filter(S.PLACE_OUTDOOR)
+             .sem_join(Q.scan("greviews")
+                       .where(col("greviews.rating") >= 5)
+                       .where(col("greviews.time") >= 2023),
+                       S.GL_REVIEW_PRAISES_PLACE)
+             .select("places.place_id", "greviews.review_id").build())))
+
+HYBRID.append(_q("Q18", "googlelocal", ["places.name"], 2,
+    lambda: (Q.scan("places")
+             .where(col("places.rating") >= 4.0)
+             .sem_filter(S.PLACE_OUTDOOR)
+             .sem_filter(S.PLACE_ACCESSIBLE)
+             .select("places.name").build())))
+
+HYBRID.append(_q("Q19g", "googlelocal",
+                 ["places.name", "greviews.review_id"], 2,
+    lambda: (Q.scan("places")
+             .join(Q.scan("greviews"), "places.place_id", "greviews.place_id")
+             .sem_filter(S.GL_REVIEW_PARKING)
+             .sem_filter(S.PLACE_ACCESSIBLE)
+             .where(col("greviews.rating") <= 3)
+             .select("places.name", "greviews.review_id").build())))
+
+HYBRID.append(_q("Q20", "googlelocal", ["places.place_id", "agg.cnt"], 1,
+    lambda: (Q.scan("places")
+             .join(Q.scan("greviews"), "places.place_id", "greviews.place_id")
+             .sem_filter(S.GL_REVIEW_POSITIVE)
+             .group_by(["places.place_id"], [("count", "*", "cnt")])
+             .limit(20).build())))
+
+# ---------------------------------------------------------------------------
+# TPC-H Q21-Q30 (multi-join; Q25/Q27-Q30 SJ; Q26-Q30 most complex)
+# ---------------------------------------------------------------------------
+
+HYBRID.append(_q("Q21", "tpch", ["lineitem.l_linenumber"], 1,
+    lambda: (Q.scan("lineitem")
+             .where(col("lineitem.l_shipdate").between(1994, 1998))
+             .where(col("lineitem.l_quantity").between(3, 38))
+             .sem_filter(S.LINEITEM_PROBLEM)
+             .select("lineitem.l_linenumber").build())))
+
+HYBRID.append(_q("Q22", "tpch", ["orders.o_orderkey"], 2,
+    lambda: (Q.scan("orders")
+             .join(Q.scan("customer"), "orders.o_custkey", "customer.c_custkey")
+             .where(col("orders.o_totalprice") > 20000)
+             .sem_filter(S.ORDER_URGENT_TONE)
+             .sem_filter(S.CUSTOMER_RISK)
+             .select("orders.o_orderkey").build())))
+
+HYBRID.append(_q("Q23", "tpch", ["part.p_partkey", "supplier.s_suppkey"], 2,
+    lambda: (Q.scan("part")
+             .join(Q.scan("partsupp"), "part.p_partkey", "partsupp.ps_partkey")
+             .join(Q.scan("supplier"), "partsupp.ps_suppkey",
+                   "supplier.s_suppkey")
+             .where(col("part.p_size").between(1, 40))
+             .sem_filter(S.PART_FRAGILE)
+             .sem_filter(S.SUPPLIER_RELIABLE)
+             .select("part.p_partkey", "supplier.s_suppkey").build())))
+
+HYBRID.append(_q("Q24", "tpch", ["lineitem.l_linenumber"], 2,
+    lambda: (Q.scan("lineitem")
+             .join(Q.scan("orders"), "lineitem.l_orderkey", "orders.o_orderkey")
+             .where(col("orders.o_orderdate").between(1994, 1998))
+             .sem_filter(S.LINEITEM_PROBLEM)
+             .sem_filter(S.ORDER_URGENT_TONE)
+             .select("lineitem.l_linenumber").build())))
+
+HYBRID.append(_q("Q25", "tpch", ["supplier.s_suppkey", "nation.n_name"], 1,
+    lambda: (Q.scan("supplier")
+             .sem_join(Q.scan("nation"), S.NATION_MATCHES_SUPPLIER)
+             .select("supplier.s_suppkey", "nation.n_name").build())))
+
+HYBRID.append(_q("Q26", "tpch", ["lineitem.l_linenumber"], 3,
+    lambda: (Q.scan("lineitem")
+             .join(Q.scan("orders"), "lineitem.l_orderkey", "orders.o_orderkey")
+             .join(Q.scan("customer"), "orders.o_custkey", "customer.c_custkey")
+             .join(Q.scan("part"), "lineitem.l_partkey", "part.p_partkey")
+             .where(col("orders.o_totalprice") > 20000)
+             .where(col("lineitem.l_quantity").between(3, 38))
+             .sem_filter(S.LINEITEM_PROBLEM)
+             .sem_filter(S.CUSTOMER_RISK)
+             .sem_filter(S.PART_FRAGILE)
+             .select("lineitem.l_linenumber").build())))
+
+# Q27: the paper's Listing 4 audit query (6 joins incl. cross, 2 SFs)
+HYBRID.append(_q("Q27", "tpch", ["lineitem.l_linenumber",
+                                 "customer.c_custkey"], 2,
+    lambda: (Q.scan("lineitem")
+             .where(col("lineitem.l_shipdate").between(1994, 1998))
+             .where(col("lineitem.l_quantity").between(3, 38))
+             .sem_filter(S.LINEITEM_PROBLEM)
+             .join(Q.scan("orders")
+                   .where(col("orders.o_orderdate").between(1994, 1998))
+                   .where(col("orders.o_totalprice") > 20000),
+                   "lineitem.l_orderkey", "orders.o_orderkey")
+             .join(Q.scan("part").where(col("part.p_size").between(1, 40)),
+                   "lineitem.l_partkey", "part.p_partkey")
+             .cross(Q.scan("customer")
+                    .where(col("customer.c_acctbal") < 0)
+                    .sem_filter(S.CUSTOMER_RISK))
+             .limit(5000)
+             .select("lineitem.l_linenumber", "customer.c_custkey").build())))
+
+HYBRID.append(_q("Q28", "tpch", ["supplier.s_suppkey",
+                                 "partsupp.ps_availqty"], 2,
+    lambda: (Q.scan("supplier")
+             .sem_filter(S.SUPPLIER_RELIABLE)
+             .join(Q.scan("partsupp"), "supplier.s_suppkey",
+                   "partsupp.ps_suppkey")
+             .join(Q.scan("part"), "partsupp.ps_partkey", "part.p_partkey")
+             .sem_filter(S.PART_FRAGILE)
+             .where(col("partsupp.ps_availqty") <= 200)
+             .select("supplier.s_suppkey", "partsupp.ps_availqty").build())))
+
+HYBRID.append(_q("Q29", "tpch", ["orders.o_orderkey"], 3,
+    lambda: (Q.scan("orders")
+             .join(Q.scan("customer"), "orders.o_custkey", "customer.c_custkey")
+             .join(Q.scan("nation"), "customer.c_nationkey",
+                   "nation.n_nationkey")
+             .join(Q.scan("region"), "nation.n_regionkey",
+                   "region.r_regionkey")
+             .join(Q.scan("lineitem"), "orders.o_orderkey",
+                   "lineitem.l_orderkey")
+             .where(col("orders.o_totalprice") > 50000)
+             .sem_filter(S.ORDER_URGENT_TONE)
+             .sem_filter(S.CUSTOMER_RISK)
+             .sem_filter(S.LINEITEM_PROBLEM)
+             .select("orders.o_orderkey").build())))
+
+HYBRID.append(_q("Q30", "tpch", ["lineitem.l_linenumber"], 4,
+    lambda: (Q.scan("lineitem")
+             .join(Q.scan("orders"), "lineitem.l_orderkey", "orders.o_orderkey")
+             .join(Q.scan("customer"), "orders.o_custkey", "customer.c_custkey")
+             .join(Q.scan("part"), "lineitem.l_partkey", "part.p_partkey")
+             .join(Q.scan("partsupp"), "part.p_partkey", "partsupp.ps_partkey")
+             .join(Q.scan("supplier"), "partsupp.ps_suppkey",
+                   "supplier.s_suppkey")
+             .where(col("lineitem.l_quantity").between(3, 38))
+             .where(col("orders.o_totalprice") > 20000)
+             .sem_filter(S.LINEITEM_PROBLEM)
+             .sem_filter(S.CUSTOMER_RISK)
+             .sem_filter(S.PART_FRAGILE)
+             .sem_filter(S.SUPPLIER_RELIABLE)
+             .select("lineitem.l_linenumber").build())))
+
+# ---------------------------------------------------------------------------
+# SemBench-style E-Commerce (14 simple queries, q1-q14)
+# ---------------------------------------------------------------------------
+
+ECOM: list[QuerySpec] = []
+
+ECOM.append(_q("q1", "ecommerce", ["products.title"], 1,
+    lambda: (Q.scan("products").sem_filter(S.PRODUCT_IS_ELECTRONICS)
+             .select("products.title").build())))
+ECOM.append(_q("q2", "ecommerce", ["products.title"], 1,
+    lambda: (Q.scan("products").where(col("products.price") <= 50)
+             .sem_filter(S.PRODUCT_ECO).select("products.title").build())))
+ECOM.append(_q("q3", "ecommerce", ["products.title"], 2,
+    lambda: (Q.scan("products").sem_filter(S.PRODUCT_FOR_KIDS)
+             .sem_filter(S.PRODUCT_ECO).select("products.title").build())))
+ECOM.append(_q("q4", "ecommerce", ["previews.review_id"], 1,
+    lambda: (Q.scan("previews").where(col("previews.rating") <= 2)
+             .sem_filter(S.ECOM_REVIEW_DEFECT)
+             .select("previews.review_id").build())))
+ECOM.append(_q("q5", "ecommerce", ["products.title",
+                                   "previews.review_id"], 2,
+    lambda: (Q.scan("products")
+             .join(Q.scan("previews"), "products.product_id",
+                   "previews.product_id")
+             .sem_filter(S.PRODUCT_IS_ELECTRONICS)
+             .sem_filter(S.ECOM_REVIEW_POSITIVE)
+             .select("products.title", "previews.review_id").build())))
+ECOM.append(_q("q6", "ecommerce", ["products.title"], 1,
+    lambda: (Q.scan("products")
+             .join(Q.scan("previews"), "products.product_id",
+                   "previews.product_id")
+             .where(col("previews.rating") <= 2)
+             .sem_filter(S.ECOM_REVIEW_DEFECT)
+             .select("products.title").build())))
+ECOM.append(_q("q7", "ecommerce", ["products.product_id", "sp.q"], 0,
+    lambda: (Q.scan("products")
+             .sem_project(S.PRODUCT_QUALITY_SCORE, "sp.q")
+             .where(col("sp.q") >= 4)
+             .select("products.product_id", "sp.q").build())))
+ECOM.append(_q("q8", "ecommerce", ["products.product_id", "agg.cnt"], 1,
+    lambda: (Q.scan("products")
+             .join(Q.scan("previews"), "products.product_id",
+                   "previews.product_id")
+             .sem_filter(S.ECOM_REVIEW_POSITIVE)
+             .group_by(["products.product_id"], [("count", "*", "cnt")])
+             .build())))
+ECOM.append(_q("q9", "ecommerce", ["products.title"], 1,
+    lambda: (Q.scan("products").where(col("products.price") >= 200)
+             .sem_filter(S.PRODUCT_IS_ELECTRONICS)
+             .select("products.title").build())))
+ECOM.append(_q("q10", "ecommerce", ["previews.review_id"], 2,
+    lambda: (Q.scan("previews")
+             .sem_filter(S.ECOM_REVIEW_POSITIVE)
+             .sem_filter(S.ECOM_REVIEW_DEFECT)
+             .select("previews.review_id").build())))
+ECOM.append(_q("q11", "ecommerce", ["products.title",
+                                    "previews.review_id"], 2,
+    lambda: (Q.scan("products").where(col("products.price") <= 30)
+             .join(Q.scan("previews"), "products.product_id",
+                   "previews.product_id")
+             .sem_filter(S.PRODUCT_FOR_KIDS)
+             .sem_filter(S.ECOM_REVIEW_DEFECT)
+             .select("products.title", "previews.review_id").build())))
+ECOM.append(_q("q12", "ecommerce", ["products.product_id"], 1,
+    lambda: (Q.scan("products")
+             .sem_filter(S.PRODUCT_ECO)
+             .order_by(("products.price", False)).limit(10)
+             .select("products.product_id").build())))
+ECOM.append(_q("q13", "ecommerce", ["products.product_id", "sp.q"], 0,
+    lambda: (Q.scan("products").where(col("products.price") >= 100)
+             .sem_project(S.PRODUCT_QUALITY_SCORE, "sp.q")
+             .where(col("sp.q") <= 2)
+             .select("products.product_id", "sp.q").build())))
+ECOM.append(_q("q14", "ecommerce", ["products.title",
+                                    "previews.review_id"], 2,
+    lambda: (Q.scan("products")
+             .join(Q.scan("previews"), "products.product_id",
+                   "previews.product_id")
+             .where(col("previews.rating") >= 4)
+             .sem_filter(S.PRODUCT_IS_ELECTRONICS)
+             .sem_filter(S.ECOM_REVIEW_POSITIVE)
+             .select("products.title", "previews.review_id").build())))
+
+ALL_QUERIES = HYBRID + ECOM

@@ -1,0 +1,41 @@
+"""Fig. 6: per-query latency (s) and LLM cost ($) across the 30-query
+hybrid benchmark. Reads the Table-2 artifact (or recomputes) and emits a
+per-query CSV with the paper's F1>=0.4 visibility rule."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from . import table2_overall
+
+F1_BAR_THRESHOLD = 0.4
+
+
+def run(out_path: str | None = "artifacts/bench/fig6.csv",
+        table2_path: str = "artifacts/bench/table2.json",
+        quiet: bool = False):
+    p = Path(table2_path)
+    data = (json.loads(p.read_text()) if p.exists()
+            else table2_overall.run(out_path=table2_path, quiet=True))
+    lines = ["qid,method,latency_s,usd,f1,shown"]
+    for row in data["per_query"]:
+        qid = row["qid"]
+        b = row["baseline"]
+        lines.append(
+            f"{qid},baseline,{b['sim_latency_s']:.3f},{b['usd']:.6f},1.0,1")
+        for strat in ("pullup", "cost"):
+            r = row[strat]
+            shown = int(r["f1"] >= F1_BAR_THRESHOLD)
+            lines.append(f"{qid},{strat},{r['sim_latency_s']:.3f},"
+                         f"{r['usd']:.6f},{r['f1']:.3f},{shown}")
+    csv = "\n".join(lines) + "\n"
+    if out_path:
+        Path(out_path).parent.mkdir(parents=True, exist_ok=True)
+        Path(out_path).write_text(csv)
+    if not quiet:
+        print(csv[:800])
+    return csv
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Fig. 7: sensitivity to α on a representative multi-table query (Q30:
+6 joins, 4 SFs). Sweeps α over 9 orders of magnitude and records LLM
+calls, simulated latency and the chosen plan shape."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core import CostParams, Join, SemanticFilter, optimize
+
+from .corpus import HYBRID
+from .harness import get_db, run_query
+
+ALPHAS = [1e-7, 1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0, 10.0]
+QID = "Q30"
+
+
+def _plan_signature(plan) -> dict:
+    """How many SFs sit above the topmost join (pulled up)."""
+    joins = [n for n in plan.walk() if isinstance(n, Join)]
+    up = 0
+    total = 0
+    for sf in plan.walk():
+        if isinstance(sf, SemanticFilter):
+            total += 1
+            if any(j in list(sf.walk()) for j in joins):
+                up += 1
+    return {"sfs_above_a_join": up, "sfs_total": total}
+
+
+def run(out_path: str | None = "artifacts/bench/fig7.json",
+        quiet: bool = False):
+    spec = next(q for q in HYBRID if q.qid == QID)
+    db = get_db(spec.schema)
+    rows = []
+    for alpha in ALPHAS:
+        params = CostParams(alpha=alpha)
+        r = run_query(spec, "cost", noise=0.0, params=params)
+        opt = optimize(spec.build(), db.catalog(), "cost", params)
+        sig = _plan_signature(opt.plan)
+        rows.append({"alpha": alpha, "llm_calls": r.llm_calls,
+                     "sim_latency_s": r.sim_latency_s,
+                     "rel_rows": r.rel_rows, **sig})
+        if not quiet:
+            print(f"  alpha={alpha:8.0e} calls={r.llm_calls:6d} "
+                  f"lat={r.sim_latency_s:7.2f}s pulled={sig}", flush=True)
+    out = {"qid": QID, "rows": rows}
+    if out_path:
+        p = Path(out_path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(out, indent=2))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""Fig. 8: sensitivity to the statistics-free selectivity defaults.
+Sweeps s_i (SF selectivity) x s_⋈ (join distinct reduction) on a
+representative multi-table query and maps the plan-regime boundary."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core import CostParams, push_down_filters, simplify
+from repro.core.dp import dp_place, lift_semantic_filters
+
+from .corpus import HYBRID
+from .harness import get_db, run_query
+
+S_SF = [0.05, 0.1, 0.2, 0.4, 0.8]
+S_JOIN = [0.01, 0.05, 0.1, 0.2, 0.5]
+QID = "Q30"  # 6 joins, 4 SFs: placement depths shift with s_⋈
+
+
+def _placement_depths(spec, db, params) -> list[int]:
+    cat = db.catalog()
+    plan = simplify(push_down_filters(spec.build().clone(), cat), cat)
+    skeleton, lifted = lift_semantic_filters(plan)
+    res = dp_place(skeleton, lifted, cat, params)
+    depth = {}
+
+    def assign(n, d):
+        depth[n.nid] = d
+        for c in n.children:
+            assign(c, d + 1)
+
+    assign(skeleton, 0)
+    return [depth[res.placement[i]] for i in range(len(lifted))]
+
+
+def run(out_path: str | None = "artifacts/bench/fig8.json",
+        quiet: bool = False):
+    spec = next(q for q in HYBRID if q.qid == QID)
+    db = get_db(spec.schema)
+    grid = []
+    for s_sf in S_SF:
+        for s_join in S_JOIN:
+            params = CostParams(s_sf=s_sf, s_join=s_join)
+            r = run_query(spec, "cost", noise=0.0, params=params)
+            depths = _placement_depths(spec, db, params)
+            grid.append({"s_sf": s_sf, "s_join": s_join,
+                         "llm_calls": r.llm_calls, "usd": r.usd,
+                         "sim_latency_s": r.sim_latency_s,
+                         "placement_depths": depths})
+            if not quiet:
+                print(f"  s_i={s_sf:4.2f} s_join={s_join:4.2f} "
+                      f"calls={r.llm_calls:6d} depths={depths}", flush=True)
+    out = {"qid": QID, "grid": grid}
+    if out_path:
+        p = Path(out_path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(out, indent=2))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,26 @@
+"""§Roofline: the 3-term roofline table for every (arch x shape) cell from
+the single-pod dry-run artifacts (multi-pod artifacts prove shardability
+only)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.analysis.roofline import load_all, table
+
+
+def run(art_dir: str = "artifacts/dryrun",
+        out_path: str | None = "artifacts/bench/roofline.json",
+        quiet: bool = False):
+    rows = load_all(art_dir, mesh="single")
+    if not quiet:
+        print(table(rows))
+    if out_path:
+        Path(out_path).parent.mkdir(parents=True, exist_ok=True)
+        Path(out_path).write_text(
+            json.dumps([r.as_dict() for r in rows], indent=2))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

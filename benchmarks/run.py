@@ -1,0 +1,125 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV:
+  * name        — table/figure + metric
+  * us_per_call — engine-side microseconds per distinct LLM call (the
+                  relational overhead PLOP trades against), or per
+                  optimizer invocation / per roofline step where noted
+  * derived     — the headline metric the paper reports for that artifact
+
+Full JSON/CSV artifacts land in artifacts/bench/.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+from . import (
+    fig6_perquery,
+    fig7_alpha,
+    fig8_selectivity,
+    fig9_overhead,
+    roofline,
+    table2_overall,
+    table3_sembench,
+)
+
+
+def _emit(name, us_per_call, derived):
+    print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+def bench_table2():
+    out = table2_overall.run(quiet=True)
+    total_wall = sum(r["baseline"]["engine_wall_s"]
+                     for r in out["per_query"])
+    total_calls = sum(r["baseline"]["llm_calls"] for r in out["per_query"])
+    us = 1e6 * total_wall / max(total_calls, 1)
+    for strat in ("pullup", "cost"):
+        s = out["summary"][strat]
+        _emit(f"table2/{strat}/speedup", us, f"{s['speedup']:.3f}x")
+        _emit(f"table2/{strat}/cost_reduction", us, f"{s['cost_red']:.3f}x")
+        _emit(f"table2/{strat}/avg_f1", us, f"{s['avg_f1']:.3f}")
+    return out
+
+
+def bench_table3():
+    out = table3_sembench.run(quiet=True)
+    for strat in ("baseline", "pullup", "cost"):
+        s = out["summary"][strat]
+        if strat == "baseline":
+            _emit("table3/baseline/quality", 0.0, f"{s['quality']:.3f}")
+        else:
+            _emit(f"table3/{strat}/quality", 0.0, f"{s['quality']:.3f}")
+            _emit(f"table3/{strat}/speedup", 0.0, f"{s['speedup']:.3f}x")
+    return out
+
+
+def bench_fig6():
+    fig6_perquery.run(quiet=True)
+    _emit("fig6/csv", 0.0, "artifacts/bench/fig6.csv")
+
+
+def bench_fig7():
+    out = fig7_alpha.run(quiet=True)
+    calls = {r["alpha"]: r["llm_calls"] for r in out["rows"]}
+    lo, hi = min(calls.values()), max(calls.values())
+    _emit("fig7/llm_calls_range", 0.0, f"{lo}..{hi}")
+    return out
+
+
+def bench_fig8():
+    out = fig8_selectivity.run(quiet=True)
+    calls = [g["llm_calls"] for g in out["grid"]]
+    regimes = len({tuple(g["placement_depths"]) for g in out["grid"]})
+    _emit("fig8/llm_calls_regimes", 0.0, f"{min(calls)}..{max(calls)}")
+    _emit("fig8/distinct_plan_regimes", 0.0, str(regimes))
+    return out
+
+
+def bench_fig9():
+    out = fig9_overhead.run(quiet=True)
+    worst = max(r["total_s"] for r in out["rows"])
+    us = 1e6 * worst
+    _emit("fig9/optimizer_overhead_worst", us, f"{worst*1e3:.2f}ms@n=8")
+    return out
+
+
+def bench_roofline():
+    rows = roofline.run(quiet=True)
+    if not rows:
+        _emit("roofline/cells", 0.0, "no artifacts (run launch.sweep)")
+        return
+    by_kind: dict = {}
+    for r in rows:
+        by_kind.setdefault(r.shape, []).append(r.roofline_frac)
+    for shape, fr in sorted(by_kind.items()):
+        _emit(f"roofline/{shape}/mean_frac",
+              1e6 * sum(x.step_s for x in rows if x.shape == shape)
+              / max(len(fr), 1),
+              f"{100*sum(fr)/len(fr):.1f}%")
+
+
+BENCHES = {
+    "table2": bench_table2,
+    "table3": bench_table3,
+    "fig6": bench_fig6,
+    "fig7": bench_fig7,
+    "fig8": bench_fig8,
+    "fig9": bench_fig9,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(BENCHES)
+    print("name,us_per_call,derived")
+    for name in which:
+        t0 = time.time()
+        BENCHES[name]()
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

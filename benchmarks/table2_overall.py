@@ -1,0 +1,65 @@
+"""Table 2: overall performance on the 30-query hybrid benchmark.
+
+Speedup / cost reduction are geometric means vs. the DuckDB + Cache
+baseline (strategy=none); F1 is the arithmetic mean vs. a separate
+baseline execution (independent noise draw), exactly the paper's protocol.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.engine import result_f1
+
+from .corpus import HYBRID
+from .harness import geomean, run_query
+
+NOISE = 0.015  # borderline-flip rate modelling LLM non-determinism
+
+
+def run(out_path: str | None = "artifacts/bench/table2.json",
+        noise: float = NOISE, quiet: bool = False):
+    per_query = []
+    for spec in HYBRID:
+        ref = run_query(spec, "none", noise=noise, seed=1000)
+        row = {"qid": spec.qid, "baseline": _pack(ref)}
+        for strat in ("pullup", "cost"):
+            r = run_query(spec, strat, noise=noise, seed=2000)
+            row[strat] = _pack(r)
+            row[strat]["f1"] = result_f1(ref.records, r.records)
+            row[strat]["speedup"] = ref.sim_latency_s / r.sim_latency_s
+            row[strat]["cost_red"] = ref.usd / max(r.usd, 1e-12)
+        per_query.append(row)
+        if not quiet:
+            print(f"  {spec.qid:5s} base={ref.llm_calls:6d} calls "
+                  f"pullup={row['pullup']['llm_calls']:6d} "
+                  f"cost={row['cost']['llm_calls']:6d} "
+                  f"f1={row['cost']['f1']:.3f}", flush=True)
+
+    summary = {}
+    for strat in ("pullup", "cost"):
+        summary[strat] = {
+            "speedup": geomean([r[strat]["speedup"] for r in per_query]),
+            "cost_red": geomean([r[strat]["cost_red"] for r in per_query]),
+            "avg_f1": sum(r[strat]["f1"] for r in per_query) / len(per_query),
+        }
+    out = {"per_query": per_query, "summary": summary, "noise": noise}
+    if out_path:
+        p = Path(out_path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(out, indent=2))
+    return out
+
+
+def _pack(r):
+    return {
+        "rows": r.rows, "llm_calls": r.llm_calls,
+        "cache_hits": r.cache_hits, "rel_rows": r.rel_rows,
+        "engine_wall_s": r.engine_wall_s, "sim_latency_s": r.sim_latency_s,
+        "usd": r.usd, "opt_overhead_s": r.opt_overhead_s,
+    }
+
+
+if __name__ == "__main__":
+    out = run()
+    print(json.dumps(out["summary"], indent=2))

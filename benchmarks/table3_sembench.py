@@ -1,0 +1,59 @@
+"""Table 3: SemBench-style E-Commerce (14 simple queries) scored against
+*annotated ground truth* (noise-free oracle) — validating that placement
+does not hurt accuracy when an exact reference exists (paper §6.3)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.engine import result_f1
+
+from .corpus import ECOM
+from .harness import geomean, run_query
+
+NOISE = 0.015
+
+
+def run(out_path: str | None = "artifacts/bench/table3.json",
+        noise: float = NOISE, quiet: bool = False):
+    per_query = []
+    for spec in ECOM:
+        truth = run_query(spec, "none", noise=0.0, seed=0)  # ground truth
+        ref = run_query(spec, "none", noise=noise, seed=1000)
+        row = {"qid": spec.qid,
+               "baseline": {"quality": result_f1(truth.records, ref.records),
+                            "sim_latency_s": ref.sim_latency_s,
+                            "usd": ref.usd, "llm_calls": ref.llm_calls}}
+        for strat in ("pullup", "cost"):
+            r = run_query(spec, strat, noise=noise, seed=2000)
+            row[strat] = {
+                "quality": result_f1(truth.records, r.records),
+                "speedup": ref.sim_latency_s / r.sim_latency_s,
+                "cost_red": ref.usd / max(r.usd, 1e-12),
+                "llm_calls": r.llm_calls,
+            }
+        per_query.append(row)
+        if not quiet:
+            print(f"  {spec.qid:4s} quality base="
+                  f"{row['baseline']['quality']:.3f} "
+                  f"cost={row['cost']['quality']:.3f}", flush=True)
+    summary = {"baseline": {
+        "quality": sum(r["baseline"]["quality"] for r in per_query)
+        / len(per_query)}}
+    for strat in ("pullup", "cost"):
+        summary[strat] = {
+            "speedup": geomean([r[strat]["speedup"] for r in per_query]),
+            "cost_red": geomean([r[strat]["cost_red"] for r in per_query]),
+            "quality": sum(r[strat]["quality"] for r in per_query)
+            / len(per_query),
+        }
+    out = {"per_query": per_query, "summary": summary, "noise": noise}
+    if out_path:
+        p = Path(out_path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(out, indent=2))
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run()["summary"], indent=2))

@@ -1,0 +1,31 @@
+"""Optimizer deep-dive: watch the DP cost model change its placement as α
+sweeps (paper Fig. 7) on a 6-join TPC-H audit query (Listing 4 analogue).
+
+    PYTHONPATH=src python examples/optimizer_demo.py
+"""
+from repro.core import CostParams, optimize
+from repro.data import make_tpch
+
+import sys
+sys.path.insert(0, ".")
+from benchmarks.corpus import HYBRID  # noqa: E402
+
+
+def main():
+    spec = next(q for q in HYBRID if q.qid == "Q30")
+    db = make_tpch(seed=3)
+    catalog = db.catalog()
+    plan = spec.build()
+
+    for alpha in (1e-7, 1e-3, 10.0):
+        opt = optimize(plan, catalog, strategy="cost",
+                       params=CostParams(alpha=alpha))
+        print(f"\n=== alpha = {alpha:g} "
+              f"(est cost {opt.est_cost:,.1f}, "
+              f"{opt.dp_states} DP states, "
+              f"{opt.total_overhead*1e3:.1f} ms) ===")
+        print(opt.plan.pretty())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Roofline analysis over dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+Per (arch x shape x mesh) cell, three terms in SECONDS:
+
+  compute    = global FLOPs / (chips * peak)
+               global FLOPs from the unrolled-lowering probe
+               (scan-trip-correct; see launch/dryrun.py).
+  memory     = per-chip HBM traffic / HBM bw
+               traffic model: resident argument bytes read once per step
+               (weights + opt state + KV cache) + 2x activation temp
+               (write+read). The compiled per-device memory_analysis
+               supplies both terms. (XLA's optimized bytes-accessed counts
+               scan bodies once and the unoptimized count has no fusion,
+               so neither is usable directly — documented trade-off.)
+  collective = per-chip collective bytes / ICI bw
+               from the SPMD HLO with while-trip multipliers; all-reduce
+               counted 2x (ring).
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) per train step
+(3 matmul passes), 2·N·D for prefill, 2·N_active·(new tokens) for decode —
+the "useful compute" yardstick for the MODEL_FLOPS/HLO ratio.
+"""
+from __future__ import annotations
+
+import glob
+import json
+from dataclasses import dataclass
+from pathlib import Path
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,        # one new token per sequence
+    "long_500k": 1,
+}
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops: float
+    bound: str
+    step_s: float
+    roofline_frac: float
+    note: str = ""
+
+    def as_dict(self):
+        return self.__dict__.copy()
+
+
+def model_flops(d: dict) -> float:
+    """6·N_active·D train, 2·N_active·D inference (MoE-aware), using the
+    ORIGINAL (unpadded) parameter count — padding waste must show up in
+    the ratio."""
+    tokens = SHAPE_TOKENS[d["shape"]]
+    n = d["params_orig"]
+    n_active = min(d.get("params_active") or n, n)
+    mult = 6.0 if d["kind"] == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def analyze(d: dict) -> RooflineRow:
+    chips = d["n_devices"]
+    hlo_flops = (d.get("corrected") or {}).get("flops_global") or 0.0
+    compute_s = hlo_flops / (chips * PEAK_FLOPS)
+
+    mem = d["memory"]
+    resident = (mem.get("argument_bytes") or 0)
+    temp = (mem.get("temp_bytes") or 0)
+    traffic = resident + 2.0 * temp  # read args once; write+read temps
+    memory_s = traffic / HBM_BW
+
+    coll = d.get("collectives") or {}
+    coll_bytes = sum(v for k, v in coll.items() if k != "_counts")
+    collective_s = coll_bytes / ICI_BW
+
+    mf = model_flops(d)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bound = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    # ideal step = whichever hardware limit binds the *useful* work:
+    # compute for train/prefill; streaming the resident bytes (weights +
+    # KV cache) for decode — the standard inference roofline.
+    ideal_s = max(mf / (chips * PEAK_FLOPS), resident / HBM_BW)
+    frac = min(ideal_s / step_s if step_s > 0 else 0.0, 1.0)
+    return RooflineRow(
+        arch=d["arch"], shape=d["shape"], mesh=d["mesh"], chips=chips,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        model_flops=mf, hlo_flops=hlo_flops, bound=bound, step_s=step_s,
+        roofline_frac=frac,
+    )
+
+
+def load_all(art_dir: str = "artifacts/dryrun", mesh: str = "single"
+             ) -> list[RooflineRow]:
+    rows = []
+    for f in sorted(glob.glob(f"{art_dir}/*__{mesh}.json")):
+        d = json.loads(Path(f).read_text())
+        rows.append(analyze(d))
+    return rows
+
+
+def table(rows: list[RooflineRow]) -> str:
+    hdr = (f"{'arch':<18} {'shape':<12} {'compute':>10} {'memory':>10} "
+           f"{'collect':>10} {'bound':>10} {'MODEL/HLO':>10} {'roofline%':>10}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        ratio = r.model_flops / r.hlo_flops if r.hlo_flops else 0.0
+        lines.append(
+            f"{r.arch:<18} {r.shape:<12} {r.compute_s:>10.4f} "
+            f"{r.memory_s:>10.4f} {r.collective_s:>10.4f} {r.bound:>10} "
+            f"{ratio:>10.3f} {100*r.roofline_frac:>9.1f}%")
+    return "\n".join(lines)

@@ -1,0 +1,337 @@
+"""Physical executor for hybrid plans over columnar JAX tables.
+
+Vectorised, mask-based execution (DuckDB-pipeline analogue, DESIGN.md §4.2):
+
+* σ / SF update validity masks (no materialisation);
+* ⋈ / × / γ / sort / limit materialise compacted outputs;
+* semantic operators gather referenced row payloads for *valid* rows only,
+  dedup through the function cache and batch distinct misses to the backend.
+
+The executor records the quantities the paper's cost model predicts:
+``llm_calls`` (distinct backend invocations = C_LLM), ``rel_rows`` (rows
+processed by relational operators = C_rel) and ``probe_rows`` (cache
+lookups triggered by pulled-up filters).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.plan import (
+    Aggregate,
+    BoolOp,
+    Cmp,
+    Col,
+    Const,
+    CrossJoin,
+    Expr,
+    Filter,
+    Join,
+    Limit,
+    Node,
+    Project,
+    Scan,
+    SemanticFilter,
+    SemanticJoin,
+    SemanticProject,
+    Sort,
+    Union,
+)
+from ..semantic.runner import SemanticRunner
+from .table import Database, Table
+
+MAX_CROSS_ROWS = 30_000_000
+
+
+@dataclass
+class ExecStats:
+    llm_calls: int = 0
+    cache_hits: int = 0
+    probe_rows: int = 0
+    null_skipped: int = 0
+    rel_rows: int = 0
+    sem_rows: int = 0
+    wall_s: float = 0.0
+    rel_wall_s: float = 0.0
+    sem_wall_s: float = 0.0
+    per_op: dict = field(default_factory=dict)
+    prompt_chars: int = 0
+
+    def bump(self, op: str, key: str, v: float) -> None:
+        d = self.per_op.setdefault(op, {})
+        d[key] = d.get(key, 0) + v
+
+
+class ExecutionError(RuntimeError):
+    pass
+
+
+class Executor:
+    def __init__(self, db: Database, runner: SemanticRunner,
+                 fresh_cache_per_query: bool = True):
+        self.db = db
+        self.runner = runner
+        self.fresh_cache_per_query = fresh_cache_per_query
+
+    # ------------------------------------------------------------------ API
+    def execute(self, plan: Node) -> tuple[Table, ExecStats]:
+        if self.fresh_cache_per_query:
+            self.runner.reset_query_scope()
+        stats = ExecStats()
+        t0 = time.perf_counter()
+        table = self._run(plan, stats)
+        stats.wall_s = time.perf_counter() - t0
+        return table, stats
+
+    # ------------------------------------------------------------ dispatch
+    def _run(self, node: Node, stats: ExecStats) -> Table:
+        t0 = time.perf_counter()
+        name = type(node).__name__
+        if isinstance(node, Scan):
+            out = self.db.tables[node.table]
+            stats.rel_rows += out.num_valid
+            stats.bump(name, "rows", out.num_valid)
+            stats.rel_wall_s += time.perf_counter() - t0
+            return out
+        if isinstance(node, (SemanticFilter, SemanticProject, SemanticJoin)):
+            children = [self._run(c, stats) for c in node.children]
+            t0 = time.perf_counter()
+            out = self._run_semantic(node, children, stats)
+            stats.sem_wall_s += time.perf_counter() - t0
+            return out
+
+        children = [self._run(c, stats) for c in node.children]
+        t0 = time.perf_counter()
+        out = self._run_relational(node, children, stats)
+        in_rows = sum(c.num_valid for c in children)
+        stats.rel_rows += in_rows + out.num_valid
+        stats.bump(name, "rows", in_rows + out.num_valid)
+        stats.rel_wall_s += time.perf_counter() - t0
+        return out
+
+    # ------------------------------------------------------------ relational
+    def _run_relational(self, node: Node, ch: list[Table],
+                        stats: ExecStats) -> Table:
+        if isinstance(node, Filter):
+            mask = self._eval_pred(node.pred, ch[0])
+            return ch[0].with_mask(mask)
+        if isinstance(node, Project):
+            return ch[0].select(self._resolve_cols(node.cols, ch[0]))
+        if isinstance(node, Join):
+            return self._equi_join(ch[0], ch[1], node.left_key, node.right_key)
+        if isinstance(node, CrossJoin):
+            return self._cross_join(ch[0], ch[1])
+        if isinstance(node, Aggregate):
+            return self._aggregate(node, ch[0])
+        if isinstance(node, Limit):
+            t = ch[0].compact()
+            idx = np.arange(min(node.n, t.capacity))
+            return t.gather(idx)
+        if isinstance(node, Sort):
+            t = ch[0].compact()
+            if t.capacity == 0:
+                return t
+            keys = []
+            for colname, desc in reversed(node.keys):
+                v = np.asarray(t.col(colname))
+                keys.append(-v if desc else v)
+            order = np.lexsort(keys)
+            return t.gather(order)
+        if isinstance(node, Union):
+            parts = [c.compact() for c in ch]
+            cols = {
+                k: jnp.concatenate([p.col(k) for p in parts])
+                for k in parts[0].columns
+            }
+            n = sum(p.capacity for p in parts)
+            return Table(columns=cols, valid=jnp.ones(n, dtype=bool))
+        raise ExecutionError(f"unsupported relational node {type(node)}")
+
+    def _resolve_cols(self, cols: list[str], t: Table) -> list[str]:
+        out = []
+        for c in cols:
+            if c in t.columns:
+                out.append(c)
+            # text columns exist only as payload; silently okay — they are
+            # reconstructed from row_id at result materialisation
+        return out or list(t.columns)
+
+    def _eval_pred(self, e: Expr, t: Table) -> jnp.ndarray:
+        if isinstance(e, BoolOp):
+            masks = [self._eval_pred(a, t) for a in e.args]
+            if e.op == "and":
+                m = masks[0]
+                for x in masks[1:]:
+                    m = m & x
+                return m
+            if e.op == "or":
+                m = masks[0]
+                for x in masks[1:]:
+                    m = m | x
+                return m
+            return ~masks[0]
+        if isinstance(e, Cmp):
+            lhs = self._eval_value(e.left, t)
+            if e.op == "in":
+                vals = jnp.asarray(list(e.right))
+                return jnp.isin(lhs, vals)
+            if e.op == "between":
+                lo, hi = e.right
+                return (lhs >= lo) & (lhs <= hi)
+            rhs = (
+                self._eval_value(e.right, t)
+                if isinstance(e.right, Expr)
+                else e.right
+            )
+            ops = {
+                "==": lambda a, b: a == b,
+                "!=": lambda a, b: a != b,
+                "<": lambda a, b: a < b,
+                "<=": lambda a, b: a <= b,
+                ">": lambda a, b: a > b,
+                ">=": lambda a, b: a >= b,
+            }
+            return ops[e.op](lhs, rhs)
+        raise ExecutionError(f"unsupported predicate {e}")
+
+    def _eval_value(self, e: Expr, t: Table):
+        if isinstance(e, Col):
+            if e.name not in t.columns:
+                raise ExecutionError(f"column {e.name} not in table "
+                                     f"({list(t.columns)[:8]}...)")
+            return t.col(e.name)
+        if isinstance(e, Const):
+            return e.value
+        raise ExecutionError(f"unsupported value expr {e}")
+
+    def _equi_join(self, left: Table, right: Table, lk: str, rk: str) -> Table:
+        lt = left.compact()
+        rt = right.compact()
+        lkv = np.asarray(lt.col(lk))
+        rkv = np.asarray(rt.col(rk))
+        order = np.argsort(rkv, kind="stable")
+        rk_sorted = rkv[order]
+        lo = np.searchsorted(rk_sorted, lkv, "left")
+        hi = np.searchsorted(rk_sorted, lkv, "right")
+        counts = hi - lo
+        total = int(counts.sum())
+        out_l = np.repeat(np.arange(len(lkv)), counts)
+        starts = np.repeat(lo, counts)
+        within = np.arange(total) - np.repeat(np.cumsum(counts) - counts, counts)
+        out_r = order[starts + within]
+        lcols = lt.gather(out_l).columns
+        rcols = rt.gather(out_r).columns
+        cols = {**lcols, **rcols}
+        return Table(columns=cols, valid=jnp.ones(total, dtype=bool))
+
+    def _cross_join(self, left: Table, right: Table) -> Table:
+        lt = left.compact()
+        rt = right.compact()
+        n1, n2 = lt.capacity, rt.capacity
+        if n1 * n2 > MAX_CROSS_ROWS:
+            raise ExecutionError(
+                f"cross join of {n1}x{n2} exceeds MAX_CROSS_ROWS")
+        out_l = np.repeat(np.arange(n1), n2)
+        out_r = np.tile(np.arange(n2), n1)
+        cols = {**lt.gather(out_l).columns, **rt.gather(out_r).columns}
+        return Table(columns=cols, valid=jnp.ones(n1 * n2, dtype=bool))
+
+    def _aggregate(self, node: Aggregate, child: Table) -> Table:
+        t = child.compact()
+        n = t.capacity
+        if not node.group_by:
+            cols = {}
+            for func, c, name in node.aggs:
+                cols[f"agg.{name}"] = jnp.asarray(
+                    [self._agg_value(func, t, c, np.arange(n))])
+            return Table(columns=cols, valid=jnp.ones(1, dtype=bool))
+        keys = np.stack([np.asarray(t.col(k)) for k in node.group_by], axis=1)
+        uniq, inverse = np.unique(keys, axis=0, return_inverse=True)
+        g = uniq.shape[0]
+        cols = {}
+        for i, k in enumerate(node.group_by):
+            dt = np.asarray(t.col(k)).dtype
+            cols[k] = jnp.asarray(uniq[:, i].astype(dt))
+        for func, c, name in node.aggs:
+            vals = np.empty(g, dtype=np.float32)
+            for gi in range(g):
+                idx = np.nonzero(inverse == gi)[0]
+                vals[gi] = self._agg_value(func, t, c, idx)
+            cols[f"agg.{name}"] = jnp.asarray(vals)
+        return Table(columns=cols, valid=jnp.ones(g, dtype=bool))
+
+    @staticmethod
+    def _agg_value(func: str, t: Table, c: str, idx: np.ndarray) -> float:
+        if func == "count":
+            return float(len(idx))
+        v = np.asarray(t.col(c))[idx]
+        if len(v) == 0:
+            return 0.0
+        return {
+            "sum": np.sum, "avg": np.mean, "min": np.min, "max": np.max,
+        }[func](v).astype(np.float32)
+
+    # ------------------------------------------------------------- semantic
+    def _contexts_for(self, t: Table, ref_tables: frozenset[str]) -> list[dict]:
+        tc = t.compact()
+        n = tc.capacity
+        ids = {}
+        for rt in ref_tables:
+            col = f"{rt}.row_id"
+            if col not in tc.columns:
+                raise ExecutionError(
+                    f"semantic operator references {rt} but {col} missing")
+            ids[rt] = np.asarray(tc.col(col))
+        ctxs = []
+        for i in range(n):
+            ctx = {}
+            for rt, arr in ids.items():
+                rid = int(arr[i])
+                ctx[rt] = self.db.payloads[rt][rid] if rid >= 0 else None
+            ctxs.append(ctx)
+        return ctxs, tc
+
+    def _run_semantic(self, node: Node, ch: list[Table],
+                      stats: ExecStats) -> Table:
+        if isinstance(node, SemanticJoin):
+            # direct (unoptimized) execution: SJ ≡ SF over the cross product
+            cross = self._cross_join(ch[0], ch[1])
+            stats.rel_rows += cross.num_valid
+            sf = SemanticFilter(phi=node.phi, ref_cols=list(node.ref_cols))
+            return self._run_semantic(sf, [cross], stats)
+
+        child = ch[0]
+        ref_tables = node.ref_tables
+        ctxs, tc = self._contexts_for(child, ref_tables)
+        stats.sem_rows += len(ctxs)
+        stats.probe_rows += len(ctxs)
+
+        if isinstance(node, SemanticFilter):
+            res = self.runner.evaluate(node.phi, ctxs, out_dtype="bool")
+            stats.llm_calls += res.distinct_calls
+            stats.cache_hits += res.cache_hits
+            stats.null_skipped += res.null_rows
+            stats.bump(f"SF{node.sf_id}", "calls", res.distinct_calls)
+            mask = np.asarray([bool(v) for v in res.values], dtype=bool)
+            return tc.with_mask(jnp.asarray(mask))
+
+        if isinstance(node, SemanticProject):
+            dtype = node.out_dtype
+            res = self.runner.evaluate(node.phi, ctxs, out_dtype=dtype)
+            stats.llm_calls += res.distinct_calls
+            stats.cache_hits += res.cache_hits
+            stats.null_skipped += res.null_rows
+            stats.bump("SP", "calls", res.distinct_calls)
+            vals = np.asarray(
+                [float(v) if v is not None else np.nan for v in res.values],
+                dtype=np.float32,
+            )
+            cols = dict(tc.columns)
+            cols[node.out_col] = jnp.asarray(vals)
+            return Table(columns=cols, valid=tc.valid)
+
+        raise ExecutionError(f"unsupported semantic node {type(node)}")

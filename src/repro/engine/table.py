@@ -1,0 +1,181 @@
+"""Columnar tables for the JAX relational engine.
+
+TPU-native analogue of DuckDB's vectorised pipeline (DESIGN.md §4.2):
+tables are dicts of fixed-length JAX arrays plus a validity mask. Filters
+only update the mask; joins and aggregations materialise compacted outputs.
+String data lives in a host-side ``TextStore``; columns hold int32 handles
+(-1 = NULL), because accelerators do not store variable-length strings.
+
+Every base table carries a hidden ``<table>.row_id`` column (int32 index
+into the generator's row payload) used by semantic operators to render
+prompts and by function caching to key distinct inputs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+NULL_HANDLE = -1
+
+
+class TextStore:
+    """Append-only host-side string arena; columns store int32 handles."""
+
+    def __init__(self):
+        self._strings: list[str] = []
+        self._index: dict[str, int] = {}
+
+    def put(self, s: Optional[str]) -> int:
+        if s is None:
+            return NULL_HANDLE
+        h = self._index.get(s)
+        if h is None:
+            h = len(self._strings)
+            self._strings.append(s)
+            self._index[s] = h
+        return h
+
+    def get(self, handle: int) -> Optional[str]:
+        if handle == NULL_HANDLE:
+            return None
+        return self._strings[int(handle)]
+
+    def __len__(self) -> int:
+        return len(self._strings)
+
+
+@dataclass
+class Table:
+    """Fixed-capacity columnar relation. ``columns`` maps qualified names
+    ("table.col") to 1-D arrays of equal length; ``valid`` masks live rows."""
+
+    columns: dict[str, jnp.ndarray]
+    valid: jnp.ndarray  # bool[capacity]
+
+    @property
+    def capacity(self) -> int:
+        return int(self.valid.shape[0])
+
+    @property
+    def num_valid(self) -> int:
+        return int(jnp.sum(self.valid))
+
+    def col(self, name: str) -> jnp.ndarray:
+        return self.columns[name]
+
+    def with_mask(self, mask: jnp.ndarray) -> "Table":
+        return Table(columns=self.columns, valid=self.valid & mask)
+
+    def compact(self) -> "Table":
+        """Materialise only valid rows (host-side gather)."""
+        idx = np.nonzero(np.asarray(self.valid))[0]
+        cols = {k: jnp.asarray(np.asarray(v)[idx]) for k, v in self.columns.items()}
+        return Table(columns=cols, valid=jnp.ones(len(idx), dtype=bool))
+
+    def gather(self, idx: np.ndarray) -> "Table":
+        cols = {k: jnp.asarray(np.asarray(v)[idx]) for k, v in self.columns.items()}
+        return Table(columns=cols, valid=jnp.ones(len(idx), dtype=bool))
+
+    def select(self, names: Sequence[str]) -> "Table":
+        keep = {}
+        for n in names:
+            keep[n] = self.columns[n]
+        # always retain hidden row_id columns of tables still referenced —
+        # the analogue of the paper's projection-map rebuild (§5)
+        for k in self.columns:
+            if k.endswith(".row_id") and k.split(".")[0] in {
+                n.split(".")[0] for n in names
+            }:
+                keep.setdefault(k, self.columns[k])
+        return Table(columns=keep, valid=self.valid)
+
+
+
+@dataclass
+class Database:
+    """A set of base tables + host payload for prompt rendering."""
+
+    tables: dict[str, Table] = field(default_factory=dict)
+    payloads: dict[str, list[dict]] = field(default_factory=dict)  # raw rows
+    text_cols: set[str] = field(default_factory=set)  # qualified text columns
+    # ground-truth semantic evaluators: phi template -> callable(*rows)->value
+    truths: dict[str, object] = field(default_factory=dict)
+
+    def add_table(self, name: str, records: list[dict],
+                  text_columns: Iterable[str] = ()):
+        """Build a columnar table from host records. Numeric columns become
+        float32/int32 arrays; text columns are replaced by row_id-addressed
+        payload access at prompt-render time (no separate handle columns
+        needed because row_id already keys the payload)."""
+        text_columns = set(text_columns)
+        n = len(records)
+        cols: dict[str, jnp.ndarray] = {}
+        keys = list(records[0].keys()) if records else []
+        for k in keys:
+            if k.startswith("_"):
+                continue  # latent ground-truth field: payload-only
+            q = f"{name}.{k}"
+            if k in text_columns:
+                self.text_cols.add(q)
+                continue  # text accessed via payload[row_id]
+            vals = [r[k] for r in records]
+            if all(isinstance(v, (int, np.integer, bool)) for v in vals):
+                cols[q] = jnp.asarray(np.asarray(vals, dtype=np.int32))
+            else:
+                cols[q] = jnp.asarray(np.asarray(vals, dtype=np.float32))
+        cols[f"{name}.row_id"] = jnp.arange(n, dtype=jnp.int32)
+        self.tables[name] = Table(columns=cols, valid=jnp.ones(n, dtype=bool))
+        self.payloads[name] = records
+
+    def payload_value(self, table: str, row_id: int, col: str):
+        if row_id < 0:
+            return None
+        return self.payloads[table][row_id].get(col)
+
+    def materialize(self, table: Table, cols: Optional[Sequence[str]] = None
+                    ) -> list[dict]:
+        """Host materialisation of a result table for F1 scoring. Text
+        columns (payload-only) are reconstructed through ``<t>.row_id``."""
+        t = table.compact()
+        n = t.capacity
+        np_cols = {k: np.asarray(v) for k, v in t.columns.items()}
+        want = list(cols) if cols else None
+        out = []
+        for i in range(n):
+            rec = {}
+            for k, v in np_cols.items():
+                if k.endswith(".row_id"):
+                    continue
+                if want is not None and k not in want:
+                    continue
+                rec[k] = v[i].item()
+            if want is not None:
+                for k in want:
+                    if k in rec:
+                        continue
+                    tname, c = k.split(".", 1)
+                    rid_col = f"{tname}.row_id"
+                    if rid_col in np_cols and tname in self.payloads:
+                        rec[k] = self.payload_value(
+                            tname, int(np_cols[rid_col][i]), c)
+            out.append(rec)
+        return out
+
+    def catalog(self):
+        from ..core.plan import Catalog
+
+        cat = Catalog()
+        for name, tbl in self.tables.items():
+            recs = self.payloads[name]
+            colnames = [c for c in (recs[0].keys() if recs else [])
+                        if not c.startswith("_")]
+            ndv = {}
+            for c in colnames:
+                vals = [r[c] for r in recs]
+                if vals and isinstance(vals[0], (int, np.integer)):
+                    ndv[c] = len(set(vals))
+            cat.add_table(name, colnames + ["row_id"], len(recs), ndv=ndv)
+        return cat

@@ -1,0 +1,97 @@
+"""Flash-decode — single-token GQA attention against a long KV cache.
+
+The decode hot spot is memory-bound: one query row must stream the whole
+(T × d) KV cache from HBM. Grid (batch, kv_head, num_k_blocks) with the
+K-block axis innermost; per-(b,kv-head) the GROUP of query heads that
+share the kv head are processed together, turning the q·k products into a
+(group × block_k) matmul so the MXU is not idle on pure decode.
+Accumulators (m, l, acc per q-head-in-group) persist in VMEM scratch
+across K blocks. Per-row ``lengths`` masks unwritten cache slots.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *,
+                   block_k: int, num_k_blocks: int, sm_scale: float,
+                   group: int):
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)      # (group, d)
+    k = k_ref[0, 0].astype(jnp.float32)      # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)      # (bk, d)
+    length = len_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+    cols = kj * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (group, block_k), 1)
+    s = jnp.where(cols < length, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(kj == num_k_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(q, k, v, lengths, *, block_k: int = 512,
+                            sm_scale: float | None = None,
+                            interpret: bool = False):
+    """q: (B, H, d) one token per sequence; k/v: (B, K, T, d);
+    lengths: (B,) valid cache length per row. Returns (B, H, d)."""
+    B, H, d = q.shape
+    K, T = k.shape[1], k.shape[2]
+    group = H // K
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    nk = T // block_k
+    qg = q.reshape(B, K, group, d)
+    kernel = functools.partial(
+        _decode_kernel, block_k=block_k, num_k_blocks=nk,
+        sm_scale=sm_scale, group=group)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, K, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, j: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, group, d), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, d), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, group, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, qg, k, v)
+    return out.reshape(B, H, d)

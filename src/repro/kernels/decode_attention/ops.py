@@ -1,0 +1,28 @@
+"""jit'd wrapper for flash-decode with cache-length padding."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attention import decode_attention_kernel
+from .ref import decode_attention_ref
+
+
+@partial(jax.jit, static_argnames=("block_k", "impl"))
+def decode_attention(q, k, v, lengths, *, block_k: int = 512,
+                     impl: str = "auto"):
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return decode_attention_ref(q, k, v, lengths)
+    T = k.shape[2]
+    pad = (-T) % block_k
+    if pad:
+        widths = [(0, 0), (0, 0), (0, pad), (0, 0)]
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+    return decode_attention_kernel(
+        q, k, v, lengths.astype(jnp.int32), block_k=block_k,
+        interpret=(impl == "interpret"))

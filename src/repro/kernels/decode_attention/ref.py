@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for single-token decode attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, lengths, sm_scale: float | None = None):
+    """q: (B,H,d); k/v: (B,K,T,d); lengths: (B,). Returns (B,H,d)."""
+    B, H, d = q.shape
+    K, T = k.shape[1], k.shape[2]
+    group = H // K
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhd,bhtd->bht", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * sm_scale
+    mask = jnp.arange(T)[None, None, :] < lengths[:, None, None]
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bht,bhtd->bhd", w,
+                      vv.astype(jnp.float32)).astype(q.dtype)

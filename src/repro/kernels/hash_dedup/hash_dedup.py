@@ -1,0 +1,57 @@
+"""Function-cache key hashing — Pallas kernel (PLOP's §2.3 hot spot).
+
+When a semantic filter is pulled above a join, EVERY join-output row
+probes the function cache (the paper charges this to relational cost).
+Vectorised on TPU, the probe key is a 32-bit FNV-1a hash over the row's
+referenced key columns. The kernel is a memory-bound elementwise pass:
+grid over row tiles, one (block_rows × n_cols) int32 tile in VMEM per
+step, a fori_loop over columns mixing FNV byte-splits.
+
+Dedup (first-occurrence mask) happens in ops.py via sort — comparison-
+based, O(N log N), matches the cache's distinct-prompt semantics.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Python-int constants: Pallas kernels may not capture traced jnp consts.
+FNV_OFFSET = 2166136261
+FNV_PRIME = 16777619
+
+
+def _fnv1a_mix(h, word_u32):
+    """Mix one uint32 word into the running FNV-1a hash, byte by byte."""
+    for shift in (0, 8, 16, 24):
+        byte = (word_u32 >> np.uint32(shift)) & np.uint32(0xFF)
+        h = (h ^ byte) * np.uint32(FNV_PRIME)
+    return h
+
+
+def _hash_kernel(keys_ref, out_ref, *, n_cols: int):
+    keys = keys_ref[...]  # (block, n_cols) int32
+    h = jnp.full((keys.shape[0],), FNV_OFFSET, dtype=jnp.uint32)
+    for c in range(n_cols):  # static unroll: n_cols is small (ref cols)
+        h = _fnv1a_mix(h, keys[:, c].astype(jnp.uint32))
+    out_ref[...] = h
+
+
+def hash_rows_kernel(keys, *, block_rows: int = 1024,
+                     interpret: bool = False):
+    """keys: (N, C) int32 -> (N,) uint32 FNV-1a row hashes. N % block_rows
+    == 0 (ops.py pads)."""
+    n, c = keys.shape
+    grid = (n // block_rows,)
+    kernel = functools.partial(_hash_kernel, n_cols=c)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint32),
+        interpret=interpret,
+    )(keys)

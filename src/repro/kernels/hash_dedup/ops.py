@@ -1,0 +1,34 @@
+"""jit'd wrapper: hash (kernel) + first-occurrence dedup (sort-based)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .hash_dedup import hash_rows_kernel
+from .ref import first_occurrence_ref, hash_rows_ref
+
+
+@partial(jax.jit, static_argnames=("block_rows", "impl"))
+def hash_rows(keys, *, block_rows: int = 1024, impl: str = "auto"):
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return hash_rows_ref(keys)
+    n = keys.shape[0]
+    pad = (-n) % block_rows
+    if pad:
+        keys = jnp.pad(keys, ((0, pad), (0, 0)))
+    out = hash_rows_kernel(keys, block_rows=block_rows,
+                           interpret=(impl == "interpret"))
+    return out[:n]
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def dedup_mask(keys, *, impl: str = "auto"):
+    """keys: (N, C) int32 -> bool (N,): True at the first occurrence of
+    each distinct key row (the rows that become backend calls; the rest
+    are cache hits)."""
+    h = hash_rows(keys, impl=impl)
+    return first_occurrence_ref(h)

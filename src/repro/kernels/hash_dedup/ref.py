@@ -1,0 +1,30 @@
+"""Pure-jnp oracle: FNV-1a row hashes + first-occurrence dedup mask."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+FNV_OFFSET = np.uint32(2166136261)
+FNV_PRIME = np.uint32(16777619)
+
+
+def hash_rows_ref(keys):
+    """keys: (N, C) int32 -> (N,) uint32."""
+    h = jnp.full((keys.shape[0],), FNV_OFFSET, dtype=jnp.uint32)
+    for c in range(keys.shape[1]):
+        w = keys[:, c].astype(jnp.uint32)
+        for shift in (0, 8, 16, 24):
+            byte = (w >> shift) & jnp.uint32(0xFF)
+            h = (h ^ byte) * FNV_PRIME
+    return h
+
+
+def first_occurrence_ref(hashes):
+    """(N,) -> bool mask marking the first occurrence of each value."""
+    n = hashes.shape[0]
+    order = jnp.argsort(hashes, stable=True)
+    sorted_h = hashes[order]
+    is_first_sorted = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_h[1:] != sorted_h[:-1]])
+    mask = jnp.zeros((n,), bool).at[order].set(is_first_sorted)
+    return mask

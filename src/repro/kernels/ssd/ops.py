@@ -1,0 +1,52 @@
+"""SSD = Pallas intra-chunk kernel + jnp inter-chunk recurrence."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .ssd import ssd_chunk_kernel
+
+
+@partial(jax.jit, static_argnames=("chunk", "impl"))
+def ssd(x, dt, A, B, C, chunk: int = 128, impl: str = "auto"):
+    """Full SSD forward. Returns (y, final_state); see layers.ssd_chunked
+    for the pure-jnp equivalent used as the model fallback."""
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "jnp"
+    if impl == "jnp":
+        from ...models.layers import ssd_chunked
+
+        return ssd_chunked(x, dt, A, B, C, chunk)
+
+    b, s, h, p = x.shape
+    pad = (-s) % chunk
+    s_orig = s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    y_diag, states, chunk_decay, cum = ssd_chunk_kernel(
+        x, dt, A, B, C, chunk=chunk, interpret=(impl == "interpret"))
+    nc = s // chunk
+
+    def step(hprev, inp):
+        st, dec = inp
+        hnew = hprev * dec[:, :, None, None] + st
+        return hnew, hprev
+
+    h0 = jnp.zeros((b, h, p, states.shape[-1]), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        step, h0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b,nc,h,p,n)
+
+    Cc = C.reshape(b, nc, chunk, -1)
+    cumc = cum.reshape(b, nc, chunk, h)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc, prev_states,
+                       jnp.exp(cumc))
+    y = y_diag + y_off.reshape(b, s, h, p)
+    return y[:, :s_orig].astype(x.dtype), final_state.astype(x.dtype)

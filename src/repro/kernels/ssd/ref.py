@@ -1,0 +1,4 @@
+"""Sequential-scan oracle for the SSD kernel (identical to
+models.layers.ssd_reference, re-exported here so the kernel package is
+self-contained)."""
+from ...models.layers import ssd_reference  # noqa: F401

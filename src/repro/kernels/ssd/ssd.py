@@ -1,0 +1,93 @@
+"""Mamba-2 SSD intra-chunk kernel (state-space duality, matmul form).
+
+The SSD insight: within a chunk the recurrence collapses into matmuls the
+MXU can run — Y_diag = (C Bᵀ ∘ L) (x·dt) — plus one per-chunk state
+contribution. The sequential part (inter-chunk state carry) is O(S/chunk)
+tiny einsums and stays in jnp (ops.py), mirroring how the paper's CUDA
+kernel splits intra/inter chunk work. TPU adaptation: chunk=128 aligns the
+L matrix with the 128×128 MXU; all heads of one (batch, chunk) cell are
+processed in one kernel invocation so B/C (shared across heads) are loaded
+from HBM once.
+
+Grid: (batch, num_chunks). Outputs per cell: y_diag (l,h,p) and the
+chunk's state contribution (h,p,n) + decay row (h,) for the host-side
+recurrence.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+                y_ref, st_ref, dec_ref, cum_ref, *, chunk: int):
+    x = x_ref[0].astype(jnp.float32)    # (l, h, p)
+    dt = dt_ref[0].astype(jnp.float32)  # (l, h)
+    A = a_ref[...].astype(jnp.float32)  # (h,)
+    B = b_ref[0].astype(jnp.float32)    # (l, n)
+    C = c_ref[0].astype(jnp.float32)    # (l, n)
+
+    dA = dt * A[None, :]                # (l, h)
+    cum = jnp.cumsum(dA, axis=0)        # (l, h)
+
+    # L[h, i, j] = exp(cum[i,h] - cum[j,h]) for i >= j else 0
+    diff = cum[:, None, :] - cum[None, :, :]          # (l, l, h)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(tri[:, :, None], jnp.exp(diff), 0.0)  # (l, l, h)
+
+    xdt = x * dt[:, :, None]            # (l, h, p)
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (l, l)
+    m = cb[:, :, None] * L              # (l, l, h)
+    # y[i,h,p] = sum_j m[i,j,h] * xdt[j,h,p]
+    y = jnp.einsum("ijh,jhp->ihp", m, xdt)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # chunk state contribution: sum_j exp(cum[-1]-cum[j]) B[j] xdt[j]
+    decay_state = jnp.exp(cum[-1][None, :] - cum)     # (l, h)
+    st = jnp.einsum("ln,lh,lhp->hpn", B, decay_state, xdt)
+    st_ref[0, 0] = st.astype(st_ref.dtype)
+    dec_ref[0, 0] = jnp.exp(cum[-1]).astype(dec_ref.dtype)  # (h,)
+    cum_ref[0] = cum.astype(cum_ref.dtype)                  # (l, h)
+
+
+def ssd_chunk_kernel(x, dt, A, B, C, *, chunk: int,
+                     interpret: bool = False):
+    """x: (b, s, h, p), dt: (b, s, h) post-softplus, A: (h,) negative,
+    B/C: (b, s, n). s % chunk == 0. Returns (y_diag, states, chunk_decay,
+    cum) with shapes ((b,s,h,p), (b,nc,h,p,n), (b,nc,h), (b,s,h))."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    nc = s // chunk
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    grid = (b, nc)
+    y, st, dec, cum = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, h, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, chunk, h), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((h,), lambda i, j: (0,)),
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, h, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, h, p, n), lambda i, j: (i, j, 0, 0, 0)),
+            pl.BlockSpec((1, 1, h), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, h), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, h, p, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, s, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, A, B, C)
+    return y, st, dec, cum

@@ -1,0 +1,390 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("DRYRUN_XLA_FLAGS",
+                   "--xla_force_host_platform_device_count=512"))
+# The two lines above MUST run before any other import: jax locks the
+# device count on first initialisation.
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import get_config  # noqa: E402
+from ..models import (  # noqa: E402
+    abstract_params,
+    cache_specs,
+    decode_step,
+    forward_loss,
+    param_specs,
+    prefill,
+)
+from ..models.params import count_params  # noqa: E402
+from ..sharding.policy import ShardingPolicy  # noqa: E402
+from ..training.optimizer import AdamWConfig, abstract_state, state_specs  # noqa: E402
+from ..training.train_step import build_train_step  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+from .specs import (  # noqa: E402
+    PROFILES,
+    SHAPES,
+    batch_partition_specs,
+    input_specs,
+    shape_applicable,
+)
+
+_COLL_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\b")
+_SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|s8|u8|s32|u32|s64|pred)\[([0-9,]*)\]")
+_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s8": 1, "u8": 1,
+          "s32": 4, "u32": 4, "s64": 8, "pred": 1}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-operand sizes of every collective op in the (SPMD-
+    partitioned) HLO. all-reduce counts 2x (ring send+recv of the full
+    payload); others 1x. Returns per-kind byte totals (per device)."""
+    totals: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "-done" in line:  # count the -start of async pairs only
+            continue
+        m = _COLL_RE.search(line)
+        if not m or "= " not in line:
+            continue
+        kind = m.group(1)
+        # result type sits between '= ' and the op name
+        rhs = line.split("= ", 1)[1]
+        type_str = rhs.split(kind, 1)[0]
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(type_str):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _BYTES[dt]
+        mult = 2.0 if kind == "all-reduce" else 1.0
+        totals[kind] = totals.get(kind, 0.0) + nbytes * mult
+        counts[kind] = counts.get(kind, 0) + 1
+    totals["_counts"] = counts
+    return totals
+
+
+def _mem_stats(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(ma, "alias_size_in_bytes", None),
+            "peak_bytes": getattr(ma, "peak_memory_in_bytes", None),
+            "repr": str(ma),
+        }
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def _lower_cell(cfg, shape, prof, mesh, policy, arch, shape_name,
+                microbatches=None):
+    """Build + lower the cell's step function. Returns the jax Lowered."""
+    pdtype = jnp.bfloat16
+    aparams = abstract_params(cfg, pdtype)
+    pspecs = param_specs(cfg, policy)
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    B, S = shape.global_batch, shape.seq
+
+    if shape.kind == "train":
+        mb = microbatches if microbatches is not None else prof.microbatches
+        opt_cfg = AdamWConfig(moment_dtype=prof.moment_dtype)
+        astate = abstract_state(aparams, opt_cfg)
+        sspecs = state_specs(pspecs, opt_cfg)
+        sshard = jax.tree.map(lambda s: NamedSharding(mesh, s), sspecs)
+        bspecs = batch_partition_specs(cfg, policy, B)
+        bshard = {k: NamedSharding(mesh, v) for k, v in bspecs.items()}
+        abatch = input_specs(arch, shape_name, cfg)["batch"]
+        step = build_train_step(
+            cfg, policy, opt_cfg, num_microbatches=mb, remat=prof.remat,
+            accum_dtype=jnp.dtype(prof.accum_dtype))
+        fn = jax.jit(step, in_shardings=(pshard, sshard, bshard),
+                     out_shardings=(pshard, sshard, None),
+                     donate_argnums=(0, 1))
+        return fn.lower(aparams, astate, abatch)
+    if shape.kind == "prefill":
+        spec_in = input_specs(arch, shape_name, cfg)
+        abatch = spec_in["batch"]
+        bspecs = batch_partition_specs(cfg, policy, B)
+        bshard = {k: NamedSharding(mesh, v) for k, v in bspecs.items()}
+        cspecs = cache_specs(cfg, B, S, policy)
+        cshard = {k: NamedSharding(mesh, v) for k, v in cspecs.items()}
+
+        def fn_prefill(params, batch):
+            return prefill(cfg, policy, params, batch, max_seq=S)
+
+        fn = jax.jit(fn_prefill, in_shardings=(pshard, bshard),
+                     out_shardings=(None, cshard))
+        return fn.lower(aparams, abatch)
+    # decode
+    spec_in = input_specs(arch, shape_name, cfg)
+    cspecs = cache_specs(cfg, B, S, policy)
+    cshard = {k: NamedSharding(mesh, v) for k, v in cspecs.items()}
+    dp = (policy.dp_axes if len(policy.dp_axes) > 1 else
+          (policy.dp_axes[0] if policy.dp_axes else None))
+    baxis = dp if (policy.dp_size() > 1
+                   and B % max(policy.dp_size(), 1) == 0) else None
+    tshard = NamedSharding(mesh, P(baxis))
+
+    def fn_decode(params, cache, tokens, pos):
+        return decode_step(cfg, policy, params, cache, tokens, pos)
+
+    fn = jax.jit(fn_decode,
+                 in_shardings=(pshard, cshard, tshard, tshard),
+                 out_shardings=(None, cshard),
+                 donate_argnums=(1,))
+    return fn.lower(aparams, spec_in["cache"], spec_in["tokens"],
+                    spec_in["pos"])
+
+
+def _probe_costs(cfg, shape, prof, mesh, policy, arch, shape_name):
+    """Global FLOP/byte counts via an UNROLLED lowering.
+
+    XLA's HloCostAnalysis visits each while/scan body once, so the scanned
+    production program undercounts FLOPs by ~num_layers x. The probe
+    re-lowers the same step with every layer scan fully unrolled
+    (models.lm.UNROLL_SCANS) and microbatches=1 (matmul FLOPs are
+    microbatch-invariant), then reads ``lowered.cost_analysis()`` from the
+    *unoptimized global* HLO — giving whole-cluster logical FLOPs/bytes,
+    which is exactly what the §Roofline compute term wants."""
+    from ..models import layers as layers_mod
+    from ..models import lm as lm_mod
+
+    lm_mod.UNROLL_SCANS = True
+    layers_mod.FORCE_LOCAL_MOE = True  # global-shape MoE for whole-cluster FLOPs
+    try:
+        lowered = _lower_cell(cfg, shape, prof, mesh, policy, arch,
+                              shape_name, microbatches=1)
+        cost = lowered.cost_analysis() or {}
+    finally:
+        lm_mod.UNROLL_SCANS = False
+        layers_mod.FORCE_LOCAL_MOE = False
+    return {
+        "flops_global": float(cost.get("flops", 0.0)),
+        "bytes_global": float(cost.get("bytes accessed", 0.0)),
+    }
+
+
+# --------------------------------------------------------------------------
+# collective accounting with while-loop trip multipliers
+# --------------------------------------------------------------------------
+
+# computation headers look like
+#   %wide.region_0.1_spmd.clone (wide.param: (s32[], f32[4,128])) -> ... {
+# (note the NESTED parens in the param list — only anchor on the name)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_BODY_REF_RE = re.compile(r"body=%?([\w\.\-]+)")
+
+
+def _is_comp_header(s: str):
+    if not s.endswith("{") or ") -> " not in s:
+        return None
+    return _COMP_RE.match(s)
+
+
+def collective_bytes_scaled(hlo_text: str, trip_chain: list[int]) -> dict:
+    """Per-device collective bytes with while-nesting multipliers.
+
+    Our programs have a known loop structure: [microbatch?, layers]. A
+    collective inside a depth-d while body is multiplied by
+    prod(trip_chain[:d]). Unknown deeper loops inherit the full product
+    (conservative; the SSD chunk scan contains no collectives)."""
+    # 1) map each line to its computation
+    comp_of_line: list[tuple[str, str]] = []  # (comp_name, line)
+    current = "__toplevel__"
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = _is_comp_header(s)
+        if m:
+            current = m.group(1)
+        comp_of_line.append((current, line))
+    # 2) while-body call edges: parent comp -> body comp
+    parent_of: dict[str, str] = {}
+    for comp, line in comp_of_line:
+        if " while(" in line or " while (" in line:
+            for b in _BODY_REF_RE.findall(line):
+                parent_of[b] = comp
+    def depth(comp: str) -> int:
+        d = 0
+        seen = set()
+        while comp in parent_of and comp not in seen:
+            seen.add(comp)
+            comp = parent_of[comp]
+            d += 1
+        return d
+
+    def mult(d: int) -> float:
+        m = 1.0
+        for i in range(d):
+            m *= trip_chain[i] if i < len(trip_chain) else 1.0
+        return m
+
+    totals: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    for comp, line in comp_of_line:
+        if "-done" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m or "= " not in line:
+            continue
+        kind = m.group(1)
+        rhs = line.split("= ", 1)[1]
+        type_str = rhs.split(kind, 1)[0]
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(type_str):
+            n = 1
+            for d_ in dims.split(","):
+                if d_:
+                    n *= int(d_)
+            nbytes += n * _BYTES[dt]
+        k = 2.0 if kind == "all-reduce" else 1.0
+        scaled = nbytes * k * mult(depth(comp))
+        totals[kind] = totals.get(kind, 0.0) + scaled
+        counts[kind] = counts.get(kind, 0) + 1
+    totals["_counts"] = counts
+    return totals
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str | None = None, verbose: bool = True,
+             probe: bool = True, *, chunk_attn: int = 0,
+             chunk_mode: str = "triangle",
+             fsdp_params: bool = True, ep_over_dp: bool = False,
+             shard_cache_seq: bool = False, dp_over_tp: bool = False,
+             tag: str = "") -> dict:
+    cfg0 = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not shape_applicable(cfg0, shape):
+        raise SystemExit(f"{arch} x {shape_name}: skipped (DESIGN.md §6)")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tp = mesh.shape["model"]
+    cfg = cfg0.pad_heads_for_tp(tp).pad_vocab(16 * tp)
+    shard_kv = cfg.num_kv_heads > 0 and cfg.num_kv_heads % tp == 0
+    prof = PROFILES[arch]
+    policy = ShardingPolicy.for_mesh(mesh, shard_kv_heads=shard_kv)
+    policy = policy.replace(fsdp_params=fsdp_params, ep_over_dp=ep_over_dp,
+                            shard_cache_seq=shard_cache_seq,
+                            dp_over_tp=dp_over_tp)
+    if chunk_attn:
+        from ..models import layers as layers_mod
+
+        layers_mod.Q_CHUNK = chunk_attn
+        layers_mod.Q_CHUNK_MODE = chunk_mode
+    B, S = shape.global_batch, shape.seq
+    if B % policy.dp_size() != 0:
+        policy = policy.replace(dp_axes=())  # replicate tiny batches
+        policy = policy.replace(fsdp_axes=("pod", "data") if multi_pod
+                                else ("data",))
+
+    t0 = time.perf_counter()
+    lowered = _lower_cell(cfg, shape, prof, mesh, policy, arch, shape_name)
+    t_lower = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    cost = compiled.cost_analysis() or {}
+    mem = _mem_stats(compiled)
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    trip_chain = []
+    if shape.kind == "train" and prof.microbatches > 1:
+        trip_chain.append(prof.microbatches)
+    trip_chain.append(cfg.num_layers)
+    coll_scaled = collective_bytes_scaled(hlo, trip_chain)
+    corrected = None
+    if probe:
+        corrected = _probe_costs(cfg, shape, prof, mesh, policy, arch,
+                                 shape_name)
+
+    n_devices = mesh.size
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": "multi" if multi_pod else "single",
+        "n_devices": n_devices,
+        "seq": S,
+        "global_batch": B,
+        "padded_heads": cfg.num_heads,
+        "padded_kv_heads": cfg.num_kv_heads,
+        "orig_heads": cfg0.num_heads,
+        "orig_kv_heads": cfg0.num_kv_heads,
+        "shard_kv": shard_kv,
+        "params": count_params(cfg),
+        "params_active": cfg.active_param_count(),
+        "params_orig": count_params(cfg0),
+        "microbatches": prof.microbatches if shape.kind == "train" else None,
+        "flops_raw": cost.get("flops"),
+        "bytes_accessed_raw": cost.get("bytes accessed"),
+        "corrected": corrected,  # scan-trip-count-corrected totals
+        "cost_analysis": {k: v for k, v in cost.items()
+                          if isinstance(v, (int, float))},
+        "memory": mem,
+        "collectives_raw": coll,
+        "collectives": coll_scaled,  # trip-count-scaled, per device
+        "trip_chain": trip_chain,
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        "opt": {"chunk_attn": chunk_attn, "fsdp_params": fsdp_params,
+                "ep_over_dp": ep_over_dp,
+                "shard_cache_seq": shard_cache_seq,
+                "dp_over_tp": dp_over_tp, "tag": tag},
+    }
+    if verbose:
+        print(json.dumps({k: v for k, v in result.items()
+                          if k not in ("cost_analysis",)}, indent=2,
+                         default=str))
+        print("memory_analysis:", mem.get("repr"))
+    if out_dir:
+        p = Path(out_dir)
+        p.mkdir(parents=True, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        fname = (f"{arch}__{shape_name}__"
+                 f"{'multi' if multi_pod else 'single'}{suffix}.json")
+        (p / fname).write_text(json.dumps(result, indent=2, default=str))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description="PLOP multi-pod dry-run")
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--no-probe", action="store_true",
+                    help="skip the scan-correction probe compiles")
+    # §Perf hillclimb knobs
+    ap.add_argument("--chunk-attn", type=int, default=0)
+    ap.add_argument("--chunk-mode", default="triangle",
+                    choices=["triangle", "scan"])
+    ap.add_argument("--no-fsdp-params", action="store_true")
+    ap.add_argument("--ep-over-dp", action="store_true")
+    ap.add_argument("--shard-cache-seq", action="store_true")
+    ap.add_argument("--dp-over-tp", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    run_cell(args.arch, args.shape, args.mesh == "multi", args.out,
+             probe=not args.no_probe, chunk_attn=args.chunk_attn,
+             chunk_mode=args.chunk_mode,
+             fsdp_params=not args.no_fsdp_params,
+             ep_over_dp=args.ep_over_dp,
+             shard_cache_seq=args.shard_cache_seq,
+             dp_over_tp=args.dp_over_tp, tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production meshes.
+
+Single pod:  (16, 16)       axes ('data', 'model')   = 256 chips (v5e pod)
+Multi-pod :  (2, 16, 16)    axes ('pod', 'data', 'model') = 512 chips
+
+Defined as functions (never module-level constants) so importing this
+module does not touch JAX device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(dp: int = 1, tp: int = 1, pods: int = 1):
+    """Elastic mesh constructor used by the trainer/server launchers and
+    the elastic-restore tests."""
+    if pods > 1:
+        return jax.make_mesh((pods, dp, tp), ("pod", "data", "model"))
+    return jax.make_mesh((dp, tp), ("data", "model"))
+
+
+def single_device_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,70 @@
+"""Serving driver: stand up a semantic backend and answer prompts or run
+a hybrid query end to end.
+
+    # answer ad-hoc prompts with the trained 13M backend
+    PYTHONPATH=src python -m repro.launch.serve \
+        --ckpt artifacts/backend_ckpt --prompts "is product 3 electronics?"
+
+    # tiny random-weight smoke (no checkpoint needed)
+    PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b --tiny \
+        --prompts "hello" "world"
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, get_tiny
+from ..models import init_params
+from ..serving.engine import ServingEngine
+from ..sharding.policy import ShardingPolicy
+from ..training.checkpoint import CheckpointManager
+from ..training.data import HashTokenizer
+from .mesh import make_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmoe-1b-7b")
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt", default=None,
+                    help="checkpoint dir (e.g. artifacts/backend_ckpt)")
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--dp", type=int, default=1)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--prompts", nargs="+", required=True)
+    args = ap.parse_args(argv)
+
+    if args.ckpt:
+        import sys
+        sys.path.insert(0, "examples")
+        from train_backend import backend_config
+
+        cfg = backend_config()
+        tree, manifest = CheckpointManager(args.ckpt).restore()
+        params = jax.tree.map(jnp.asarray, tree["params"])
+        print(f"[serve] restored {cfg.name} @ step {manifest['step']}")
+    else:
+        cfg = get_tiny(args.arch) if args.tiny else get_config(args.arch)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        print(f"[serve] random-weight {cfg.name} (smoke mode)")
+
+    mesh = make_mesh(args.dp, args.tp)
+    policy = (ShardingPolicy.for_mesh(mesh) if mesh.size > 1
+              else ShardingPolicy.single())
+    engine = ServingEngine(cfg, params, policy,
+                           tokenizer=HashTokenizer(cfg.vocab_size),
+                           batch_size=args.batch, max_seq=args.max_seq)
+    answers = engine.answer(args.prompts)
+    for p, a in zip(args.prompts, answers):
+        print(f"  {p!r} -> {a}")
+    s = engine.stats
+    print(f"[serve] {s.prompts} prompts, {s.batches} batches, "
+          f"{s.decode_steps} decode steps, {s.wall_s:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,141 @@
+"""(architecture × input-shape) cell definitions + abstract input specs.
+
+Shapes (assignment):
+    train_4k     seq 4 096   global_batch 256   -> train_step
+    prefill_32k  seq 32 768  global_batch 32    -> prefill
+    decode_32k   seq 32 768  global_batch 128   -> serve_step (1 new token)
+    long_500k    seq 524 288 global_batch 1     -> serve_step; ONLY for
+                 sub-quadratic archs (mamba2, hymba) — skips recorded in
+                 DESIGN.md §6.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no device allocation).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config
+from ..models import abstract_cache, abstract_params
+from ..models.config import ModelConfig
+from ..sharding.policy import ShardingPolicy
+
+
+@dataclass(frozen=True)
+class Shape:
+    name: str
+    kind: str  # train | prefill | decode
+    seq: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", "train", 4096, 256),
+    "prefill_32k": Shape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": Shape("decode_32k", "decode", 32768, 128),
+    "long_500k": Shape("long_500k", "decode", 524288, 1),
+}
+
+
+@dataclass(frozen=True)
+class RunProfile:
+    """Per-arch launch knobs (memory/perf tuning; see EXPERIMENTS.md §Perf)."""
+
+    microbatches: int = 1
+    remat: Optional[str] = "full"
+    moment_dtype: str = "fp32"
+    accum_dtype: str = "float32"
+    param_dtype: str = "bfloat16"
+
+
+PROFILES: dict[str, RunProfile] = {
+    "olmoe-1b-7b": RunProfile(microbatches=2, moment_dtype="fp32"),
+    "deepseek-v3-671b": RunProfile(microbatches=16, moment_dtype="int8",
+                                   accum_dtype="bfloat16"),
+    "internlm2-20b": RunProfile(microbatches=4, moment_dtype="int8"),
+    "qwen2.5-32b": RunProfile(microbatches=4, moment_dtype="int8"),
+    "stablelm-3b": RunProfile(microbatches=2),
+    "starcoder2-3b": RunProfile(microbatches=2),
+    "hymba-1.5b": RunProfile(microbatches=2),
+    "mamba2-370m": RunProfile(microbatches=1),
+    "whisper-small": RunProfile(microbatches=1),
+    "paligemma-3b": RunProfile(microbatches=2),
+}
+
+ARCH_IDS = list(PROFILES)
+
+
+def shape_applicable(cfg: ModelConfig, shape: Shape) -> bool:
+    if shape.name == "long_500k":
+        return cfg.sub_quadratic  # skip pure full-attention archs
+    return True
+
+
+def all_cells() -> list[tuple[str, str]]:
+    out = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            if shape_applicable(cfg, shape):
+                out.append((arch, sname))
+    return out
+
+
+# --------------------------------------------------------------------------
+# abstract inputs
+# --------------------------------------------------------------------------
+
+
+def _batch_specs(cfg: ModelConfig, B: int, S: int, dtype=jnp.bfloat16):
+    """Training / prefill batch. For VLM the text length is reduced so the
+    total hidden sequence (image prefix + text) equals S."""
+    batch = {}
+    s_text = S
+    if cfg.family == "vlm":
+        s_text = S - cfg.num_image_tokens
+        batch["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_image_tokens, cfg.d_model), dtype)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), dtype)
+    batch["tokens"] = jax.ShapeDtypeStruct((B, s_text), jnp.int32)
+    return batch
+
+
+def input_specs(arch: str, shape_name: str, cfg: Optional[ModelConfig] = None,
+                dtype=jnp.bfloat16) -> dict:
+    """Abstract inputs for the cell. train/prefill: {'batch': ...};
+    decode: {'cache': ..., 'tokens': ..., 'pos': ...}."""
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq
+    if shape.kind in ("train", "prefill"):
+        return {"batch": _batch_specs(cfg, B, S, dtype)}
+    cache = abstract_cache(cfg, B, S, dtype)
+    return {
+        "cache": cache,
+        "tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+    }
+
+
+def batch_partition_specs(cfg: ModelConfig, policy: ShardingPolicy, B: int):
+    """PartitionSpecs for batch leaves; batch axis sharded only when the
+    global batch divides the DP size."""
+    from jax.sharding import PartitionSpec as P
+
+    dp = policy.dp_size()
+    baxis = None
+    if dp > 1 and B % dp == 0:
+        baxis = (policy.dp_axes if len(policy.dp_axes) > 1
+                 else policy.dp_axes[0])
+    specs = {"tokens": P(baxis, None)}
+    if cfg.family == "vlm":
+        specs["patches"] = P(baxis, None, None)
+    if cfg.family == "encdec":
+        specs["frames"] = P(baxis, None, None)
+    return specs

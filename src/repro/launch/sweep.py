@@ -1,0 +1,79 @@
+"""Dry-run sweep driver: every (arch × shape) × {single, multi} cell in a
+separate process (jax device-count is locked per process), serially.
+
+    PYTHONPATH=src python -m repro.launch.sweep --out artifacts/dryrun
+
+Already-present artifacts are skipped, so the sweep is resumable. Failures
+are recorded as <cell>.FAILED with the stderr tail; the sweep continues.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+from .specs import SHAPES, all_cells
+
+
+def cell_path(out: Path, arch: str, shape: str, mesh: str) -> Path:
+    return out / f"{arch}__{shape}__{mesh}.json"
+
+
+def run(out_dir: str, meshes: list[str], only_arch: str | None = None,
+        timeout_s: int = 2400, probe: bool = True):
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    cells = all_cells()
+    todo = []
+    for mesh in meshes:
+        for arch, shape in cells:
+            if only_arch and arch != only_arch:
+                continue
+            p = cell_path(out, arch, shape, mesh)
+            if p.exists():
+                continue
+            todo.append((arch, shape, mesh))
+    print(f"sweep: {len(todo)} cells to run "
+          f"({len(cells)} defined per mesh, skips excluded)")
+    t_start = time.time()
+    for i, (arch, shape, mesh) in enumerate(todo):
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--mesh", mesh,
+               "--out", str(out)]
+        if not probe or mesh == "multi":
+            cmd.append("--no-probe")  # probes only needed for §Roofline
+        t0 = time.time()
+        try:
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=timeout_s)
+            ok = r.returncode == 0
+        except subprocess.TimeoutExpired as e:
+            ok = False
+            r = e
+        dt = time.time() - t0
+        status = "ok" if ok else "FAIL"
+        print(f"[{i+1}/{len(todo)}] {arch} x {shape} x {mesh}: {status} "
+              f"({dt:.0f}s, total {(time.time()-t_start)/60:.1f}m)",
+              flush=True)
+        if not ok:
+            tail = (getattr(r, "stderr", "") or "")[-4000:]
+            cell_path(out, arch, shape, mesh).with_suffix(".FAILED").write_text(
+                tail)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--timeout", type=int, default=2400)
+    args = ap.parse_args()
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    run(args.out, meshes, args.arch, args.timeout)
+
+
+if __name__ == "__main__":
+    main()

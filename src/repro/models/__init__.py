@@ -1,0 +1,28 @@
+"""Model zoo: configs, params, layers, LM forward/prefill/decode."""
+from .config import ModelConfig
+from .lm import (
+    abstract_cache,
+    cache_specs,
+    decode_step,
+    forward,
+    forward_loss,
+    init_cache,
+    prefill,
+)
+from .params import (
+    abstract_params,
+    build_params,
+    count_params,
+    init_params,
+    param_axes,
+    param_shardings,
+    param_specs,
+)
+
+__all__ = [
+    "ModelConfig",
+    "abstract_cache", "cache_specs", "decode_step", "forward",
+    "forward_loss", "init_cache", "prefill",
+    "abstract_params", "build_params", "count_params", "init_params",
+    "param_axes", "param_shardings", "param_specs",
+]

@@ -1,0 +1,675 @@
+"""Neural building blocks for all architecture families (pure JAX).
+
+Everything is functional: ``fn(cfg, policy, params_leaf_dict, activations)``.
+Activation sharding is constrained through ``policy.shard`` so the same
+code lowers on 1 CPU device and on the (pod, data, model) production mesh.
+
+Attention uses grouped-query einsums without materialising repeated KV
+heads; masks are built from iota comparisons (never S×S bool tensors in
+HBM — XLA fuses them). The MoE layer uses an expert-parallel shard_map
+with capacity-bounded gather/scatter (DESIGN.md: TPU adaptation of
+token-choice routing; no one-hot dispatch einsums, which would pollute the
+roofline with fake FLOPs).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..sharding.policy import ShardingPolicy
+from .config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# norms / rope / mlp
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, w, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, hd) rotated pairwise; positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mlp(cfg: ModelConfig, policy: ShardingPolicy, p, x):
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"])
+    h = policy.shard(h, "batch", None, "mlp")
+    if "w_gate" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_out"])
+    return policy.shard(out, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, optional window / prefix-LM / bidirectional)
+# ---------------------------------------------------------------------------
+
+
+def _qkv(cfg, p, x):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return q, k, v
+
+
+def _mask_bias(mode: str, q_pos, k_pos, window: int, prefix: int):
+    """Additive bias from iota position comparisons.
+
+    q_pos: (B?, S) query positions; k_pos: (T,) or (B, T) key positions.
+    mode: causal | bidir | prefix. window>0 adds the sliding-window bound.
+    """
+    if q_pos.ndim == 1:
+        q_pos = q_pos[None]
+    if k_pos.ndim == 1:
+        k_pos = jnp.broadcast_to(k_pos[None], (q_pos.shape[0], k_pos.shape[0]))
+    d = q_pos[:, :, None] - k_pos[:, None, :]  # (B, S, T)
+    if mode == "bidir":
+        ok = jnp.ones_like(d, dtype=bool)
+    elif mode == "prefix":
+        ok = (d >= 0) | (k_pos[:, None, :] < prefix)
+    else:
+        ok = d >= 0
+    if window > 0:
+        ok = ok & (d < window)
+    return jnp.where(ok, 0.0, -1e30)  # (B, S, T) float32
+
+
+def gqa_attention(q, k, v, bias, policy: ShardingPolicy):
+    """q: (B,S,H,hd), k/v: (B,T,K,hd), bias: (B,S,T). Grouped einsum — KV
+    heads are never materialised H-wide."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    scores = scores + bias[:, None, None, :, :]
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(B, S, H, hd)
+
+
+# §Perf knob: when >0, full-sequence attention is computed in q-blocks of
+# this size (lax.scan), so the (S x T) score tensor never materialises —
+# the XLA analogue of the flash_attention Pallas kernel's tiling. Set by
+# the dry-run (--chunk-attn) and by serving configs for 32k+ prefill.
+Q_CHUNK = 0
+# 'triangle': python-loop blocks with exact causal kv ranges — S²/2 FLOPs
+#             (flash block-skipping) but XLA keeps more buffers live;
+# 'scan':     lax.scan over q blocks vs full kv — minimal memory, full S²
+#             FLOPs. The Pallas kernel achieves both on real TPU.
+Q_CHUNK_MODE = "triangle"
+
+
+def _probe_unrolling() -> bool:
+    from . import lm as lm_mod
+
+    return lm_mod.UNROLL_SCANS
+
+
+def _chunked_gqa(q, k, v, positions, k_pos, mode, window, prefix, policy,
+                 bq: int):
+    """Causal q-chunked attention. For mode='causal' the kv range of block
+    i is statically [0, (i+1)·bq) — a Python loop emits one exactly-sized
+    attention per block, so FLOPs drop to the causal S²/2 (the XLA
+    analogue of flash-attention block skipping). Other modes scan over q
+    blocks against the full kv."""
+    B, S, H, hd = q.shape
+    nb = S // bq
+    if (Q_CHUNK_MODE == "triangle" and mode == "causal" and window == 0
+            and k.shape[1] == S):
+        outs = []
+        for i in range(nb):
+            qi = q[:, i * bq:(i + 1) * bq]
+            pqi = positions[:, i * bq:(i + 1) * bq]
+            hi = (i + 1) * bq
+            bias = _mask_bias("causal", pqi, k_pos[:, :hi]
+                              if k_pos.ndim == 2 else k_pos[:hi], 0, 0)
+            outs.append(gqa_attention(qi, k[:, :hi], v[:, :hi], bias,
+                                      policy))
+        return jnp.concatenate(outs, axis=1)
+    qb = q.reshape(B, nb, bq, H, hd).transpose(1, 0, 2, 3, 4)
+    pq = positions.reshape(B, nb, bq).transpose(1, 0, 2)
+
+    def body(_, inp):
+        qi, pqi = inp
+        bias = _mask_bias(mode, pqi, k_pos, window, prefix)
+        return None, gqa_attention(qi, k, v, bias, policy)
+
+    _, ob = jax.lax.scan(body, None, (qb, pq),
+                         unroll=nb if _probe_unrolling() else 1)
+    return ob.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+
+
+def attention_block(cfg: ModelConfig, policy: ShardingPolicy, p, x,
+                    positions, mode="causal", prefix=0,
+                    kv_override=None, window: Optional[int] = None):
+    """Full-sequence self-attention (train / prefill). kv_override supplies
+    cross-attention keys/values (whisper decoder)."""
+    if kv_override is None:
+        q, k, v = _qkv(cfg, p, x)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        k_pos = positions
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        k, v, k_pos = kv_override
+    q = policy.shard(q, "batch", None, "heads", None)
+    k = policy.shard(k, "batch", None, "kv_heads", None)
+    v = policy.shard(v, "batch", None, "kv_heads", None)
+    win = cfg.attn_window if window is None else window
+    S = q.shape[1]
+    if Q_CHUNK and S > Q_CHUNK and S % Q_CHUNK == 0:
+        out = _chunked_gqa(q, k, v, positions, k_pos, mode, win, prefix,
+                           policy, Q_CHUNK)
+    else:
+        bias = _mask_bias(mode, positions, k_pos, win, prefix)
+        out = gqa_attention(q, k, v, bias, policy)
+    out = policy.shard(out, "batch", None, "heads", None)
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return policy.shard(o, "batch", None, None)
+
+
+def attention_decode(cfg: ModelConfig, policy: ShardingPolicy, p, x,
+                     k_cache, v_cache, slot_pos, pos,
+                     window: int = 0, cross: bool = False):
+    """Single-token decode. x: (B,1,D); caches (B,T,K,hd); pos: (B,) current
+    absolute positions; slot_pos: (B,T) absolute position stored in each
+    cache slot (-1 = empty). Returns (out, k_cache, v_cache, slot_pos)."""
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    if not cross:
+        k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+        if "bk" in p:
+            k_new = k_new + p["bk"]
+            v_new = v_new + p["bv"]
+        q = rope(q, pos[:, None], cfg.rope_theta)
+        k_new = rope(k_new, pos[:, None], cfg.rope_theta)
+        T = k_cache.shape[1]
+        slot = jnp.where(window > 0, pos % jnp.maximum(window, 1), pos)
+        bidx = jnp.arange(B)
+        k_cache = k_cache.at[bidx, slot].set(k_new[:, 0])
+        v_cache = v_cache.at[bidx, slot].set(v_new[:, 0])
+        slot_pos = slot_pos.at[bidx, slot].set(pos)
+    ok = (slot_pos >= 0) & (slot_pos <= pos[:, None])
+    if window > 0:
+        ok = ok & (pos[:, None] - slot_pos < window)
+    bias = jnp.where(ok, 0.0, -1e30)[:, None, :]  # (B,1,T)
+    out = gqa_attention(q, k_cache, v_cache, bias, policy)
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return o, k_cache, v_cache, slot_pos
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3): latent-compressed attention
+# ---------------------------------------------------------------------------
+
+
+def _mla_q(cfg, p, x, positions):
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wdq"]), p["q_ln"],
+                  cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wuq"])
+    qn, qr = jnp.split(q, [cfg.qk_nope_head_dim], axis=-1)
+    qr = rope(qr, positions, cfg.rope_theta)
+    return qn, qr
+
+
+def _mla_kv_latent(cfg, p, x, positions):
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["wdkv"])
+    ckv, k_rope = jnp.split(ckv_full, [cfg.kv_lora_rank], axis=-1)
+    ckv = rms_norm(ckv, p["kv_ln"], cfg.norm_eps)
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return ckv, k_rope
+
+
+def mla_block(cfg: ModelConfig, policy: ShardingPolicy, p, x, positions,
+              mode="causal"):
+    """Training / prefill MLA: materialise per-head K/V from the latent."""
+    qn, qr = _mla_q(cfg, p, x, positions)
+    ckv, k_rope = _mla_kv_latent(cfg, p, x, positions)
+    kn = jnp.einsum("bsr,rhk->bshk", ckv, p["wuk"])
+    v = jnp.einsum("bsr,rhk->bshk", ckv, p["wuv"])
+    qn = policy.shard(qn, "batch", None, "heads", None)
+    kn = policy.shard(kn, "batch", None, "heads", None)
+    scale = 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+
+    def attend(qn_i, qr_i, pos_i):
+        scores = (jnp.einsum("bshk,bthk->bhst", qn_i, kn)
+                  + jnp.einsum("bshk,btk->bhst", qr_i, k_rope)
+                  ).astype(jnp.float32)
+        bias = _mask_bias(mode, pos_i, positions, 0, 0)
+        w = jax.nn.softmax(scores * scale + bias[:, None],
+                           axis=-1).astype(x.dtype)
+        return jnp.einsum("bhst,bthk->bshk", w, v)
+
+    def attend_block(qn_i, qr_i, pos_i, hi):
+        """Causal block: only kv[:hi] can be visible."""
+        scores = (jnp.einsum("bshk,bthk->bhst", qn_i, kn[:, :hi])
+                  + jnp.einsum("bshk,btk->bhst", qr_i, k_rope[:, :hi])
+                  ).astype(jnp.float32)
+        bias = _mask_bias(mode, pos_i, positions[:, :hi], 0, 0)
+        w = jax.nn.softmax(scores * scale + bias[:, None],
+                           axis=-1).astype(x.dtype)
+        return jnp.einsum("bhst,bthk->bshk", w, v[:, :hi])
+
+    B, S = qn.shape[0], qn.shape[1]
+    if Q_CHUNK and S > Q_CHUNK and S % Q_CHUNK == 0 and mode == "causal":
+        nb = S // Q_CHUNK
+        if Q_CHUNK_MODE == "triangle":
+            # python loop: block i sees exactly kv[:(i+1)·bq] — causal S²/2
+            outs = []
+            for i in range(nb):
+                sl = slice(i * Q_CHUNK, (i + 1) * Q_CHUNK)
+                outs.append(attend_block(qn[:, sl], qr[:, sl],
+                                         positions[:, sl],
+                                         (i + 1) * Q_CHUNK))
+            out = jnp.concatenate(outs, axis=1)
+        else:  # 'scan': memory-minimal, full-kv blocks
+            def body(_, inp):
+                qn_i, qr_i, pos_i = inp
+                return None, attend(qn_i, qr_i, pos_i)
+
+            xs = (qn.reshape(B, nb, Q_CHUNK, *qn.shape[2:]).transpose(
+                      1, 0, 2, 3, 4),
+                  qr.reshape(B, nb, Q_CHUNK, *qr.shape[2:]).transpose(
+                      1, 0, 2, 3, 4),
+                  positions.reshape(B, nb, Q_CHUNK).transpose(1, 0, 2))
+            _, ob = jax.lax.scan(body, None, xs,
+                                 unroll=nb if _probe_unrolling() else 1)
+            out = ob.transpose(1, 0, 2, 3, 4).reshape(B, S, *ob.shape[3:])
+    else:
+        out = attend(qn, qr, positions)
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return policy.shard(o, "batch", None, None)
+
+
+def mla_decode(cfg: ModelConfig, policy: ShardingPolicy, p, x,
+               ckv_cache, krope_cache, pos):
+    """Absorbed-form MLA decode: scores/output contract against the latent
+    cache directly (no per-step K/V materialisation). Caches:
+    ckv (B,T,r), krope (B,T,qk_r)."""
+    B = x.shape[0]
+    qn, qr = _mla_q(cfg, p, x, pos[:, None])
+    ckv_new, krope_new = _mla_kv_latent(cfg, p, x, pos[:, None])
+    bidx = jnp.arange(B)
+    ckv_cache = ckv_cache.at[bidx, pos].set(ckv_new[:, 0])
+    krope_cache = krope_cache.at[bidx, pos].set(krope_new[:, 0])
+    # absorb W_uk into q: (B,1,H,qk_n) x (r,H,qk_n) -> (B,1,H,r)
+    q_abs = jnp.einsum("bshk,rhk->bshr", qn, p["wuk"])
+    T = ckv_cache.shape[1]
+    scale = 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    scores = (jnp.einsum("bshr,btr->bhst", q_abs, ckv_cache)
+              + jnp.einsum("bshk,btk->bhst", qr, krope_cache)
+              ).astype(jnp.float32) * scale
+    ok = jnp.arange(T)[None, :] <= pos[:, None]
+    scores = scores + jnp.where(ok, 0.0, -1e30)[:, None, None, :]
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhst,btr->bshr", w, ckv_cache)  # (B,1,H,r)
+    out = jnp.einsum("bshr,rhk->bshk", ctx, p["wuv"])
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return o, ckv_cache, krope_cache
+
+
+# ---------------------------------------------------------------------------
+# MoE: expert-parallel token-choice routing (capacity gather, shard_map)
+# ---------------------------------------------------------------------------
+
+
+def _moe_local(x, p, lo, e_loc, cap, k, gated):
+    """Per-device MoE compute over its expert shard. x: (T,D) local tokens
+    (replicated across the EP axis); expert weights are the local slice."""
+    T, D = x.shape
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, ids = jax.lax.top_k(probs, k)  # (T,k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+    flat_ids = ids.reshape(-1)
+    flat_gate = gate.reshape(-1).astype(x.dtype)
+    tok_of_row = jnp.repeat(jnp.arange(T), k)
+    local = (flat_ids >= lo) & (flat_ids < lo + e_loc)
+    lid = jnp.where(local, flat_ids - lo, e_loc)  # e_loc = overflow bucket
+    order = jnp.argsort(lid)
+    lid_sorted = lid[order]
+    starts = jnp.searchsorted(lid_sorted, jnp.arange(e_loc))
+    ends = jnp.searchsorted(lid_sorted, jnp.arange(e_loc), side="right")
+    slot = starts[:, None] + jnp.arange(cap)[None, :]  # (e_loc, cap)
+    valid = slot < ends[:, None]
+    rows = jnp.where(valid, order[jnp.clip(slot, 0, T * k - 1)], 0)
+    toks = tok_of_row[rows]  # (e_loc, cap)
+    xg = jnp.take(x, toks, axis=0) * valid[..., None].astype(x.dtype)
+    h = jnp.einsum("ecd,edf->ecf", xg, p["w_in"])
+    if gated:
+        g = jnp.einsum("ecd,edf->ecf", xg, p["w_gate"])
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    yg = jnp.einsum("ecf,efd->ecd", h, p["w_out"])
+    wts = (flat_gate[rows] * valid).astype(x.dtype)
+    y = jnp.zeros_like(x)
+    y = y.at[toks.reshape(-1)].add((yg * wts[..., None]).reshape(-1, D))
+    return y
+
+
+# Dry-run probe flag: shard_map bodies are counted ONCE by HloCostAnalysis
+# (local shapes), so global FLOP probes force the single-device path whose
+# full shapes make the analysis whole-cluster-correct (launch/dryrun.py).
+FORCE_LOCAL_MOE = False
+
+
+def moe_block(cfg: ModelConfig, policy: ShardingPolicy, p, x):
+    """x: (B,S,D). Experts sharded over the TP axis (EP); tokens sharded
+    over DP. Each device computes its local experts' contribution for its
+    local tokens; a psum over the EP axis combines the top-k partial sums
+    (one all-reduce per MoE layer — same comm pattern as a Megatron MLP)."""
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_tok
+    xt = x.reshape(B * S, D)
+    gated = cfg.gated_mlp
+
+    if not policy.active or FORCE_LOCAL_MOE:
+        cap = max(int(math.ceil(B * S * k / E * cfg.moe_capacity_factor)), 1)
+        y = _moe_local(xt, p, 0, E, cap, k, gated)
+    else:
+        from jax.experimental.shard_map import shard_map
+
+        mesh = policy.mesh
+        tp = policy.tp_axis
+        dp_spec = policy.dp_axes if len(policy.dp_axes) > 1 else (
+            policy.dp_axes[0] if policy.dp_axes else None)
+        if (policy.ep_over_dp and policy.dp_size() > 1
+                and E % (policy.dp_size() * policy.tp_size()) == 0):
+            # serving mode: experts sharded (data x model)-ways; weights
+            # never move, the (tiny, decode-sized) activations replicate
+            # over data instead. One psum over both axes combines experts.
+            ep_axes = tuple(policy.dp_axes) + (tp,)
+            ep_size = policy.dp_size() * policy.tp_size()
+            e_loc = max(E // ep_size, 1)
+            t_loc = B * S  # every device sees all tokens
+            cap = max(int(math.ceil(t_loc * k / E
+                                    * cfg.moe_capacity_factor)), 1)
+
+            def local_fn(xt_l, router_l, w_in_l, w_gate_l, w_out_l):
+                idx = jax.lax.axis_index(ep_axes)
+                pl = {"router": router_l, "w_in": w_in_l, "w_out": w_out_l}
+                if w_gate_l is not None:
+                    pl["w_gate"] = w_gate_l
+                y = _moe_local(xt_l, pl, idx * e_loc, e_loc, cap, k, gated)
+                return jax.lax.psum(y, ep_axes)
+
+            in_specs = (
+                P(None, None),  # tokens replicated (decode-sized)
+                P(None, None),
+                P(ep_axes, None, None),
+                P(ep_axes, None, None) if gated else P(None),
+                P(ep_axes, None, None),
+            )
+            y = shard_map(
+                local_fn, mesh=mesh, in_specs=in_specs,
+                out_specs=P(None, None), check_rep=False,
+            )(xt, p["router"], p["w_in"], p.get("w_gate"), p["w_out"])
+        else:
+            tp_size = policy.tp_size()
+            e_loc = E // tp_size
+            t_loc = (B * S) // policy.dp_size()
+            cap = max(int(math.ceil(t_loc * k / E
+                                    * cfg.moe_capacity_factor)), 1)
+
+            def local_fn(xt_l, router_l, w_in_l, w_gate_l, w_out_l):
+                ep_rank = jax.lax.axis_index(tp)
+                pl = {"router": router_l, "w_in": w_in_l, "w_out": w_out_l}
+                if w_gate_l is not None:
+                    pl["w_gate"] = w_gate_l
+                y = _moe_local(xt_l, pl, ep_rank * e_loc, e_loc, cap, k,
+                               gated)
+                return jax.lax.psum(y, tp)
+
+            in_specs = (
+                P(dp_spec, None),  # tokens: DP-sharded, replicated over TP
+                P(None, None),  # router replicated
+                P(tp, None, None),  # experts over EP
+                P(tp, None, None) if gated else P(None),
+                P(tp, None, None),
+            )
+            y = shard_map(
+                local_fn, mesh=mesh, in_specs=in_specs,
+                out_specs=P(dp_spec, None), check_rep=False,
+            )(xt, p["router"], p["w_in"], p.get("w_gate"), p["w_out"])
+    y = y.reshape(B, S, D)
+    if "shared" in p:
+        y = y + mlp(cfg, policy, p["shared"], x)
+    return policy.shard(y, "batch", None, None)
+
+
+def moe_reference(cfg: ModelConfig, p, x):
+    """Dense oracle: exact top-k mixture, no capacity drops. O(E) memory —
+    tests only."""
+    B, S, D = x.shape
+    xt = x.reshape(-1, D)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, ids = jax.lax.top_k(probs, cfg.experts_per_tok)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+    y = jnp.zeros_like(xt)
+    for e in range(cfg.num_experts):
+        h = xt @ p["w_in"][e]
+        if cfg.gated_mlp:
+            h = jax.nn.silu(xt @ p["w_gate"][e]) * h
+        else:
+            h = jax.nn.gelu(h)
+        fe = h @ p["w_out"][e]
+        w_e = jnp.sum(jnp.where(ids == e, gate, 0.0), axis=-1)
+        y = y + fe * w_e[:, None].astype(xt.dtype)
+    y = y.reshape(B, S, D)
+    if "shared" in p:
+        h = jnp.einsum("bsd,df->bsf", x, p["shared"]["w_in"])
+        if cfg.gated_mlp:
+            h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["shared"]["w_gate"])) * h
+        else:
+            h = jax.nn.gelu(h)
+        y = y + jnp.einsum("bsf,fd->bsd", h, p["shared"]["w_out"])
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD (state-space duality, chunked)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x, w, b):
+    """Depthwise causal conv. x: (B,S,C), w: (cw,C)."""
+    cw = w.shape[0]
+    pads = [jnp.pad(x, ((0, 0), (cw - 1 - i, i), (0, 0)))[:, : x.shape[1]]
+            for i in range(cw)]
+    # tap i multiplies x[t - (cw-1-i)]
+    y = sum(p_ * w[i] for i, p_ in enumerate(pads))
+    return y + b
+
+
+def _segsum(a):
+    """a: (..., L). Returns (..., L, L) lower-tri cumulative sums:
+    out[i,j] = sum(a[j+1..i]) for i>=j, -inf above diagonal."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]  # sum(a[j+1..i]) = cs[i]-cs[j]
+    mask = jnp.tril(jnp.ones((L, L), dtype=bool), 0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """Chunked SSD forward (Mamba-2 §6). Shapes:
+    x: (b,s,h,p), dt: (b,s,h) (post-softplus), A: (h,) negative,
+    B,C: (b,s,n) single group. Returns y: (b,s,h,p) and final state
+    (b,h,p,n)."""
+    b, s, h, p_ = x.shape
+    n = B.shape[-1]
+    s_orig = s
+    if s % chunk != 0:
+        # pad with dt=0 steps: decay exp(0·A)=1 and zero input leave the
+        # state untouched; padded outputs are sliced away below.
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, h, p_)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+    dA = dtc * A  # (b,c,l,h)
+    dA_cum = jnp.cumsum(dA, axis=2)  # within-chunk cumulative
+
+    # intra-chunk (diagonal blocks): L = exp(segsum(dA)) per head
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))  # (b,c,h,l,l)
+    xdt = xc * dtc[..., None]  # (b,c,l,h,p)
+    y_diag = jnp.einsum("bcln,bcsn,bchls,bcshp->bclhp", Cc, Bc, Lmat, xdt)
+
+    # chunk states: contribution of each chunk to its final state
+    decay_states = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (b,c,l,h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", Bc, decay_states, xdt)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])  # (b,c,h)
+
+    def step(hprev, inp):
+        st, dec = inp
+        hnew = hprev * dec[:, :, None, None] + st.astype(jnp.float32)
+        return hnew, hprev
+
+    # recurrence carried in fp32 regardless of activation dtype
+    h0 = jnp.zeros((b, h, p_, n), dtype=jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        step,
+        h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b,c,h,p,n)
+
+    # inter-chunk output: state entering the chunk, decayed to each position
+    state_decay = jnp.exp(dA_cum)  # (b,c,l,h)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc, prev_states, state_decay)
+    y = (y_diag + y_off).reshape(b, s, h, p_)
+    return y[:, :s_orig], final_state
+
+
+def ssd_reference(x, dt, A, B, C):
+    """Sequential oracle: h_t = h_{t-1}·exp(dt_t A) + dt_t B_t x_t;
+    y_t = C_t h_t. Used by tests and as the decode step."""
+    b, s, h, p_ = x.shape
+
+    def step(hprev, inp):
+        xt, dtt, Bt, Ct = inp  # (b,h,p), (b,h), (b,n), (b,n)
+        decay = jnp.exp(dtt * A)  # (b,h)
+        hnew = hprev * decay[..., None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xt * dtt[..., None], Bt)
+        yt = jnp.einsum("bhpn,bn->bhp", hnew, Ct)
+        return hnew, yt
+
+    h0 = jnp.zeros((b, h, p_, B.shape[-1]), dtype=x.dtype)
+    _, ys = jax.lax.scan(
+        step, h0,
+        (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+         B.transpose(1, 0, 2), C.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2, 3)
+
+
+def _ssm_split(cfg: ModelConfig, zxbcdt):
+    di, ns, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_num_heads
+    z = zxbcdt[..., :di]
+    xs = zxbcdt[..., di:2 * di]
+    Bv = zxbcdt[..., 2 * di:2 * di + ns]
+    Cv = zxbcdt[..., 2 * di + ns:2 * di + 2 * ns]
+    dt = zxbcdt[..., 2 * di + 2 * ns:]
+    return z, xs, Bv, Cv, dt
+
+
+def ssm_block(cfg: ModelConfig, policy: ShardingPolicy, p, x,
+              use_kernel: bool = False):
+    """Mamba2 block, full sequence. Returns (out, final_state, conv_tail)."""
+    B_, S, D = x.shape
+    di, ns, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_num_heads
+    hd = cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["w_in"])
+    z, xs, Bv, Cv, dt = _ssm_split(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xs, Bv, Cv], axis=-1)
+    conv_out = jax.nn.silu(causal_conv1d(conv_in, p["conv_w"], p["conv_b"]))
+    xs, Bv, Cv = (conv_out[..., :di], conv_out[..., di:di + ns],
+                  conv_out[..., di + ns:])
+    dt = jax.nn.softplus(dt + p["dt_bias"])  # (b,s,nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (nh,)
+    xh = xs.reshape(B_, S, nh, hd)
+    if use_kernel:
+        from ..kernels.ssd import ops as ssd_ops
+        y, state = ssd_ops.ssd(xh, dt, A, Bv, Cv, cfg.ssm_chunk)
+    else:
+        y, state = ssd_chunked(xh, dt, A, Bv, Cv, cfg.ssm_chunk)
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(B_, S, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_out"]).astype(x.dtype)
+    conv_tail = conv_in[:, -(cfg.ssm_conv_width - 1):, :].astype(x.dtype)
+    return (policy.shard(out, "batch", None, None),
+            state.astype(x.dtype), conv_tail)
+
+
+def ssm_decode(cfg: ModelConfig, policy: ShardingPolicy, p, x,
+               ssm_state, conv_state):
+    """Single-step SSM. x: (B,1,D); ssm_state: (B,nh,hd,ns);
+    conv_state: (B,cw-1,conv_dim) previous conv inputs."""
+    B_, _, D = x.shape
+    di, ns, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_num_heads
+    hd = cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["w_in"])
+    z, xs, Bv, Cv, dt = _ssm_split(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xs, Bv, Cv], axis=-1)  # (B,1,conv_dim)
+    window = jnp.concatenate([conv_state, conv_in], axis=1)  # (B,cw,conv)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"])
+    xs = conv_out[:, :di]
+    Bv = conv_out[:, di:di + ns]
+    Cv = conv_out[:, di + ns:]
+    dt = jax.nn.softplus(dt[:, 0] + p["dt_bias"])  # (B,nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xs.reshape(B_, nh, hd)
+    decay = jnp.exp(dt * A)  # (B,nh)
+    new_state = (ssm_state.astype(jnp.float32) * decay[..., None, None]
+                 + jnp.einsum("bhp,bn->bhpn",
+                              (xh * dt[..., None].astype(xh.dtype)), Bv
+                              ).astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cv.astype(jnp.float32))
+    y = y + xh.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B_, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z[:, 0]), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bk,kd->bd", y, p["w_out"])[:, None, :].astype(x.dtype)
+    return (out, new_state.astype(ssm_state.dtype),
+            window[:, 1:, :].astype(conv_state.dtype))

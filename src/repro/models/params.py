@@ -1,0 +1,257 @@
+"""Parameter construction for every architecture family.
+
+``build_params(cfg, creator)`` walks the architecture and calls
+``creator(path, shape, axes, scale)`` for each tensor, where ``axes`` are
+*logical* sharding axes (see repro.sharding.policy). Passing different
+creators yields, from the same single source of truth:
+
+* random initialisation        (``init_params``)
+* ShapeDtypeStruct trees       (``abstract_params`` — dry-run, no memory)
+* PartitionSpec trees          (``param_specs``)
+
+Layer-stacked tensors carry a leading 'layers' axis and are consumed by a
+``lax.scan`` over blocks.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding.policy import ShardingPolicy
+from .config import ModelConfig
+
+Creator = Callable[[str, tuple, tuple, float], object]
+
+
+def _attn_tree(cfg: ModelConfig, L, p, prefix: str):
+    D = cfg.d_model
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    t = {
+        "wq": p(f"{prefix}/wq", (*L, D, H, hd), ("layers", "embed", "heads", None), D),
+        "wk": p(f"{prefix}/wk", (*L, D, K, hd), ("layers", "embed", "kv_heads", None), D),
+        "wv": p(f"{prefix}/wv", (*L, D, K, hd), ("layers", "embed", "kv_heads", None), D),
+        "wo": p(f"{prefix}/wo", (*L, H, hd, D), ("layers", "heads", None, "embed"), H * hd),
+    }
+    if cfg.qkv_bias:
+        t["bq"] = p(f"{prefix}/bq", (*L, H, hd), ("layers", "heads", None), 0)
+        t["bk"] = p(f"{prefix}/bk", (*L, K, hd), ("layers", "kv_heads", None), 0)
+        t["bv"] = p(f"{prefix}/bv", (*L, K, hd), ("layers", "kv_heads", None), 0)
+    return t
+
+
+def _mla_tree(cfg: ModelConfig, L, p):
+    D = cfg.d_model
+    H = cfg.num_heads
+    qlr, kvlr = cfg.q_lora_rank, cfg.kv_lora_rank
+    qk_n, qk_r, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    return {
+        "wdq": p("mla/wdq", (*L, D, qlr), ("layers", "embed", None), D),
+        "q_ln": p("mla/q_ln", (*L, qlr), ("layers", None), -1),
+        "wuq": p("mla/wuq", (*L, qlr, H, qk_n + qk_r),
+                 ("layers", None, "heads", None), qlr),
+        "wdkv": p("mla/wdkv", (*L, D, kvlr + qk_r), ("layers", "embed", None), D),
+        "kv_ln": p("mla/kv_ln", (*L, kvlr), ("layers", None), -1),
+        "wuk": p("mla/wuk", (*L, kvlr, H, qk_n), ("layers", None, "heads", None), kvlr),
+        "wuv": p("mla/wuv", (*L, kvlr, H, vh), ("layers", None, "heads", None), kvlr),
+        "wo": p("mla/wo", (*L, H, vh, D), ("layers", "heads", None, "embed"), H * vh),
+    }
+
+
+def _mlp_tree(cfg: ModelConfig, L, p, d_ff=None, prefix="mlp"):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    t = {
+        "w_in": p(f"{prefix}/w_in", (*L, D, F), ("layers", "embed", "mlp"), D),
+        "w_out": p(f"{prefix}/w_out", (*L, F, D), ("layers", "mlp", "embed"), F),
+    }
+    if cfg.gated_mlp:
+        t["w_gate"] = p(f"{prefix}/w_gate", (*L, D, F),
+                        ("layers", "embed", "mlp"), D)
+    return t
+
+
+def _moe_tree(cfg: ModelConfig, L, p):
+    D, E = cfg.d_model, cfg.num_experts
+    Fe = cfg.moe_d_ff or cfg.d_ff
+    t = {
+        "router": p("moe/router", (*L, D, E), ("layers", "embed", None), D),
+        "w_in": p("moe/w_in", (*L, E, D, Fe), ("layers", "expert", "embed", None), D),
+        "w_out": p("moe/w_out", (*L, E, Fe, D), ("layers", "expert", None, "embed"), Fe),
+    }
+    if cfg.gated_mlp:
+        t["w_gate"] = p("moe/w_gate", (*L, E, D, Fe),
+                        ("layers", "expert", "embed", None), D)
+    if cfg.num_shared_experts:
+        Fs = Fe * cfg.num_shared_experts
+        t["shared"] = _mlp_tree(cfg, L, p, d_ff=Fs, prefix="moe/shared")
+    return t
+
+
+def _ssm_tree(cfg: ModelConfig, L, p):
+    D = cfg.d_model
+    di = cfg.ssm_d_inner
+    ns, nh = cfg.ssm_state, cfg.ssm_num_heads
+    cw = cfg.ssm_conv_width
+    conv_dim = di + 2 * ns
+    # SSM internals are not TP-sharded (head counts are not TP-friendly
+    # across archs; the fused in_proj split would cross shard boundaries).
+    # Weights are FSDP-sharded on the d_model axis instead; SSD compute is
+    # data-parallel. See DESIGN.md §4 + roofline notes.
+    return {
+        # in_proj emits [z, x, B, C, dt]
+        "w_in": p("ssm/w_in", (*L, D, 2 * di + 2 * ns + nh),
+                  ("layers", "embed", None), D),
+        "conv_w": p("ssm/conv_w", (*L, cw, conv_dim), ("layers", None, None), cw),
+        "conv_b": p("ssm/conv_b", (*L, conv_dim), ("layers", None), 0),
+        "A_log": p("ssm/A_log", (*L, nh), ("layers", None), -2),
+        "D": p("ssm/D", (*L, nh), ("layers", None), -1),
+        "dt_bias": p("ssm/dt_bias", (*L, nh), ("layers", None), 0),
+        "norm": p("ssm/norm", (*L, di), ("layers", None), -1),
+        "w_out": p("ssm/w_out", (*L, di, D), ("layers", None, "embed"), di),
+    }
+
+
+def _block_tree(cfg: ModelConfig, p, layers: int, cross_attn: bool = False):
+    L = (layers,)
+    t = {
+        "ln1": p("ln1", (*L, cfg.d_model), ("layers", None), -1),
+        "ln2": p("ln2", (*L, cfg.d_model), ("layers", None), -1),
+    }
+    if cfg.family == "ssm":
+        t["ssm"] = _ssm_tree(cfg, L, p)
+    elif cfg.family == "hybrid":
+        t["attn"] = _attn_tree(cfg, L, p, "attn")
+        t["ssm"] = _ssm_tree(cfg, L, p)
+        t["attn_norm"] = p("attn_norm", (*L, cfg.d_model), ("layers", None), -1)
+        t["ssm_norm"] = p("ssm_norm", (*L, cfg.d_model), ("layers", None), -1)
+    elif cfg.use_mla:
+        t["mla"] = _mla_tree(cfg, L, p)
+    else:
+        t["attn"] = _attn_tree(cfg, L, p, "attn")
+    if cross_attn:
+        t["ln_x"] = p("ln_x", (*L, cfg.d_model), ("layers", None), -1)
+        t["xattn"] = _attn_tree(cfg, L, p, "xattn")
+    if cfg.family != "ssm":
+        if cfg.num_experts:
+            t["moe"] = _moe_tree(cfg, L, p)
+        else:
+            t["mlp"] = _mlp_tree(cfg, L, p)
+    return t
+
+
+def build_params(cfg: ModelConfig, creator: Creator) -> dict:
+    p = creator
+    D, V = cfg.d_model, cfg.vocab_size
+    tree: dict = {
+        "embed": p("embed", (V, D), ("vocab", "embed"), D),
+        "blocks": _block_tree(cfg, p, cfg.num_layers),
+        "final_ln": p("final_ln", (D,), (None,), -1),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = p("lm_head", (D, V), ("embed", "vocab"), D)
+    if cfg.encoder_layers:
+        enc_cfg = cfg.replace(family="dense", num_experts=0, use_mla=False)
+        tree["encoder"] = {
+            "blocks": _block_tree(enc_cfg, p, cfg.encoder_layers),
+            "final_ln": p("enc_final_ln", (D,), (None,), -1),
+            "pos_embed": p("enc_pos", (cfg.encoder_seq, D), (None, "embed"), D),
+        }
+        # decoder blocks get cross-attention
+        tree["blocks"] = _block_tree(cfg, p, cfg.num_layers, cross_attn=True)
+    if cfg.num_image_tokens:
+        # stub frontend adapter: projects precomputed patch embeddings
+        tree["img_proj"] = p("img_proj", (D, D), ("embed", None), D)
+    if cfg.mtp_depth:
+        mtp_cfg = cfg.replace(num_experts=0, use_mla=False, family="dense")
+        tree["mtp"] = {
+            "proj": p("mtp/proj", (2 * D, D), (None, "embed"), 2 * D),
+            "blocks": _block_tree(mtp_cfg, p, cfg.mtp_depth),
+            "final_ln": p("mtp_final_ln", (D,), (None,), -1),
+        }
+    return tree
+
+
+# --------------------------------------------------------------------------
+# Creators
+# --------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> dict:
+    leaves: list[tuple] = []
+
+    def collect(path, shape, axes, scale):
+        leaves.append((path, shape, scale))
+        return (path, shape, scale)
+
+    skeleton = build_params(cfg, collect)
+    keys = jax.random.split(key, len(leaves))
+    key_of = {path: k for (path, _, _), k in zip(leaves, keys)}
+    # second pass building real arrays (paths may repeat across blocks —
+    # build_params emits unique path+shape pairs per call site)
+    counter = {}
+
+    def make(path, shape, axes, scale):
+        i = counter.get(path, 0)
+        counter[path] = i + 1
+        k = jax.random.fold_in(key_of[path], i)
+        if scale == -1:  # norm gains
+            return jnp.ones(shape, dtype=dtype)
+        if scale == -2:  # ssm A_log init: A in [1, 16]
+            u = jax.random.uniform(k, shape, minval=1.0, maxval=16.0)
+            return jnp.log(u).astype(dtype)
+        if scale == 0:  # biases
+            return jnp.zeros(shape, dtype=dtype)
+        std = 1.0 / np.sqrt(scale)
+        return (jax.random.normal(k, shape) * std).astype(dtype)
+
+    return build_params(cfg, make)
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    def make(path, shape, axes, scale):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    return build_params(cfg, make)
+
+
+def param_axes(cfg: ModelConfig) -> dict:
+    def make(path, shape, axes, scale):
+        return tuple(axes)
+
+    return build_params(cfg, make)
+
+
+def param_specs(cfg: ModelConfig, policy: ShardingPolicy):
+    from jax.sharding import PartitionSpec
+
+    def make(path, shape, axes, scale):
+        return policy.spec(*axes)
+
+    return build_params(cfg, make)
+
+
+def param_shardings(cfg: ModelConfig, policy: ShardingPolicy):
+    from jax.sharding import NamedSharding
+
+    def make(path, shape, axes, scale):
+        return NamedSharding(policy.mesh, policy.spec(*axes))
+
+    return build_params(cfg, make)
+
+
+def count_params(cfg: ModelConfig) -> int:
+    total = 0
+
+    def make(path, shape, axes, scale):
+        nonlocal total
+        n = 1
+        for s in shape:
+            n *= s
+        total += n
+        return None
+
+    build_params(cfg, make)
+    return total

@@ -1,0 +1,10 @@
+"""Semantic-operator runtime: function cache, backends, batched runner."""
+from .backend import Backend, ModelBackend, OracleBackend
+from .cache import CacheStats, FunctionCache
+from .runner import SemanticResult, SemanticRunner, render_prompt
+
+__all__ = [
+    "Backend", "ModelBackend", "OracleBackend",
+    "CacheStats", "FunctionCache",
+    "SemanticResult", "SemanticRunner", "render_prompt",
+]

@@ -1,0 +1,104 @@
+"""Semantic backends: the ℳ in SF_φ(R) = {r | ℳ(r, φ)}.
+
+* ``OracleBackend`` — deterministic ground-truth evaluator over the
+  synthetic generator's latent attributes, with an optional per-prompt
+  borderline-flip rate ε that models LLM non-determinism (paper §7
+  attributes its F1≈0.85 gap to exactly this). Flips are a deterministic
+  hash of (prompt, seed): re-evaluating the same prompt in one run gives
+  the same answer (like function caching would enforce anyway), but
+  *different runs/placements* sample independent flips — reproducing the
+  paper's observation that even semantics-preserving rewrites show F1 < 1
+  against a separate execution.
+
+* ``ModelBackend`` — answers prompts with a real JAX LM served through the
+  serving tier (prefill + decode). Used by the end-to-end examples and
+  integration tests; wraps any ``repro.serving.engine.ServingEngine``.
+
+Both count invocations so benchmarks can report C_LLM exactly.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence
+
+
+class Backend:
+    """Interface: evaluate a batch of rendered prompts."""
+
+    calls: int
+
+    def evaluate_batch(self, prompts: Sequence[str],
+                       contexts: Sequence[dict]) -> list[object]:
+        raise NotImplementedError
+
+    def reset_counters(self) -> None:
+        self.calls = 0
+
+
+def _stable_unit(prompt: str, seed: int) -> float:
+    h = hashlib.sha1(f"{seed}:{prompt}".encode()).digest()
+    return int.from_bytes(h[:8], "little") / 2**64
+
+
+@dataclass
+class OracleBackend(Backend):
+    """truths: phi template -> callable(ctx) -> bool|int|float|str where ctx
+    maps table name -> payload row dict for the referenced tables."""
+
+    truths: dict[str, Callable]
+    noise: float = 0.0
+    seed: int = 0
+    calls: int = 0
+    per_call_latency_s: float = 0.0  # simulated per-*batch-item* latency
+
+    def evaluate_batch(self, prompts, contexts):
+        out = []
+        for prompt, ctx in zip(prompts, contexts):
+            self.calls += 1
+            phi = ctx["__phi__"]
+            fn = self.truths.get(phi)
+            if fn is None:
+                raise KeyError(f"no ground-truth evaluator for phi={phi!r}")
+            val = fn(ctx)
+            if self.noise > 0.0 and isinstance(val, (bool,)):
+                if _stable_unit(prompt, self.seed) < self.noise:
+                    val = not val
+            out.append(val)
+        return out
+
+
+class ModelBackend(Backend):
+    """Wraps a callable ``answer_fn(prompts) -> list[str]`` (typically
+    ``ServingEngine.answer``); parses YES/NO or integers out of the reply."""
+
+    def __init__(self, answer_fn: Callable[[Sequence[str]], list[str]],
+                 out_dtype: str = "bool"):
+        self.answer_fn = answer_fn
+        self.out_dtype = out_dtype
+        self.calls = 0
+
+    def evaluate_batch(self, prompts, contexts):
+        self.calls += len(prompts)
+        raw = self.answer_fn(list(prompts))
+        out = []
+        for r, ctx in zip(raw, contexts):
+            dtype = ctx.get("__dtype__", self.out_dtype)
+            txt = (r or "").strip().upper()
+            if dtype in ("bool",):
+                out.append(txt.startswith("YES") or txt.startswith("TRUE")
+                           or txt.startswith("1"))
+            elif dtype in ("int", "float"):
+                num = ""
+                for ch in txt:
+                    if ch.isdigit() or (ch == "-" and not num):
+                        num += ch
+                    elif num:
+                        break
+                try:
+                    out.append(int(num) if dtype == "int" else float(num))
+                except ValueError:
+                    out.append(0)
+            else:
+                out.append(r)
+        return out

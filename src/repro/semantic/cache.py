@@ -1,0 +1,68 @@
+"""Function caching for semantic operators (paper §2.3, §5).
+
+The cache is keyed on the *rendered prompt string* — predicate template φ
+plus the input tuple's values — so different predicates never share entries
+(§5). On a hit the backend call is skipped entirely. Scoped per query
+execution by default (``clear()`` between queries), matching the paper.
+
+The paper uses a concurrent bucket-locked hash table inside DuckDB's
+vectorised pipeline; host-side Python needs no locking, and the on-device
+analogue (batch dedup before the backend call) lives in
+``repro.kernels.hash_dedup``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Hashable, Optional, Sequence
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    probes: int = 0
+
+    @property
+    def calls_saved(self) -> int:
+        return self.hits
+
+    def reset(self) -> None:
+        self.hits = 0
+        self.misses = 0
+        self.probes = 0
+
+
+class FunctionCache:
+    def __init__(self):
+        self._store: dict[Hashable, object] = {}
+        self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def clear(self) -> None:
+        self._store.clear()
+
+    def lookup_batch(
+        self,
+        keys: Sequence[Hashable],
+        compute_batch: Callable[[list[Hashable]], list[object]],
+    ) -> list[object]:
+        """Resolve a batch of keys. Distinct missing keys are computed once
+        via ``compute_batch`` (one backend invocation for the whole batch —
+        the vectorised-execution analogue of per-row probes)."""
+        self.stats.probes += len(keys)
+        missing: list[Hashable] = []
+        seen = set()
+        for k in keys:
+            if k not in self._store and k not in seen:
+                missing.append(k)
+                seen.add(k)
+        if missing:
+            results = compute_batch(missing)
+            assert len(results) == len(missing)
+            for k, r in zip(missing, results):
+                self._store[k] = r
+        self.stats.misses += len(missing)
+        self.stats.hits += len(keys) - len(missing)
+        return [self._store[k] for k in keys]

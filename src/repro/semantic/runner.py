@@ -1,0 +1,95 @@
+"""Batched semantic-operator evaluation with function caching.
+
+``SemanticRunner.evaluate`` is the single entry point the relational
+executor uses for SF / SP / SJ work: it renders prompts from row payloads,
+dedups through the ``FunctionCache`` and sends *distinct misses* to the
+backend in one batch (vectorised execution — the serving tier sees one
+large batch instead of per-row calls).
+
+NULL semantics (paper §4.1): a row whose referenced value is NULL requires
+no LLM call; SF(NULL) = NULL (row excluded), SP(NULL) = NULL value.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+from .backend import Backend
+from .cache import FunctionCache
+
+_TEMPLATE_COL = re.compile(r"\{([A-Za-z_][\w]*\.[A-Za-z_][\w]*)\}")
+
+
+def render_prompt(phi: str, ctx: dict[str, dict]) -> Optional[str]:
+    """Substitute {table.col} placeholders from payload rows. Returns None
+    if any referenced value is NULL/missing (no LLM call needed)."""
+    out = phi
+    for q in _TEMPLATE_COL.findall(phi):
+        t, c = q.split(".", 1)
+        row = ctx.get(t)
+        if row is None:
+            return None
+        v = row.get(c)
+        if v is None:
+            return None
+        out = out.replace("{" + q + "}", str(v))
+    return out
+
+
+@dataclass
+class SemanticResult:
+    values: list[object]  # per input row; None = NULL (no call made)
+    distinct_calls: int
+    cache_hits: int
+    null_rows: int
+
+
+class SemanticRunner:
+    def __init__(self, backend: Backend, cache: Optional[FunctionCache] = None):
+        self.backend = backend
+        self.cache = cache if cache is not None else FunctionCache()
+
+    def reset_query_scope(self) -> None:
+        """Paper §5: the cache is scoped per query execution."""
+        self.cache.clear()
+        self.cache.stats.reset()
+
+    def evaluate(
+        self,
+        phi: str,
+        contexts: Sequence[dict[str, dict]],
+        out_dtype: str = "bool",
+    ) -> SemanticResult:
+        prompts: list[Optional[str]] = [render_prompt(phi, c) for c in contexts]
+        live_idx = [i for i, p in enumerate(prompts) if p is not None]
+        null_rows = len(prompts) - len(live_idx)
+
+        misses_before = self.cache.stats.misses
+        hits_before = self.cache.stats.hits
+
+        def compute(missing_keys):
+            ctxs = []
+            key_to_ctx = {}
+            for i in live_idx:
+                key_to_ctx.setdefault(prompts[i], contexts[i])
+            batch_ctx = []
+            for k in missing_keys:
+                c = dict(key_to_ctx[k])
+                c["__phi__"] = phi
+                c["__dtype__"] = out_dtype
+                batch_ctx.append(c)
+            return self.backend.evaluate_batch(list(missing_keys), batch_ctx)
+
+        live_results = self.cache.lookup_batch(
+            [prompts[i] for i in live_idx], compute
+        )
+        values: list[object] = [None] * len(prompts)
+        for i, r in zip(live_idx, live_results):
+            values[i] = r
+        return SemanticResult(
+            values=values,
+            distinct_calls=self.cache.stats.misses - misses_before,
+            cache_hits=self.cache.stats.hits - hits_before,
+            null_rows=null_rows,
+        )

@@ -1,0 +1,4 @@
+"""Sharding policies: logical axis -> mesh axis mapping."""
+from .policy import ShardingPolicy, spec_tree
+
+__all__ = ["ShardingPolicy", "spec_tree"]

@@ -1,0 +1,145 @@
+"""Logical-axis sharding policy (MaxText-style, compact).
+
+Parameters and activations are annotated with *logical* axis names; a
+``ShardingPolicy`` maps them onto mesh axes:
+
+    batch    -> data-parallel axes ('pod','data') / ('data',)
+    embed    -> FSDP shard of d_model-like dims (params only)
+    heads    -> tensor-parallel 'model'
+    kv_heads -> 'model' when the arch's KV head count divides TP, else
+                replicated (GQA replication, DESIGN.md §4.4)
+    mlp/vocab/expert -> 'model' (TP / EP)
+    seq      -> 'model' when sequence parallelism is on (activations)
+    layers / conv / state / None -> replicated
+
+``shard(x, *axes)`` applies a with_sharding_constraint only when a real
+multi-device mesh is active, so the same model code runs on one CPU device
+and on the 512-chip dry-run mesh unchanged.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    mesh: Optional[Mesh] = None
+    dp_axes: tuple = ("data",)
+    fsdp_axes: tuple = ("data",)
+    tp_axis: Optional[str] = "model"
+    shard_kv_heads: bool = True
+    seq_parallel: bool = False
+    # FSDP over params: when False, 'embed' maps to None (pure TP+DP)
+    fsdp_params: bool = True
+    # serving-mode knobs (EXPERIMENTS.md §Perf):
+    # shard KV/latent caches along the sequence dim over the TP axis
+    shard_cache_seq: bool = False
+    # MoE expert-parallelism over (data x model) instead of model only —
+    # weights never move; (tiny) decode activations do
+    ep_over_dp: bool = False
+    # small-model mode: run pure data parallelism across BOTH mesh axes
+    # (batch over data x model, nothing tensor-sharded). Right answer when
+    # per-chip compute is tiny and TP collectives dominate (whisper).
+    dp_over_tp: bool = False
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def single() -> "ShardingPolicy":
+        return ShardingPolicy(mesh=None)
+
+    @staticmethod
+    def for_mesh(mesh: Mesh, *, shard_kv_heads: bool = True,
+                 seq_parallel: bool = False,
+                 fsdp_params: bool = True) -> "ShardingPolicy":
+        names = mesh.axis_names
+        dp = tuple(a for a in names if a in ("pod", "data"))
+        tp = "model" if "model" in names else None
+        return ShardingPolicy(mesh=mesh, dp_axes=dp, fsdp_axes=dp,
+                              tp_axis=tp, shard_kv_heads=shard_kv_heads,
+                              seq_parallel=seq_parallel,
+                              fsdp_params=fsdp_params)
+
+    def replace(self, **kw) -> "ShardingPolicy":
+        return replace(self, **kw)
+
+    # ------------------------------------------------------------------
+    def _map_axis(self, name: Optional[str]):
+        if name is None:
+            return None
+        if self.dp_over_tp:
+            if name == "batch":
+                axes = tuple(self.dp_axes) + ((self.tp_axis,)
+                                              if self.tp_axis else ())
+                return axes if len(axes) > 1 else (axes[0] if axes else None)
+            return None  # nothing else is sharded in pure-DP mode
+        if name == "batch":
+            return self.dp_axes if len(self.dp_axes) > 1 else (
+                self.dp_axes[0] if self.dp_axes else None)
+        if name == "embed":
+            if not self.fsdp_params:
+                return None
+            return self.fsdp_axes if len(self.fsdp_axes) > 1 else (
+                self.fsdp_axes[0] if self.fsdp_axes else None)
+        if name == "expert":
+            if self.ep_over_dp and self.dp_axes and self.tp_axis:
+                return tuple(self.dp_axes) + (self.tp_axis,)
+            return self.tp_axis
+        if name in ("heads", "mlp", "vocab"):
+            return self.tp_axis
+        if name == "kv_heads":
+            return self.tp_axis if self.shard_kv_heads else None
+        if name == "seq":
+            return self.tp_axis if self.seq_parallel else None
+        if name == "kv_seq":
+            return self.tp_axis if self.shard_cache_seq else None
+        # 'layers', 'head_dim', 'state', 'conv', ... stay replicated
+        return None
+
+    def spec(self, *axes: Optional[str]) -> P:
+        return P(*[self._map_axis(a) for a in axes])
+
+    @property
+    def active(self) -> bool:
+        return self.mesh is not None and self.mesh.size > 1
+
+    def shard(self, x, *axes: Optional[str]):
+        """Constrain activation sharding (no-op off-mesh)."""
+        if not self.active:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(*axes)))
+
+    def named_sharding(self, *axes: Optional[str]) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*axes))
+
+    # axis sizes (1 when mesh is absent) --------------------------------
+    def tp_size(self) -> int:
+        if self.mesh is None or self.tp_axis is None:
+            return 1
+        return self.mesh.shape[self.tp_axis]
+
+    def dp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.dp_axes:
+            n *= self.mesh.shape[a]
+        if self.dp_over_tp and self.tp_axis:
+            n *= self.mesh.shape[self.tp_axis]
+        return n
+
+
+def spec_tree(axes_tree, policy: ShardingPolicy):
+    """Map a pytree of logical-axis tuples to PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes: policy.spec(*axes),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x),
+    )

@@ -1,0 +1,146 @@
+"""Fault-tolerant sharded checkpointing (DESIGN.md §8).
+
+* **Atomic**: writes go to ``step_<n>.tmp/`` and are renamed only after
+  the manifest is fsync'd — a killed writer never corrupts the latest
+  checkpoint.
+* **Sharding-aware**: leaves are gathered to host (np) per process and
+  stored flat (``a.b.c.npy``); restore re-places them under ANY mesh /
+  PartitionSpec tree — elastic scale-up/down works by construction.
+* **Async**: ``save_async`` snapshots to host immediately and writes on a
+  background thread so the train loop never blocks on disk.
+* **Resumable data**: the manifest records the step; the data pipeline is
+  step-addressable, so a restarted worker replays the exact batch
+  schedule (bitwise-identical continuation, see tests).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}."))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: dict):
+    root: dict = {}
+    for key, v in flat.items():
+        parts = key.split(".")
+        d = root
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = v
+    return root
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | os.PathLike, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, tree: dict, extra: Optional[dict] = None):
+        self.wait()  # never race an in-flight async save of the same step
+        if step in self.all_steps():
+            return
+        host = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+        self._write(step, host, extra or {})
+
+    def save_async(self, step: int, tree: dict,
+                   extra: Optional[dict] = None):
+        self.wait()  # one in-flight save at a time
+        host = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+
+        def work():
+            self._write(step, host, extra or {})
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host: dict, extra: dict):
+        tmp = self.dir / f"step_{step:010d}.tmp"
+        final = self.dir / f"step_{step:010d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        for k, v in host.items():
+            np.save(tmp / (k + ".npy"), v)
+        manifest = {
+            "step": step,
+            "keys": sorted(host.keys()),
+            "time": time.time(),
+            **extra,
+        }
+        mpath = tmp / "manifest.json"
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:010d}", ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for p in self.dir.iterdir():
+            if p.is_dir() and p.name.startswith("step_") and \
+                    not p.name.endswith(".tmp"):
+                if (p / "manifest.json").exists():
+                    out.append(int(p.name[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None,
+                shardings: Optional[dict] = None,
+                dtype_tree: Optional[dict] = None) -> tuple[dict, dict]:
+        """Returns (tree, manifest). ``shardings``: optional pytree of
+        NamedShardings — leaves are device_put under the NEW mesh
+        (elastic restore)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step:010d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        flat = {}
+        for k in manifest["keys"]:
+            flat[k] = np.load(d / (k + ".npy"))
+        tree = _unflatten(flat)
+        if shardings is not None:
+            flat_s = _flatten(shardings)
+            tree = _unflatten({
+                k: jax.device_put(v, flat_s[k]) if k in flat_s else v
+                for k, v in flat.items()
+            })
+        return tree, manifest

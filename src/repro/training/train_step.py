@@ -1,0 +1,61 @@
+"""Train-step builder: microbatched grad accumulation inside a lax.scan
+(activation memory ∝ one microbatch), remat policies, AdamW update.
+
+``build_train_step(cfg, policy, opt_cfg, num_microbatches, remat)`` returns
+``step(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable
+for jit with donated (params, opt_state).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import forward_loss
+from ..models.config import ModelConfig
+from ..sharding.policy import ShardingPolicy
+from .optimizer import AdamWConfig, apply_updates
+
+
+def _split_batch(batch, n: int):
+    """(B, ...) -> (n, B/n, ...) for every leaf."""
+    def r(x):
+        return x.reshape(n, x.shape[0] // n, *x.shape[1:])
+
+    return jax.tree.map(r, batch)
+
+
+def build_train_step(cfg: ModelConfig, policy: ShardingPolicy,
+                     opt_cfg: AdamWConfig, num_microbatches: int = 1,
+                     remat: Optional[str] = "full",
+                     accum_dtype=jnp.float32):
+    def loss_fn(params, mb):
+        return forward_loss(cfg, policy, params, mb, remat=remat)
+
+    def step(params, opt_state, batch):
+        if num_microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            mbs = _split_batch(batch, num_microbatches)
+
+            def micro(acc, mb):
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), acc, g)
+                return acc, l
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, dtype=accum_dtype), params)
+            grads, losses = jax.lax.scan(micro, zeros, mbs)
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+            loss = jnp.mean(losses)
+        new_params, new_state, gnorm = apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss.astype(jnp.float32),
+                   "grad_norm": gnorm.astype(jnp.float32),
+                   "step": new_state["step"]}
+        return new_params, new_state, metrics
+
+    return step

@@ -1,0 +1,370 @@
+"""Unit tests for the PLOP core: IR, rewrites, Alg. 1, Alg. 2."""
+import itertools
+
+import pytest
+
+from repro.core import (
+    Aggregate,
+    Catalog,
+    CostParams,
+    CrossJoin,
+    Filter,
+    Join,
+    Limit,
+    Project,
+    Q,
+    Scan,
+    SemanticFilter,
+    SemanticJoin,
+    SemanticProject,
+    col,
+    count_ops,
+    dp_place,
+    lift_semantic_filters,
+    optimize,
+    pull_up_semantic_filters,
+    push_down_filters,
+    rebuild_plan,
+    simplify,
+)
+from repro.core.cost import Estimator
+
+
+@pytest.fixture
+def catalog():
+    cat = Catalog()
+    cat.add_table("books", ["book_id", "title", "description", "row_id"], 1000,
+                  ndv={"book_id": 1000})
+    cat.add_table("reviews", ["review_id", "book_id", "text", "rating", "row_id"],
+                  5000, ndv={"book_id": 900})
+    cat.add_table("users", ["user_id", "bio", "row_id"], 800, ndv={"user_id": 800})
+    return cat
+
+
+def motivating_plan():
+    return (Q.scan("books")
+            .join(Q.scan("reviews"), "books.book_id", "reviews.book_id")
+            .where(col("reviews.rating") >= 3)
+            .sem_filter("{books.description} is about AI?")
+            .sem_filter("{reviews.text} is a positive review?")
+            .select("books.title", "reviews.text")
+            .build())
+
+
+# ---------------------------------------------------------------------------
+# pushdown
+# ---------------------------------------------------------------------------
+
+class TestPushdown:
+    def test_filters_reach_lowest_position(self, catalog):
+        plan = push_down_filters(motivating_plan().clone(), catalog)
+        # relational filter must sit directly above Scan(reviews)
+        scans = {n.table: n for n in plan.walk() if isinstance(n, Scan)}
+        p_rev = plan.parent_of(scans["reviews"])
+        assert isinstance(p_rev, (Filter, SemanticFilter))
+        p_books = plan.parent_of(scans["books"])
+        assert isinstance(p_books, SemanticFilter)
+
+    def test_pushdown_keeps_operator_counts(self, catalog):
+        raw = motivating_plan()
+        plan = push_down_filters(raw.clone(), catalog)
+        assert count_ops(plan) == count_ops(raw)
+
+    def test_multi_join_pushdown(self, catalog):
+        plan = (Q.scan("books")
+                .join(Q.scan("reviews"), "books.book_id", "reviews.book_id")
+                .join(Q.scan("users"), "reviews.review_id", "users.user_id")
+                .where(col("books.title") != 0)
+                .sem_filter("{users.bio} mentions reading?")
+                .build())
+        plan = push_down_filters(plan, catalog)
+        scans = {n.table: n for n in plan.walk() if isinstance(n, Scan)}
+        assert isinstance(plan.parent_of(scans["books"]), Filter)
+        assert isinstance(plan.parent_of(scans["users"]), SemanticFilter)
+
+
+# ---------------------------------------------------------------------------
+# simplification: SJ decomposition + SP pull-up
+# ---------------------------------------------------------------------------
+
+class TestSimplify:
+    def test_sj_decomposition(self, catalog):
+        plan = (Q.scan("books")
+                .sem_join(Q.scan("reviews"),
+                          "does {reviews.text} discuss {books.title}?")
+                .build())
+        plan = simplify(plan, catalog)
+        ops = count_ops(plan)
+        assert ops.get("SemanticJoin", 0) == 0
+        assert ops.get("CrossJoin", 0) == 1
+        assert ops.get("SemanticFilter", 0) == 1
+        sf = next(n for n in plan.walk() if isinstance(n, SemanticFilter))
+        assert sf.ref_tables == frozenset({"books", "reviews"})
+        assert isinstance(sf.children[0], CrossJoin)
+
+    def test_sp_pullup_carries_dependent_filter(self, catalog):
+        # Listing 2 / Fig 2: SP below a join, dependent σ above it.
+        plan = (Q.scan("books")
+                .join(Q.scan("reviews")
+                      .sem_project("Rate {reviews.text} sentiment 1-5",
+                                   "sp.score"),
+                      "books.book_id", "reviews.book_id")
+                .where(col("sp.score") >= 4)
+                .build())
+        plan = push_down_filters(plan, catalog)
+        plan = simplify(plan, catalog)
+        # SP must now be above the Join, and σ(score) above the SP
+        sp = next(n for n in plan.walk() if isinstance(n, SemanticProject))
+        assert isinstance(sp.children[0], Join)
+        sigma = next(n for n in plan.walk() if isinstance(n, Filter))
+        assert sigma.children[0] is sp
+
+    def test_sp_stops_below_aggregate(self, catalog):
+        plan = (Q.scan("reviews")
+                .sem_project("Rate {reviews.text} 1-5", "sp.score")
+                .group_by(["reviews.book_id"], [("avg", "sp.score", "avg_score")])
+                .build())
+        plan = simplify(plan, catalog)
+        agg = next(n for n in plan.walk() if isinstance(n, Aggregate))
+        assert isinstance(agg.children[0], SemanticProject)
+
+    def test_simplify_assigns_sf_ids(self, catalog):
+        plan = simplify(push_down_filters(motivating_plan(), catalog), catalog)
+        ids = sorted(n.sf_id for n in plan.walk() if isinstance(n, SemanticFilter))
+        assert ids == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# Alg. 1 pull-up
+# ---------------------------------------------------------------------------
+
+class TestPullup:
+    def test_pullup_reaches_top_nonroot(self, catalog):
+        plan = simplify(push_down_filters(motivating_plan(), catalog), catalog)
+        plan = pull_up_semantic_filters(plan, catalog)
+        # both SFs directly under the root projection, above the join
+        root = plan
+        assert isinstance(root, Project)
+        assert isinstance(root.children[0], SemanticFilter)
+        assert isinstance(root.children[0].children[0], SemanticFilter)
+        assert isinstance(root.children[0].children[0].children[0], Join)
+
+    def test_pullup_stops_at_blocking(self, catalog):
+        plan = (Q.scan("reviews")
+                .sem_filter("{reviews.text} positive?")
+                .group_by(["reviews.book_id"], [("count", "*", "cnt")])
+                .limit(10)
+                .build())
+        plan = pull_up_semantic_filters(
+            simplify(push_down_filters(plan, catalog), catalog), catalog)
+        agg = next(n for n in plan.walk() if isinstance(n, Aggregate))
+        assert isinstance(agg.children[0], SemanticFilter)
+
+    def test_pullup_widens_projection(self, catalog):
+        plan = (Q.scan("reviews")
+                .sem_filter("{reviews.text} positive?")
+                .select("reviews.book_id")
+                .limit(5)
+                .build())
+        plan = pull_up_semantic_filters(
+            simplify(push_down_filters(plan, catalog), catalog), catalog)
+        proj = next(n for n in plan.walk() if isinstance(n, Project))
+        sf = next(n for n in plan.walk() if isinstance(n, SemanticFilter))
+        # SF pulled above π (π is not root here — Limit is), so π must now
+        # retain reviews.text
+        assert plan.parent_of(proj) is sf
+        assert "reviews.text" in proj.cols
+
+    def test_pullup_monotone_distinct_counts(self, catalog):
+        """Thm 4.1: N_{u,SF} shrinks (or stays) as SF moves up."""
+        plan = simplify(push_down_filters(motivating_plan(), catalog), catalog)
+        est = Estimator(catalog, CostParams())
+        sf = next(n for n in plan.walk() if isinstance(n, SemanticFilter)
+                  and "books" in n.ref_tables)
+        before = est.distinct_at(sf.children[0], sf.ref_tables)
+        plan = pull_up_semantic_filters(plan, catalog)
+        sf = next(n for n in plan.walk() if isinstance(n, SemanticFilter)
+                  and "books" in n.ref_tables)
+        after = est.distinct_at(sf.children[0], sf.ref_tables)
+        assert after <= before
+
+
+# ---------------------------------------------------------------------------
+# Alg. 2 DP
+# ---------------------------------------------------------------------------
+
+def _enumerate_placements(skeleton, lifted):
+    """Brute force: all legal assignments sf -> node."""
+    parent = {}
+    for u in skeleton.walk():
+        for c in u.children:
+            parent[c.nid] = u
+
+    def legal_nids(l):
+        a = skeleton.find(l.anchor_nid)
+        out = [a.nid]
+        v = a
+        while v.nid in parent:
+            p = parent[v.nid]
+            if p.is_blocking:
+                break
+            out.append(p.nid)
+            v = p
+        return out
+
+    spaces = [legal_nids(l) for l in lifted]
+    return itertools.product(*spaces)
+
+
+def _brute_force_cost(skeleton, lifted, placement, catalog, params):
+    """Evaluate the DP objective for an explicit placement, independently
+    of the DP code: C_LLM + α·C_rel with probe cost."""
+    est = Estimator(catalog, params)
+    s_of = {l.idx: params.s_of(l.sf.sf_id, l.sf.selectivity_hint) for l in lifted}
+    placed_at = {}
+    for l, nid in zip(lifted, placement):
+        placed_at.setdefault(nid, []).append(l)
+
+    def below(u):
+        """filters placed at or below u"""
+        out = []
+        for v in u.walk():
+            out.extend(placed_at.get(v.nid, []))
+        return out
+
+    total = 0.0
+    for u in skeleton.walk():
+        # relational cost of u, reduced by filters strictly below u
+        sfs_below = [l for c in u.children for l in below(c)]
+        sel = 1.0
+        tabs = u.base_tables()
+        for l in sfs_below:
+            if l.sf.ref_tables & tabs:
+                sel *= s_of[l.idx]
+        total += params.alpha * est.c(u) * sel
+        # LLM + probe cost of filters placed at u: sequential chain
+        # semantics (a filter is reduced only by filters applied *before*
+        # it, i.e. strictly below u or earlier in the stack); take the best
+        # stack order, matching the DP's min over placement chains.
+        here = placed_at.get(u.nid, [])
+        if here:
+            best_here = float("inf")
+            for perm in itertools.permutations(here):
+                subtotal = 0.0
+                earlier = list(sfs_below)
+                for l in perm:
+                    so = 1.0
+                    sp = 1.0
+                    for o in earlier:
+                        if o.sf.ref_tables & l.sf.ref_tables:
+                            so *= s_of[o.idx]
+                        if o.sf.ref_tables & tabs:
+                            sp *= s_of[o.idx]
+                    subtotal += est.distinct_at(u, l.sf.ref_tables) * so
+                    if params.charge_probe_cost:
+                        subtotal += params.alpha * est.card(u) * sp
+                    earlier.append(l)
+                best_here = min(best_here, subtotal)
+            total += best_here
+    return total
+
+
+class TestDP:
+    def test_dp_matches_bruteforce_small(self, catalog):
+        params = CostParams(alpha=1e-4)
+        plan = simplify(push_down_filters(motivating_plan(), catalog), catalog)
+        skeleton, lifted = lift_semantic_filters(plan)
+        res = dp_place(skeleton, lifted, catalog, params)
+        best = min(
+            _brute_force_cost(skeleton, lifted, pl, catalog, params)
+            for pl in _enumerate_placements(skeleton, lifted)
+        )
+        assert res.cost == pytest.approx(best, rel=1e-9)
+
+    @pytest.mark.parametrize("alpha", [1e-8, 1e-5, 1e-2, 1.0, 100.0])
+    def test_dp_optimal_across_alpha_chain_join(self, catalog, alpha):
+        """5-table chain with per-table SFs (paper §1 insight 2)."""
+        cat = Catalog()
+        for i in range(5):
+            cat.add_table(f"t{i}", ["k", "v", "txt", "row_id"], 1000,
+                          ndv={"k": 1000})
+        q = Q.scan("t0").sem_filter("{t0.txt} ok?")
+        for i in range(1, 5):
+            q = q.join(Q.scan(f"t{i}").sem_filter(f"{{t{i}.txt}} ok?"),
+                       "t0.k", f"t{i}.k")
+        plan = simplify(push_down_filters(q.build(), cat), cat)
+        params = CostParams(alpha=alpha)
+        skeleton, lifted = lift_semantic_filters(plan)
+        res = dp_place(skeleton, lifted, cat, params)
+        best = min(
+            _brute_force_cost(skeleton, lifted, pl, cat, params)
+            for pl in _enumerate_placements(skeleton, lifted)
+        )
+        assert res.cost == pytest.approx(best, rel=1e-9)
+
+    def test_dp_extremes_match_pullup_and_pushdown(self, catalog):
+        plan0 = motivating_plan()
+        # α→0: DP must pull both filters above the join (min LLM calls)
+        opt = optimize(plan0, catalog, strategy="cost",
+                       params=CostParams(alpha=1e-12))
+        join = next(n for n in opt.plan.walk() if isinstance(n, Join))
+        sfs_above_join = [n for n in opt.plan.walk()
+                          if isinstance(n, SemanticFilter)
+                          and join in list(n.walk())]
+        assert len(sfs_above_join) == 2
+        # α huge, probe-free §4.2 model: DP must push both down (min
+        # relational rows). With probe cost the answer can legitimately
+        # differ when the join is row-reducing — see test above for that.
+        opt = optimize(plan0, catalog, strategy="cost",
+                       params=CostParams(alpha=1e9, charge_probe_cost=False))
+        join = next(n for n in opt.plan.walk() if isinstance(n, Join))
+        sfs_above_join = [n for n in opt.plan.walk()
+                          if isinstance(n, SemanticFilter)
+                          and join in list(n.walk())]
+        assert len(sfs_above_join) == 0
+
+    def test_blocking_forces_placement_below(self, catalog):
+        plan = (Q.scan("reviews")
+                .sem_filter("{reviews.text} positive?")
+                .group_by(["reviews.book_id"], [("count", "*", "cnt")])
+                .build())
+        opt = optimize(plan, catalog, strategy="cost",
+                       params=CostParams(alpha=1e-12))
+        agg = next(n for n in opt.plan.walk() if isinstance(n, Aggregate))
+        sf = next(n for n in opt.plan.walk() if isinstance(n, SemanticFilter))
+        assert sf in list(agg.walk())
+
+    def test_sj_derived_filter_stays_at_or_above_cross(self, catalog):
+        plan = (Q.scan("books")
+                .sem_join(Q.scan("reviews"),
+                          "does {reviews.text} discuss {books.title}?")
+                .where(col("reviews.rating") >= 3)
+                .build())
+        opt = optimize(plan, catalog, strategy="cost")
+        sf = next(n for n in opt.plan.walk() if isinstance(n, SemanticFilter))
+        assert isinstance(sf.children[0], (CrossJoin, Filter))
+        # the relational σ should have been pushed below the cross join
+        cross = next(n for n in opt.plan.walk() if isinstance(n, CrossJoin))
+        assert any(isinstance(n, Filter) for n in cross.walk())
+
+    def test_rebuild_roundtrip_counts(self, catalog):
+        plan = simplify(push_down_filters(motivating_plan(), catalog), catalog)
+        skeleton, lifted = lift_semantic_filters(plan)
+        res = dp_place(skeleton, lifted, catalog, CostParams())
+        rebuilt = rebuild_plan(skeleton, lifted, res.placement, catalog)
+        assert count_ops(rebuilt) == count_ops(plan)
+
+
+class TestOptimizerPipeline:
+    def test_overhead_reported(self, catalog):
+        opt = optimize(motivating_plan(), catalog, strategy="cost")
+        assert set(opt.overhead) == {"pushdown", "simplify", "placement"}
+        assert opt.total_overhead < 1.0  # Fig 9: well under a second
+
+    def test_strategies_produce_same_operator_multiset(self, catalog):
+        plans = {
+            s: optimize(motivating_plan(), catalog, strategy=s).plan
+            for s in ("none", "pullup", "cost")
+        }
+        counts = {s: count_ops(p) for s, p in plans.items()}
+        assert counts["none"] == counts["pullup"] == counts["cost"]

@@ -1,0 +1,92 @@
+"""Unit tests for dry-run accounting: HLO collective parsing with
+while-trip multipliers, and the roofline term algebra."""
+import pytest
+
+from repro.analysis.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, analyze
+from repro.launch.dryrun import collective_bytes, collective_bytes_scaled
+
+HLO = """\
+ENTRY %main.5_spmd (param.5: f32[4,64,64], param.4: f32[4,128]) -> f32[4,128] {
+  %all-gather.1 = f32[128,64]{1,0} all-gather(%x), replica_groups=[2,2]<=[4]
+  %while.1 = (s32[], f32[4,128]) while(%t), condition=%cond.1, body=%body.1
+}
+%body.1 (wide.param: (s32[], f32[4,128])) -> (s32[], f32[4,128]) {
+  %all-reduce.2 = f32[4,128]{1,0} all-reduce(%dot.1), replica_groups=[2,2]
+  %while.2 = (s32[]) while(%t2), condition=%cond.2, body=%body.2
+}
+%body.2 (wide.param.2: (s32[], f32[2,64])) -> (s32[]) {
+  %all-to-all.3 = bf16[2,64]{1,0} all-to-all(%y), replica_groups=[2,2]
+}
+%cond.1 (p: (s32[], f32[4,128])) -> pred[] {
+  %c = pred[] compare(%a, %b), direction=LT
+}
+"""
+
+
+class TestCollectiveParsing:
+    def test_raw_bytes(self):
+        out = collective_bytes(HLO)
+        # all-gather: 128*64*4 = 32768 B; all-reduce: 4*128*4*2x = 4096;
+        # all-to-all: 2*64*2 = 256
+        assert out["all-gather"] == 128 * 64 * 4
+        assert out["all-reduce"] == 4 * 128 * 4 * 2
+        assert out["all-to-all"] == 2 * 64 * 2
+        assert out["_counts"] == {"all-gather": 1, "all-reduce": 1,
+                                  "all-to-all": 1}
+
+    def test_trip_scaling_by_nesting(self):
+        out = collective_bytes_scaled(HLO, [3, 5])
+        # top-level all-gather x1; depth-1 all-reduce x3; depth-2 a2a x15
+        assert out["all-gather"] == 128 * 64 * 4
+        assert out["all-reduce"] == 4 * 128 * 4 * 2 * 3
+        assert out["all-to-all"] == 2 * 64 * 2 * 3 * 5
+
+    def test_deeper_than_chain_inherits_product(self):
+        out = collective_bytes_scaled(HLO, [7])
+        assert out["all-to-all"] == 2 * 64 * 2 * 7  # unknown depth-2 trip=1
+
+
+def _cell(**kw):
+    base = {
+        "arch": "x", "shape": "train_4k", "kind": "train", "mesh": "single",
+        "n_devices": 256, "params_orig": 1e9, "params_active": 1e9,
+        "corrected": {"flops_global": 6e9 * 4096 * 256},
+        "memory": {"argument_bytes": 1e9, "temp_bytes": 2e9},
+        "collectives": {"all-reduce": 5e9, "_counts": {}},
+    }
+    base.update(kw)
+    return base
+
+
+class TestRooflineAlgebra:
+    def test_terms(self):
+        r = analyze(_cell())
+        flops = 6e9 * 4096 * 256
+        assert r.compute_s == pytest.approx(flops / (256 * PEAK_FLOPS))
+        assert r.memory_s == pytest.approx((1e9 + 2 * 2e9) / HBM_BW)
+        assert r.collective_s == pytest.approx(5e9 / ICI_BW)
+        # compute = 0.125 s > collective = 0.1 s > memory
+        assert r.bound == "compute"
+
+    def test_model_flops_train_vs_decode(self):
+        train = analyze(_cell())
+        dec = analyze(_cell(shape="decode_32k", kind="decode",
+                            corrected={"flops_global": 1e12}))
+        # train: 6·N·(4096·256); decode: 2·N·128 new tokens
+        assert train.model_flops == pytest.approx(6 * 1e9 * 4096 * 256)
+        assert dec.model_flops == pytest.approx(2 * 1e9 * 128)
+
+    def test_decode_ideal_is_resident_streaming(self):
+        r = analyze(_cell(shape="decode_32k", kind="decode",
+                          corrected={"flops_global": 1e12},
+                          memory={"argument_bytes": 8e9, "temp_bytes": 0},
+                          collectives={"all-reduce": 1e9, "_counts": {}}))
+        # ideal = resident/HBM (weights+cache streaming floor)
+        ideal = 8e9 / HBM_BW
+        assert r.roofline_frac == pytest.approx(
+            ideal / max(r.compute_s, r.memory_s, r.collective_s))
+
+    def test_frac_capped_at_one(self):
+        r = analyze(_cell(memory={"argument_bytes": 1e15, "temp_bytes": 0},
+                          collectives={"_counts": {}}))
+        assert r.roofline_frac <= 1.0

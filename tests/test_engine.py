@@ -1,0 +1,271 @@
+"""Engine + semantic runtime tests, incl. the paper's key invariants:
+
+1. placement optimization NEVER changes query results (Thm 4.1 semantics
+   preservation) — property-tested over randomly composed hybrid queries;
+2. pull-up + function caching never increases LLM calls vs. baseline
+   (Thm 4.1 cost monotonicity);
+3. function-cache behaviour (distinct-prompt dedup, per-query scope).
+"""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import Q, col, optimize
+from repro.data import make_bookreview
+from repro.data.schemas import (
+    BOOKS_ABOUT_AI,
+    BOOK_SECOND_EDITION,
+    REVIEW_MATCHES_BOOK,
+    REVIEW_MENTIONS_SHIPPING,
+    REVIEW_POSITIVE,
+    REVIEW_SENTIMENT,
+    USER_IS_EXPERT,
+)
+from repro.engine import Database, Executor, result_f1
+from repro.semantic import FunctionCache, OracleBackend, SemanticRunner
+
+
+@pytest.fixture(scope="module")
+def db():
+    return make_bookreview(seed=7, scale=0.3)
+
+
+def run_plan(db, plan, strategy, noise=0.0, seed=0):
+    backend = OracleBackend(truths=db.truths, noise=noise, seed=seed)
+    runner = SemanticRunner(backend)
+    ex = Executor(db, runner)
+    opt = optimize(plan, db.catalog(), strategy=strategy)
+    table, stats = ex.execute(opt.plan)
+    return table, stats
+
+
+def motivating(db):
+    return (Q.scan("books")
+            .join(Q.scan("reviews"), "books.book_id", "reviews.book_id")
+            .where(col("reviews.rating") >= 3)
+            .sem_filter(BOOKS_ABOUT_AI)
+            .sem_filter(REVIEW_POSITIVE)
+            .select("books.title", "reviews.text")
+            .build())
+
+
+class TestExecutorBasics:
+    def test_scan_filter(self, db):
+        plan = Q.scan("reviews").where(col("reviews.rating") >= 4).build()
+        table, _ = run_plan(db, plan, "none")
+        vals = np.asarray(table.compact().col("reviews.rating"))
+        assert (vals >= 4).all()
+        # cross-check against payload
+        expected = sum(1 for r in db.payloads["reviews"] if r["rating"] >= 4)
+        assert len(vals) == expected
+
+    def test_equi_join_counts(self, db):
+        plan = (Q.scan("books")
+                .join(Q.scan("reviews"), "books.book_id", "reviews.book_id")
+                .build())
+        table, _ = run_plan(db, plan, "none")
+        n_books = len(db.payloads["books"])
+        matched = sum(1 for r in db.payloads["reviews"]
+                      if r["book_id"] < n_books)  # dangling FKs drop out
+        assert table.num_valid == matched
+
+    def test_aggregate_group_by(self, db):
+        plan = (Q.scan("reviews")
+                .group_by(["reviews.rating"],
+                          [("count", "*", "cnt"), ("avg", "reviews.helpful_vote", "hv")])
+                .build())
+        table, _ = run_plan(db, plan, "none")
+        t = table.compact()
+        ratings = np.asarray(t.col("reviews.rating"))
+        counts = np.asarray(t.col("agg.cnt"))
+        for r, c in zip(ratings, counts):
+            assert c == sum(1 for x in db.payloads["reviews"] if x["rating"] == r)
+
+    def test_sort_limit(self, db):
+        plan = (Q.scan("reviews")
+                .order_by(("reviews.helpful_vote", True))
+                .limit(5)
+                .build())
+        table, _ = run_plan(db, plan, "none")
+        hv = np.asarray(table.compact().col("reviews.helpful_vote"))
+        assert len(hv) == 5
+        all_hv = sorted((r["helpful_vote"] for r in db.payloads["reviews"]),
+                        reverse=True)
+        assert sorted(hv.tolist(), reverse=True) == all_hv[:5]
+
+    def test_semantic_filter_matches_oracle(self, db):
+        plan = Q.scan("books").sem_filter(BOOKS_ABOUT_AI).build()
+        table, stats = run_plan(db, plan, "none")
+        expected = sum(1 for r in db.payloads["books"]
+                       if r["_topic"] == "artificial intelligence")
+        assert table.num_valid == expected
+        assert stats.llm_calls == len(db.payloads["books"])
+
+    def test_semantic_project_values(self, db):
+        plan = (Q.scan("reviews")
+                .sem_project(REVIEW_SENTIMENT, "sp.score")
+                .where(col("sp.score") >= 4)
+                .build())
+        table, _ = run_plan(db, plan, "none")
+        expected = sum(1 for r in db.payloads["reviews"]
+                       if r["_sentiment"] + 3 >= 4)
+        assert table.num_valid == expected
+
+    def test_semantic_join_direct(self, db):
+        small = Database()
+        small.add_table("books", db.payloads["books"][:20],
+                        text_columns={"title", "subtitle", "author",
+                                      "categories", "description"})
+        small.add_table("reviews", db.payloads["reviews"][:30],
+                        text_columns={"text"})
+        small.truths = db.truths
+        plan = (Q.scan("books")
+                .sem_join(Q.scan("reviews"), REVIEW_MATCHES_BOOK)
+                .build())
+        table, stats = run_plan(small, plan, "none")
+        expected = sum(
+            1 for b in small.payloads["books"] for r in small.payloads["reviews"]
+            if r["_sentiment"] != 0 and r["book_id"] == b["book_id"])
+        assert table.num_valid == expected
+
+
+class TestPlacementInvariants:
+    def test_strategies_identical_results(self, db):
+        plan = motivating(db)
+        recs = {}
+        for s in ("none", "pullup", "cost"):
+            table, _ = run_plan(db, plan, s)
+            recs[s] = db.materialize(table, ["books.title", "reviews.text"])
+        assert result_f1(recs["none"], recs["pullup"]) == 1.0
+        assert result_f1(recs["none"], recs["cost"]) == 1.0
+
+    def test_pullup_never_more_calls(self, db):
+        plan = motivating(db)
+        _, s_none = run_plan(db, plan, "none")
+        _, s_pull = run_plan(db, plan, "pullup")
+        assert s_pull.llm_calls <= s_none.llm_calls
+
+    def test_cost_between_extremes(self, db):
+        plan = motivating(db)
+        _, s_none = run_plan(db, plan, "none")
+        _, s_cost = run_plan(db, plan, "cost")
+        assert s_cost.llm_calls <= s_none.llm_calls
+
+    def test_noise_lowers_f1_but_not_to_zero(self, db):
+        plan = motivating(db)
+        table0, _ = run_plan(db, plan, "none", noise=0.0)
+        ref = db.materialize(table0, ["books.title", "reviews.text"])
+        table1, _ = run_plan(db, plan, "pullup", noise=0.05, seed=123)
+        cand = db.materialize(table1, ["books.title", "reviews.text"])
+        f1 = result_f1(ref, cand)
+        assert 0.3 < f1 < 1.0
+
+
+class TestFunctionCache:
+    def test_dedup(self):
+        cache = FunctionCache()
+        calls = []
+
+        def compute(keys):
+            calls.append(list(keys))
+            return [k.upper() for k in keys]
+
+        out = cache.lookup_batch(["a", "b", "a", "c", "b"], compute)
+        assert out == ["A", "B", "A", "C", "B"]
+        assert calls == [["a", "b", "c"]]
+        assert cache.stats.hits == 2 and cache.stats.misses == 3
+
+    def test_scope_reset(self, db):
+        backend = OracleBackend(truths=db.truths)
+        runner = SemanticRunner(backend)
+        ex = Executor(db, runner)
+        plan = Q.scan("books").sem_filter(BOOKS_ABOUT_AI).build()
+        _, s1 = ex.execute(plan)
+        _, s2 = ex.execute(plan)
+        # cache cleared between queries (paper §5): full cost again
+        assert s1.llm_calls == s2.llm_calls > 0
+
+    def test_cross_query_cache_reuse(self, db):
+        backend = OracleBackend(truths=db.truths)
+        runner = SemanticRunner(backend)
+        ex = Executor(db, runner, fresh_cache_per_query=False)
+        plan = Q.scan("books").sem_filter(BOOKS_ABOUT_AI).build()
+        _, s1 = ex.execute(plan)
+        _, s2 = ex.execute(plan)
+        assert s2.llm_calls == 0 and s2.cache_hits > 0
+
+
+# ---------------------------------------------------------------------------
+# Property: random hybrid queries — all strategies agree, pull-up saves calls
+# ---------------------------------------------------------------------------
+
+SF_POOL = [BOOKS_ABOUT_AI, REVIEW_POSITIVE, REVIEW_MENTIONS_SHIPPING,
+           BOOK_SECOND_EDITION, USER_IS_EXPERT]
+REL_POOL = [
+    lambda: col("reviews.rating") >= 3,
+    lambda: col("reviews.helpful_vote") >= 20,
+    lambda: col("books.year") >= 2000,
+    lambda: col("reviews.verified_purchase") == 1,
+    lambda: col("users.review_count") <= 150,
+]
+
+
+@st.composite
+def random_query(draw):
+    n_tables = draw(st.integers(1, 3))
+    q = Q.scan("books")
+    tables = {"books"}
+    if n_tables >= 2:
+        q = q.join(Q.scan("reviews"), "books.book_id", "reviews.book_id")
+        tables.add("reviews")
+    if n_tables >= 3:
+        q = q.join(Q.scan("users"), "reviews.review_id", "users.user_id")
+        tables.add("users")
+    rel_idx = draw(st.lists(st.integers(0, len(REL_POOL) - 1), max_size=2,
+                            unique=True))
+    for i in rel_idx:
+        pred = REL_POOL[i]()
+        if pred.columns() <= {f"{t}.{c}" for t in tables
+                              for c in ("rating", "helpful_vote", "year",
+                                        "verified_purchase", "review_count")}:
+            q = q.where(pred)
+    sf_idx = draw(st.lists(st.integers(0, len(SF_POOL) - 1), min_size=1,
+                           max_size=3, unique=True))
+    from repro.core import template_columns
+    for i in sf_idx:
+        phi = SF_POOL[i]
+        if {c.split(".")[0] for c in template_columns(phi)} <= tables:
+            q = q.sem_filter(phi)
+    use_sp = draw(st.booleans())
+    if use_sp and "reviews" in tables:
+        q = q.sem_project(REVIEW_SENTIMENT, "sp.score")
+        q = q.where(col("sp.score") >= draw(st.integers(2, 5)))
+    return q.build()
+
+
+class TestPropertyPlacement:
+    @settings(max_examples=12, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(random_query())
+    def test_all_strategies_same_result(self, plan):
+        db = _PROP_DB
+        outs = {}
+        for s in ("none", "pullup", "cost"):
+            table, _ = run_plan(db, plan, s)
+            cols = sorted(table.compact().columns)
+            outs[s] = db.materialize(table, cols)
+        assert result_f1(outs["none"], outs["pullup"]) == 1.0
+        assert result_f1(outs["none"], outs["cost"]) == 1.0
+
+    @settings(max_examples=12, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(random_query())
+    def test_pullup_monotone_calls(self, plan):
+        db = _PROP_DB
+        _, s_none = run_plan(db, plan, "none")
+        _, s_pull = run_plan(db, plan, "pullup")
+        assert s_pull.llm_calls <= s_none.llm_calls
+
+
+_PROP_DB = make_bookreview(seed=11, scale=0.15)

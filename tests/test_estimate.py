@@ -1,0 +1,77 @@
+"""Sampling-based selectivity estimation (beyond-paper extension)."""
+import pytest
+
+from repro.core import Q, col, optimize, push_down_filters, simplify
+from repro.core.estimate import (
+    estimate_params,
+    measure_join_reduction,
+    sample_sf_selectivity,
+)
+from repro.data import make_bookreview
+from repro.data.schemas import BOOKS_ABOUT_AI, REVIEW_POSITIVE
+from repro.engine import Executor, result_f1
+from repro.semantic import OracleBackend, SemanticRunner
+
+
+@pytest.fixture(scope="module")
+def db():
+    return make_bookreview(seed=5, scale=0.5)
+
+
+def _runner(db):
+    return SemanticRunner(OracleBackend(truths=db.truths))
+
+
+class TestSampling:
+    def test_sf_selectivity_close_to_truth(self, db):
+        plan = Q.scan("reviews").sem_filter(REVIEW_POSITIVE).build()
+        sf = next(n for n in plan.walk() if hasattr(n, "phi"))
+        sf.sf_id = 0
+        s, spent = sample_sf_selectivity(db, sf, _runner(db), k=128)
+        truth = sum(1 for r in db.payloads["reviews"]
+                    if r["_sentiment"] > 0) / len(db.payloads["reviews"])
+        assert abs(s - truth) < 0.15
+        assert 0 < spent <= 128
+
+    def test_join_reduction_reflects_dangling_fks(self, db):
+        plan = (Q.scan("books")
+                .join(Q.scan("reviews"), "books.book_id", "reviews.book_id")
+                .build())
+        s = measure_join_reduction(db, plan)
+        # ~20% of review FKs dangle by construction
+        assert 0.3 < s < 1.0
+
+    def test_estimated_params_preserve_results(self, db):
+        plan = (Q.scan("books")
+                .join(Q.scan("reviews"), "books.book_id", "reviews.book_id")
+                .where(col("reviews.rating") >= 3)
+                .sem_filter(BOOKS_ABOUT_AI)
+                .sem_filter(REVIEW_POSITIVE)
+                .select("books.title", "reviews.review_id")
+                .build())
+        cat = db.catalog()
+        simplified = simplify(push_down_filters(plan.clone(), cat), cat)
+        runner = _runner(db)
+        params, spent = estimate_params(db, simplified, runner, k=32)
+        assert spent > 0 and len(params.sf_selectivity) == 2
+
+        ref_t, _ = Executor(db, _runner(db)).execute(
+            optimize(plan, cat, "none").plan)
+        opt_t, _ = Executor(db, _runner(db)).execute(
+            optimize(plan, cat, "cost", params=params).plan)
+        ref = db.materialize(ref_t, ["books.title", "reviews.review_id"])
+        out = db.materialize(opt_t, ["books.title", "reviews.review_id"])
+        assert result_f1(ref, out) == 1.0
+
+    def test_sampling_prewarms_cache(self, db):
+        """Sampled rows must become cache entries, not wasted calls."""
+        plan = Q.scan("books").sem_filter(BOOKS_ABOUT_AI).build()
+        cat = db.catalog()
+        simplified = simplify(push_down_filters(plan.clone(), cat), cat)
+        runner = _runner(db)
+        _, spent = estimate_params(db, simplified, runner, k=64)
+        ex = Executor(db, runner, fresh_cache_per_query=False)
+        _, stats = ex.execute(optimize(plan, cat, "cost").plan)
+        # total distinct calls (sampling + execution) ==
+        # number of books: nothing evaluated twice
+        assert spent + stats.llm_calls == len(db.payloads["books"])

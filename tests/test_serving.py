@@ -1,0 +1,61 @@
+"""Serving engine + end-to-end model-backend tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_tiny
+from repro.models import init_params
+from repro.semantic import ModelBackend
+from repro.serving.engine import ServingEngine
+from repro.sharding import ShardingPolicy
+from repro.training.data import HashTokenizer
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_tiny("stablelm-3b").replace(vocab_size=512)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return ServingEngine(cfg, params, ShardingPolicy.single(),
+                         tokenizer=HashTokenizer(cfg.vocab_size),
+                         batch_size=4, max_seq=24, max_new_tokens=2)
+
+
+class TestServingEngine:
+    def test_answers_all_prompts(self, engine):
+        prompts = [f"is item {i} acceptable?" for i in range(10)]
+        out = engine.answer(prompts)
+        assert len(out) == 10
+        assert all(isinstance(a, str) and a for a in out)
+        assert engine.stats.batches == 3  # 4+4+2 slots
+
+    def test_deterministic(self, engine):
+        p = ["does this review sound positive?"]
+        a1 = engine.answer(p)
+        a2 = engine.answer(p)
+        assert a1 == a2
+
+    def test_model_backend_parses(self, engine):
+        backend = ModelBackend(engine.answer)
+        vals = backend.evaluate_batch(
+            ["prompt a", "prompt b"],
+            [{"__dtype__": "bool"}, {"__dtype__": "bool"}])
+        assert all(isinstance(v, bool) for v in vals)
+        assert backend.calls == 2
+
+    def test_decode_stats_accumulate(self, engine):
+        before = engine.stats.decode_steps
+        engine.answer(["one more prompt"])
+        assert engine.stats.decode_steps > before
+
+
+class TestHashTokenizer:
+    def test_stable_and_reserved(self):
+        tok = HashTokenizer(1024)
+        a = tok.encode("hello world", 8)
+        b = tok.encode("hello world", 8)
+        np.testing.assert_array_equal(a, b)
+        assert a[0] == tok.BOS
+        assert (a >= 0).all() and (a < 1024).all()
+        # reserved ids never produced by hashing
+        assert all(t >= tok.RESERVED or t == tok.BOS for t in a if t != 0)

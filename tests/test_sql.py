@@ -1,0 +1,118 @@
+"""SQL front-end tests: the paper's Listings parse, optimize and execute
+identically to builder-constructed plans."""
+import numpy as np
+import pytest
+
+from repro.core import Q, col, count_ops, optimize
+from repro.core.sql import SQLError, parse_sql
+from repro.data import make_bookreview
+from repro.data.schemas import BOOKS_ABOUT_AI, REVIEW_POSITIVE, REVIEW_SENTIMENT
+from repro.engine import Executor, result_f1
+from repro.semantic import OracleBackend, SemanticRunner
+
+
+@pytest.fixture(scope="module")
+def db():
+    return make_bookreview(seed=3, scale=0.3)
+
+
+def run(db, plan, strategy="cost"):
+    opt = optimize(plan, db.catalog(), strategy=strategy)
+    runner = SemanticRunner(OracleBackend(truths=db.truths))
+    table, stats = Executor(db, runner).execute(opt.plan)
+    return table, stats
+
+
+LISTING1 = f"""
+SELECT b.title, r.text
+FROM books b JOIN reviews r ON b.book_id = r.book_id
+WHERE SEMANTIC('{BOOKS_ABOUT_AI.replace("books.", "b.").replace("reviews.", "r.")}')
+  AND SEMANTIC('{REVIEW_POSITIVE.replace("reviews.", "r.")}')
+  AND r.rating >= 3;
+"""
+
+LISTING2 = f"""
+SELECT b.title, SEMANTIC_INT('{REVIEW_SENTIMENT.replace("reviews.", "r.")}') AS score
+FROM books b JOIN reviews r ON b.book_id = r.book_id
+WHERE score >= 4;
+"""
+
+
+class TestParsing:
+    def test_listing1_structure(self, db):
+        plan = parse_sql(LISTING1)
+        ops = count_ops(plan)
+        assert ops["SemanticFilter"] == 2
+        assert ops["Join"] == 1 and ops["Filter"] == 1
+        sfs = [n for n in plan.walk() if type(n).__name__ == "SemanticFilter"]
+        assert {frozenset(s.ref_tables) for s in sfs} == {
+            frozenset({"books"}), frozenset({"reviews"})}
+
+    def test_listing1_matches_builder(self, db):
+        sql_plan = parse_sql(LISTING1)
+        builder_plan = (Q.scan("books")
+                        .join(Q.scan("reviews"), "books.book_id",
+                              "reviews.book_id")
+                        .where(col("reviews.rating") >= 3)
+                        .sem_filter(BOOKS_ABOUT_AI)
+                        .sem_filter(REVIEW_POSITIVE)
+                        .select("books.title", "reviews.text")
+                        .build())
+        t1, s1 = run(db, sql_plan)
+        t2, s2 = run(db, builder_plan)
+        r1 = db.materialize(t1, ["books.title", "reviews.text"])
+        r2 = db.materialize(t2, ["books.title", "reviews.text"])
+        assert result_f1(r1, r2) == 1.0
+        assert s1.llm_calls == s2.llm_calls
+
+    def test_listing2_semantic_projection(self, db):
+        plan = parse_sql(LISTING2)
+        ops = count_ops(plan)
+        assert ops["SemanticProject"] == 1
+        table, _ = run(db, plan)
+        vals = np.asarray(table.compact().col("sp.score"))
+        assert (vals >= 4).all()
+        expected = sum(1 for r in db.payloads["reviews"]
+                       if r["_sentiment"] + 3 >= 4
+                       and r["book_id"] < len(db.payloads["books"]))
+        assert table.num_valid == expected
+
+    def test_between_in_order_limit(self, db):
+        plan = parse_sql("""
+            SELECT r.review_id, r.helpful_vote FROM reviews r
+            WHERE r.rating BETWEEN 2 AND 4 AND r.verified_purchase IN (1)
+            ORDER BY r.helpful_vote DESC LIMIT 7;
+        """)
+        table, _ = run(db, plan, strategy="none")
+        assert table.num_valid == 7
+        hv = np.asarray(table.compact().col("reviews.helpful_vote"))
+        assert list(hv) == sorted(hv, reverse=True)
+
+    def test_cross_join(self, db):
+        plan = parse_sql("""
+            SELECT b.title, u.user_id FROM books b CROSS JOIN users u
+            WHERE b.year >= 2020 AND u.review_count >= 390;
+        """)
+        table, _ = run(db, plan, strategy="none")
+        nb = sum(1 for r in db.payloads["books"] if r["year"] >= 2020)
+        nu = sum(1 for r in db.payloads["users"] if r["review_count"] >= 390)
+        assert table.num_valid == nb * nu
+
+    def test_quoted_escapes(self):
+        plan = parse_sql("""
+            SELECT b.title FROM books b
+            WHERE SEMANTIC('is {b.title} about ''AI''?');
+        """)
+        sf = next(n for n in plan.walk()
+                  if type(n).__name__ == "SemanticFilter")
+        assert "'AI'" in sf.phi
+
+    @pytest.mark.parametrize("bad", [
+        "SELECT FROM books",
+        "SELECT b.x FROM books b WHERE",
+        "SELECT b.x FROM books b WHERE rating >= 3",  # unqualified col
+        "SELECT b.x FROM books b LIMIT 2 extra",
+    ])
+    def test_errors(self, bad):
+        with pytest.raises(SQLError):
+            parse_sql(bad)
