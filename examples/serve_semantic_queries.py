@@ -70,7 +70,9 @@ def main():
 
     for strategy in ("none", "cost"):
         opt = optimize(plan, catalog, strategy=strategy)
-        backend = ModelBackend(engine.answer)
+        # bucket-aligned chunked dispatch: runner streams distinct misses
+        # in multiples of the engine's serving batch
+        backend = ModelBackend.from_engine(engine)
         runner = SemanticRunner(backend)
         ex = Executor(db, runner)
         t0 = time.perf_counter()

@@ -4,13 +4,20 @@ Vectorised, mask-based execution (DuckDB-pipeline analogue, DESIGN.md §4.2):
 
 * σ / SF update validity masks (no materialisation);
 * ⋈ / × / γ / sort / limit materialise compacted outputs;
-* semantic operators gather referenced row payloads for *valid* rows only,
-  dedup through the function cache and batch distinct misses to the backend.
+* semantic operators stack the referenced row_ids of *valid* rows into an
+  (N, C) key matrix, collapse duplicates with the ``hash_dedup`` kernel,
+  render prompts only for first-occurrence representatives, and scatter
+  backend results back to all N rows through the inverse mapping. The
+  ``FunctionCache`` stays above this as the cross-operator dedup layer
+  (two SFs sharing a prompt still hit each other's entries).
 
 The executor records the quantities the paper's cost model predicts:
 ``llm_calls`` (distinct backend invocations = C_LLM), ``rel_rows`` (rows
 processed by relational operators = C_rel) and ``probe_rows`` (cache
-lookups triggered by pulled-up filters).
+lookups triggered by pulled-up filters). ``Executor(vectorized=False)``
+keeps the per-row reference path for equivalence testing; both paths
+produce identical results and identical llm_calls / cache_hits /
+null_skipped accounting.
 """
 from __future__ import annotations
 
@@ -41,8 +48,9 @@ from ..core.plan import (
     Sort,
     Union,
 )
-from ..semantic.runner import SemanticRunner
-from .table import Database, Table
+from ..kernels.hash_dedup.ops import dedup_representatives
+from ..semantic.runner import SemanticResult, SemanticRunner
+from .table import Database, Table, as_column
 
 MAX_CROSS_ROWS = 30_000_000
 
@@ -60,6 +68,7 @@ class ExecStats:
     sem_wall_s: float = 0.0
     per_op: dict = field(default_factory=dict)
     prompt_chars: int = 0
+    prompts_rendered: int = 0  # host-side renders (== distinct keys when vectorized)
 
     def bump(self, op: str, key: str, v: float) -> None:
         d = self.per_op.setdefault(op, {})
@@ -72,10 +81,14 @@ class ExecutionError(RuntimeError):
 
 class Executor:
     def __init__(self, db: Database, runner: SemanticRunner,
-                 fresh_cache_per_query: bool = True):
+                 fresh_cache_per_query: bool = True,
+                 vectorized: bool = True):
         self.db = db
         self.runner = runner
         self.fresh_cache_per_query = fresh_cache_per_query
+        # vectorized=False keeps the per-row reference path (one rendered
+        # prompt and context dict per row) for equivalence testing.
+        self.vectorized = vectorized
 
     # ------------------------------------------------------------------ API
     def execute(self, plan: Node) -> tuple[Table, ExecStats]:
@@ -138,13 +151,25 @@ class Executor:
             keys = []
             for colname, desc in reversed(node.keys):
                 v = np.asarray(t.col(colname))
-                keys.append(-v if desc else v)
+                if not desc:
+                    keys.append(v)
+                elif v.dtype.kind == "f":
+                    # float negation keeps NaN (NULL SP outputs) sorting
+                    # last under lexsort, matching ascending behaviour
+                    keys.append(-v)
+                else:
+                    # rank-based descending: negation raises on strings,
+                    # wraps unsigned ints and overflows INT_MIN; ranks are
+                    # exact for every dtype np.unique can order.
+                    ranks = np.unique(v, return_inverse=True)[1]
+                    keys.append(-ranks)
             order = np.lexsort(keys)
             return t.gather(order)
         if isinstance(node, Union):
             parts = [c.compact() for c in ch]
             cols = {
-                k: jnp.concatenate([p.col(k) for p in parts])
+                k: as_column(np.concatenate(
+                    [np.asarray(p.col(k)) for p in parts]))
                 for k in parts[0].columns
             }
             n = sum(p.capacity for p in parts)
@@ -246,7 +271,7 @@ class Executor:
         if not node.group_by:
             cols = {}
             for func, c, name in node.aggs:
-                cols[f"agg.{name}"] = jnp.asarray(
+                cols[f"agg.{name}"] = as_column(
                     [self._agg_value(func, t, c, np.arange(n))])
             return Table(columns=cols, valid=jnp.ones(1, dtype=bool))
         keys = np.stack([np.asarray(t.col(k)) for k in node.group_by], axis=1)
@@ -255,45 +280,123 @@ class Executor:
         cols = {}
         for i, k in enumerate(node.group_by):
             dt = np.asarray(t.col(k)).dtype
-            cols[k] = jnp.asarray(uniq[:, i].astype(dt))
+            # as_column: a 64-bit key column (e.g. an exact int64 sum from
+            # an upstream aggregate) must not wrap through jnp's 32-bit mode
+            cols[k] = as_column(uniq[:, i].astype(dt))
         for func, c, name in node.aggs:
-            vals = np.empty(g, dtype=np.float32)
-            for gi in range(g):
-                idx = np.nonzero(inverse == gi)[0]
-                vals[gi] = self._agg_value(func, t, c, idx)
-            cols[f"agg.{name}"] = jnp.asarray(vals)
+            vals = [self._agg_value(func, t, c, np.nonzero(inverse == gi)[0])
+                    for gi in range(g)]
+            # numpy promotion keeps integer aggregates integral (int64);
+            # as_column keeps 64-bit results host-side at full precision
+            cols[f"agg.{name}"] = as_column(vals)
         return Table(columns=cols, valid=jnp.ones(g, dtype=bool))
 
     @staticmethod
-    def _agg_value(func: str, t: Table, c: str, idx: np.ndarray) -> float:
+    def _agg_value(func: str, t: Table, c: str, idx: np.ndarray):
+        """Aggregate one group, preserving exactness: count is integral,
+        sum/min/max over integer columns stay integer (no float32 round
+        trip that loses precision above 2**24), avg accumulates in
+        float64."""
         if func == "count":
-            return float(len(idx))
+            return np.int64(len(idx))
         v = np.asarray(t.col(c))[idx]
         if len(v) == 0:
-            return 0.0
-        return {
-            "sum": np.sum, "avg": np.mean, "min": np.min, "max": np.max,
-        }[func](v).astype(np.float32)
+            if func != "avg" and v.dtype.kind in "bui":
+                return np.int64(0)
+            return np.float64(0.0)
+        if func == "sum":
+            return (v.sum(dtype=np.int64) if v.dtype.kind in "bui"
+                    else v.sum(dtype=np.float64))
+        if func == "avg":
+            return np.float64(v.mean(dtype=np.float64))
+        return {"min": np.min, "max": np.max}[func](v)
 
     # ------------------------------------------------------------- semantic
-    def _contexts_for(self, t: Table, ref_tables: frozenset[str]) -> list[dict]:
-        tc = t.compact()
-        n = tc.capacity
-        ids = {}
-        for rt in ref_tables:
+    def _ref_id_columns(self, tc: Table, ref_tables: frozenset[str]
+                        ) -> tuple[list[str], list[np.ndarray]]:
+        """The referenced tables' row_id columns of a compacted table, in
+        deterministic (sorted) table order."""
+        rts = sorted(ref_tables)
+        id_cols = []
+        for rt in rts:
             col = f"{rt}.row_id"
             if col not in tc.columns:
                 raise ExecutionError(
                     f"semantic operator references {rt} but {col} missing")
-            ids[rt] = np.asarray(tc.col(col))
-        ctxs = []
-        for i in range(n):
-            ctx = {}
-            for rt, arr in ids.items():
-                rid = int(arr[i])
-                ctx[rt] = self.db.payloads[rt][rid] if rid >= 0 else None
-            ctxs.append(ctx)
+            id_cols.append(np.asarray(tc.col(col), dtype=np.int32))
+        return rts, id_cols
+
+    def _context_at(self, rts: list[str], id_cols: list[np.ndarray],
+                    row: int) -> dict:
+        ctx = {}
+        for rt, arr in zip(rts, id_cols):
+            rid = int(arr[row])
+            ctx[rt] = self.db.payloads[rt][rid] if rid >= 0 else None
+        return ctx
+
+    def _contexts_for(self, t: Table, ref_tables: frozenset[str]
+                      ) -> tuple[list[dict], Table]:
+        """Per-row reference path: one context dict per valid row."""
+        tc = t.compact()
+        rts, id_cols = self._ref_id_columns(tc, ref_tables)
+        ctxs = [self._context_at(rts, id_cols, i)
+                for i in range(tc.capacity)]
         return ctxs, tc
+
+    def _evaluate_semantic(self, node: Node, child: Table, stats: ExecStats,
+                           out_dtype: str
+                           ) -> tuple[Table, SemanticResult, np.ndarray]:
+        """Evaluate φ over the child's valid rows. Returns the compacted
+        table, the runner result (per representative) and the inverse
+        mapping scattering representative values back to rows.
+
+        Vectorized path: stack referenced row_ids into an (N, C) int32 key
+        matrix, run the ``hash_dedup`` kernel for first-occurrence
+        representatives, render prompts/contexts for representatives only,
+        and pass row multiplicities so cache accounting stays identical to
+        per-row execution."""
+        if not self.vectorized:
+            ctxs, tc = self._contexts_for(child, node.ref_tables)
+            n = tc.capacity
+            stats.sem_rows += n
+            stats.probe_rows += n
+            res = self.runner.evaluate(node.phi, ctxs, out_dtype=out_dtype)
+            inverse = np.arange(n)
+        else:
+            tc, res, inverse = self._evaluate_vectorized(node, child, stats,
+                                                         out_dtype)
+
+        stats.llm_calls += res.distinct_calls
+        stats.cache_hits += res.cache_hits
+        stats.null_skipped += res.null_rows
+        stats.prompts_rendered += res.prompts_rendered
+        return tc, res, inverse
+
+    def _evaluate_vectorized(self, node: Node, child: Table,
+                             stats: ExecStats, out_dtype: str
+                             ) -> tuple[Table, SemanticResult, np.ndarray]:
+        tc = child.compact()
+        n = tc.capacity
+        rts, id_cols = self._ref_id_columns(tc, node.ref_tables)
+        stats.sem_rows += n
+        stats.probe_rows += n
+
+        if n == 0:
+            res = SemanticResult(values=[], distinct_calls=0, cache_hits=0,
+                                 null_rows=0, prompts_rendered=0)
+            inverse = np.zeros(0, dtype=np.int64)
+        else:
+            # placeholder-free φ references no tables: every row shares one
+            # constant key, so a single representative covers the batch
+            keys = (np.stack(id_cols, axis=1) if id_cols
+                    else np.zeros((n, 1), dtype=np.int32))
+            _, reps, inverse = dedup_representatives(keys)
+            rep_ctxs = [self._context_at(rts, id_cols, int(r)) for r in reps]
+            counts = np.bincount(inverse, minlength=len(reps))
+            res = self.runner.evaluate_unique(
+                node.phi, rep_ctxs, counts=counts, out_dtype=out_dtype)
+
+        return tc, res, inverse
 
     def _run_semantic(self, node: Node, ch: list[Table],
                       stats: ExecStats) -> Table:
@@ -304,32 +407,24 @@ class Executor:
             sf = SemanticFilter(phi=node.phi, ref_cols=list(node.ref_cols))
             return self._run_semantic(sf, [cross], stats)
 
-        child = ch[0]
-        ref_tables = node.ref_tables
-        ctxs, tc = self._contexts_for(child, ref_tables)
-        stats.sem_rows += len(ctxs)
-        stats.probe_rows += len(ctxs)
-
         if isinstance(node, SemanticFilter):
-            res = self.runner.evaluate(node.phi, ctxs, out_dtype="bool")
-            stats.llm_calls += res.distinct_calls
-            stats.cache_hits += res.cache_hits
-            stats.null_skipped += res.null_rows
+            tc, res, inverse = self._evaluate_semantic(
+                node, ch[0], stats, out_dtype="bool")
             stats.bump(f"SF{node.sf_id}", "calls", res.distinct_calls)
-            mask = np.asarray([bool(v) for v in res.values], dtype=bool)
+            rep_mask = np.asarray([bool(v) for v in res.values], dtype=bool)
+            mask = rep_mask[inverse] if len(inverse) else np.zeros(0, bool)
             return tc.with_mask(jnp.asarray(mask))
 
         if isinstance(node, SemanticProject):
-            dtype = node.out_dtype
-            res = self.runner.evaluate(node.phi, ctxs, out_dtype=dtype)
-            stats.llm_calls += res.distinct_calls
-            stats.cache_hits += res.cache_hits
-            stats.null_skipped += res.null_rows
+            tc, res, inverse = self._evaluate_semantic(
+                node, ch[0], stats, out_dtype=node.out_dtype)
             stats.bump("SP", "calls", res.distinct_calls)
-            vals = np.asarray(
+            rep_vals = np.asarray(
                 [float(v) if v is not None else np.nan for v in res.values],
                 dtype=np.float32,
             )
+            vals = rep_vals[inverse] if len(inverse) else \
+                np.zeros(0, np.float32)
             cols = dict(tc.columns)
             cols[node.out_col] = jnp.asarray(vals)
             return Table(columns=cols, valid=tc.valid)

@@ -21,6 +21,16 @@ import numpy as np
 NULL_HANDLE = -1
 
 
+def as_column(values) -> "np.ndarray | jnp.ndarray":
+    """Column-ify ``values``. Narrow numerics go on device; strings and
+    64-bit numerics stay host-side numpy (jnp would reject strings and
+    silently truncate int64/float64 under 32-bit mode)."""
+    arr = np.asarray(values)
+    if arr.dtype.kind in "iufb" and arr.dtype.itemsize <= 4:
+        return jnp.asarray(arr)
+    return arr
+
+
 class TextStore:
     """Append-only host-side string arena; columns store int32 handles."""
 
@@ -72,11 +82,11 @@ class Table:
     def compact(self) -> "Table":
         """Materialise only valid rows (host-side gather)."""
         idx = np.nonzero(np.asarray(self.valid))[0]
-        cols = {k: jnp.asarray(np.asarray(v)[idx]) for k, v in self.columns.items()}
+        cols = {k: as_column(np.asarray(v)[idx]) for k, v in self.columns.items()}
         return Table(columns=cols, valid=jnp.ones(len(idx), dtype=bool))
 
     def gather(self, idx: np.ndarray) -> "Table":
-        cols = {k: jnp.asarray(np.asarray(v)[idx]) for k, v in self.columns.items()}
+        cols = {k: as_column(np.asarray(v)[idx]) for k, v in self.columns.items()}
         return Table(columns=cols, valid=jnp.ones(len(idx), dtype=bool))
 
     def select(self, names: Sequence[str]) -> "Table":

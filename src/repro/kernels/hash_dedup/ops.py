@@ -5,6 +5,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .hash_dedup import hash_rows_kernel
 from .ref import first_occurrence_ref, hash_rows_ref
@@ -25,10 +26,71 @@ def hash_rows(keys, *, block_rows: int = 1024, impl: str = "auto"):
     return out[:n]
 
 
-@partial(jax.jit, static_argnames=("impl",))
-def dedup_mask(keys, *, impl: str = "auto"):
+@partial(jax.jit, static_argnames=("impl", "return_hashes"))
+def dedup_mask(keys, *, impl: str = "auto", return_hashes: bool = False):
     """keys: (N, C) int32 -> bool (N,): True at the first occurrence of
     each distinct key row (the rows that become backend calls; the rest
-    are cache hits)."""
+    are cache hits). ``return_hashes=True`` also returns the (N,) uint32
+    row hashes so callers grouping rows reuse the single hash pass."""
     h = hash_rows(keys, impl=impl)
-    return first_occurrence_ref(h)
+    m = first_occurrence_ref(h)
+    return (m, h) if return_hashes else m
+
+
+def dedup_representatives(keys, *, impl: str = "auto"):
+    """Host-facing dedup for the semantic batch pipeline.
+
+    keys: (N, C) int32 — one row per candidate LLM invocation, columns are
+    the referenced base tables' row_ids. Returns numpy arrays
+    ``(mask, reps, inverse)`` where ``mask`` is the kernel's
+    first-occurrence mask, ``reps`` are the row indices of the first
+    occurrence of each distinct key, and ``inverse[i]`` maps row i to its
+    index into ``reps`` (the scatter map for broadcasting representative
+    results back to all rows).
+
+    Grouping is by the kernel's 32-bit row hash; an exact vectorised check
+    compares every row against its representative's key and falls back to
+    key-wise ``np.unique`` on a hash collision, so the mapping is always
+    exact.
+
+    The mask is the device-side ``dedup_mask`` pass (hash kernel + sort),
+    kept on the semantic hot path by contract; the scatter map
+    (reps/inverse) is built host-side from the same hashes because the
+    executor binds Python payload dicts to representatives anyway. A
+    device-resident scatter-map build that subsumes the ``np.unique`` is a
+    ROADMAP open item.
+    """
+    keys_np = np.ascontiguousarray(np.asarray(keys), dtype=np.int32)
+    n = keys_np.shape[0]
+    if n == 0:
+        empty = np.zeros(0, dtype=np.int64)
+        return np.zeros(0, dtype=bool), empty, empty
+    # bucket N to the next power of two (>= one hash block) before the jit
+    # boundary so varying batch sizes reuse a bounded set of compiles;
+    # trailing zero-padding rows cannot perturb the first-occurrence mask
+    # of real rows and are sliced off before grouping. The host copy is
+    # kept for the exact collision check — one host->device transfer total.
+    bucket = max(1024, 1 << (n - 1).bit_length())
+    if bucket != n:
+        keys_in = np.pad(keys_np, ((0, bucket - n), (0, 0)))
+    else:
+        keys_in = keys_np
+    mask, hashes = dedup_mask(jnp.asarray(keys_in), impl=impl,
+                              return_hashes=True)
+    mask = np.asarray(mask)[:n]
+    _, reps, inverse = np.unique(np.asarray(hashes)[:n], return_index=True,
+                                 return_inverse=True)
+    if not np.array_equal(keys_np[reps][inverse], keys_np):
+        # 32-bit hash collision merged distinct keys: regroup exactly
+        _, reps, inverse = np.unique(keys_np, axis=0, return_index=True,
+                                     return_inverse=True)
+        mask = np.zeros(n, dtype=bool)
+        mask[reps] = True
+    # np.unique orders groups by value; reorder into ascending row order so
+    # downstream first-seen semantics (a prompt-level cache binding the
+    # earliest context) match per-row execution exactly: the first rep
+    # carrying a given prompt is then the globally first row carrying it.
+    order = np.argsort(reps)
+    rank = np.empty_like(order)
+    rank[order] = np.arange(len(order))
+    return mask, reps[order], rank[inverse]

@@ -24,9 +24,16 @@ from typing import Callable, Optional, Sequence
 
 
 class Backend:
-    """Interface: evaluate a batch of rendered prompts."""
+    """Interface: evaluate a batch of rendered prompts.
+
+    ``preferred_batch_rows`` is an optional dispatch-size hint: when set,
+    ``SemanticRunner`` streams distinct misses to ``evaluate_batch`` in
+    chunks of at most this many prompts (aligned with the serving tier's
+    bucket size) instead of one monolithic batch.
+    """
 
     calls: int
+    preferred_batch_rows: Optional[int] = None
 
     def evaluate_batch(self, prompts: Sequence[str],
                        contexts: Sequence[dict]) -> list[object]:
@@ -51,6 +58,7 @@ class OracleBackend(Backend):
     seed: int = 0
     calls: int = 0
     per_call_latency_s: float = 0.0  # simulated per-*batch-item* latency
+    preferred_batch_rows: Optional[int] = None
 
     def evaluate_batch(self, prompts, contexts):
         out = []
@@ -73,10 +81,20 @@ class ModelBackend(Backend):
     ``ServingEngine.answer``); parses YES/NO or integers out of the reply."""
 
     def __init__(self, answer_fn: Callable[[Sequence[str]], list[str]],
-                 out_dtype: str = "bool"):
+                 out_dtype: str = "bool",
+                 preferred_batch_rows: Optional[int] = None):
         self.answer_fn = answer_fn
         self.out_dtype = out_dtype
+        self.preferred_batch_rows = preferred_batch_rows
         self.calls = 0
+
+    @classmethod
+    def from_engine(cls, engine, out_dtype: str = "bool") -> "ModelBackend":
+        """Wrap a ``ServingEngine``, inheriting its bucket-aligned
+        dispatch size so runner chunks map onto whole serving batches."""
+        return cls(engine.answer, out_dtype=out_dtype,
+                   preferred_batch_rows=getattr(
+                       engine, "preferred_batch_rows", None))
 
     def evaluate_batch(self, prompts, contexts):
         self.calls += len(prompts)

@@ -47,11 +47,20 @@ class FunctionCache:
         self,
         keys: Sequence[Hashable],
         compute_batch: Callable[[list[Hashable]], list[object]],
+        counts: Optional[Sequence[int]] = None,
     ) -> list[object]:
         """Resolve a batch of keys. Distinct missing keys are computed once
         via ``compute_batch`` (one backend invocation for the whole batch —
-        the vectorised-execution analogue of per-row probes)."""
-        self.stats.probes += len(keys)
+        the vectorised-execution analogue of per-row probes).
+
+        ``counts`` gives each key's row multiplicity when the caller has
+        already deduplicated upstream (the kernel dedup pipeline): a key
+        standing for g rows accounts for g probes, of which g - 1 would
+        have been cache hits on the per-row path. Stats are therefore
+        identical whether dedup happens here or on-device before the call.
+        """
+        total = len(keys) if counts is None else int(sum(counts))
+        self.stats.probes += total
         missing: list[Hashable] = []
         seen = set()
         for k in keys:
@@ -64,5 +73,5 @@ class FunctionCache:
             for k, r in zip(missing, results):
                 self._store[k] = r
         self.stats.misses += len(missing)
-        self.stats.hits += len(keys) - len(missing)
+        self.stats.hits += total - len(missing)
         return [self._store[k] for k in keys]

@@ -1,10 +1,24 @@
 """Batched semantic-operator evaluation with function caching.
 
-``SemanticRunner.evaluate`` is the single entry point the relational
-executor uses for SF / SP / SJ work: it renders prompts from row payloads,
-dedups through the ``FunctionCache`` and sends *distinct misses* to the
-backend in one batch (vectorised execution — the serving tier sees one
-large batch instead of per-row calls).
+``SemanticRunner`` is the single entry point the relational executor uses
+for SF / SP / SJ work. Two paths:
+
+* ``evaluate`` — legacy per-row path: renders one prompt per input row,
+  dedups through the ``FunctionCache`` and sends distinct misses to the
+  backend.
+* ``evaluate_unique`` — vectorised path: the executor has already
+  collapsed rows to distinct-key *representatives* (via the
+  ``hash_dedup`` kernel) and passes each representative's row
+  multiplicity in ``counts``; prompts are rendered only for
+  representatives, and cache statistics are weighted so
+  ``llm_calls`` / ``cache_hits`` / ``null_skipped`` match the per-row
+  path exactly.
+
+Backend dispatch is chunked: distinct misses go out in slices of
+``max_batch_rows`` (defaulting to the backend's ``preferred_batch_rows``,
+which ``ModelBackend`` aligns with the serving engine's bucket size) so a
+huge pulled-up filter becomes a stream of bounded batches instead of one
+monolithic ``evaluate_batch``.
 
 NULL semantics (paper §4.1): a row whose referenced value is NULL requires
 no LLM call; SF(NULL) = NULL (row excluded), SP(NULL) = NULL value.
@@ -23,53 +37,108 @@ _TEMPLATE_COL = re.compile(r"\{([A-Za-z_][\w]*\.[A-Za-z_][\w]*)\}")
 
 def render_prompt(phi: str, ctx: dict[str, dict]) -> Optional[str]:
     """Substitute {table.col} placeholders from payload rows. Returns None
-    if any referenced value is NULL/missing (no LLM call needed)."""
-    out = phi
-    for q in _TEMPLATE_COL.findall(phi):
-        t, c = q.split(".", 1)
+    if any referenced value is NULL/missing (no LLM call needed).
+
+    Single-pass substitution: a substituted *value* that itself contains
+    ``{table.col}`` text is emitted verbatim, never re-expanded (the
+    prompt-injection analogue of SQL parameter binding).
+    """
+    missing = False
+
+    def _sub(m: "re.Match[str]") -> str:
+        nonlocal missing
+        t, c = m.group(1).split(".", 1)
         row = ctx.get(t)
         if row is None:
-            return None
+            missing = True
+            return m.group(0)
         v = row.get(c)
         if v is None:
-            return None
-        out = out.replace("{" + q + "}", str(v))
-    return out
+            missing = True
+            return m.group(0)
+        return str(v)
+
+    out = _TEMPLATE_COL.sub(_sub, phi)
+    return None if missing else out
 
 
 @dataclass
 class SemanticResult:
-    values: list[object]  # per input row; None = NULL (no call made)
+    # one value per context passed in — per input row on the per-row path,
+    # per distinct-key representative on the vectorized path (scatter
+    # through the executor's inverse map); None = NULL (no call made)
+    values: list[object]
     distinct_calls: int
     cache_hits: int
     null_rows: int
+    prompts_rendered: int = 0
 
 
 class SemanticRunner:
-    def __init__(self, backend: Backend, cache: Optional[FunctionCache] = None):
+    def __init__(self, backend: Backend, cache: Optional[FunctionCache] = None,
+                 max_batch_rows: Optional[int] = None):
         self.backend = backend
         self.cache = cache if cache is not None else FunctionCache()
+        # None -> follow the backend's preference; backends without one
+        # get a single monolithic batch (the seed behaviour).
+        self.max_batch_rows = max_batch_rows
 
     def reset_query_scope(self) -> None:
         """Paper §5: the cache is scoped per query execution."""
         self.cache.clear()
         self.cache.stats.reset()
 
+    # ------------------------------------------------------------ dispatch
+    def _batch_limit(self) -> Optional[int]:
+        if self.max_batch_rows is not None:
+            return self.max_batch_rows
+        return getattr(self.backend, "preferred_batch_rows", None)
+
+    def _dispatch(self, keys: list, ctxs: list) -> list[object]:
+        """Send distinct misses to the backend in bounded chunks."""
+        limit = self._batch_limit()
+        if not limit or len(keys) <= limit:
+            return self.backend.evaluate_batch(keys, ctxs)
+        out: list[object] = []
+        for s in range(0, len(keys), limit):
+            out.extend(self.backend.evaluate_batch(keys[s:s + limit],
+                                                   ctxs[s:s + limit]))
+        return out
+
+    # ------------------------------------------------------------ evaluate
     def evaluate(
         self,
         phi: str,
         contexts: Sequence[dict[str, dict]],
         out_dtype: str = "bool",
     ) -> SemanticResult:
+        """Per-row path: one rendered prompt per context."""
+        return self.evaluate_unique(phi, contexts, counts=None,
+                                    out_dtype=out_dtype)
+
+    def evaluate_unique(
+        self,
+        phi: str,
+        contexts: Sequence[dict[str, dict]],
+        counts: Optional[Sequence[int]] = None,
+        out_dtype: str = "bool",
+    ) -> SemanticResult:
+        """Evaluate distinct-key representatives. ``counts[i]`` is the
+        number of input rows context i stands for (None = all 1, i.e. the
+        per-row path). Returned ``values`` are per *representative*; the
+        caller scatters them back through its inverse mapping. Stats are
+        row-weighted so accounting matches per-row execution."""
         prompts: list[Optional[str]] = [render_prompt(phi, c) for c in contexts]
+        if counts is None:
+            counts = [1] * len(prompts)
         live_idx = [i for i, p in enumerate(prompts) if p is not None]
-        null_rows = len(prompts) - len(live_idx)
+        null_rows = int(sum(counts[i] for i, p in enumerate(prompts)
+                            if p is None))
 
         misses_before = self.cache.stats.misses
         hits_before = self.cache.stats.hits
 
         def compute(missing_keys):
-            ctxs = []
             key_to_ctx = {}
             for i in live_idx:
                 key_to_ctx.setdefault(prompts[i], contexts[i])
@@ -79,10 +148,11 @@ class SemanticRunner:
                 c["__phi__"] = phi
                 c["__dtype__"] = out_dtype
                 batch_ctx.append(c)
-            return self.backend.evaluate_batch(list(missing_keys), batch_ctx)
+            return self._dispatch(list(missing_keys), batch_ctx)
 
         live_results = self.cache.lookup_batch(
-            [prompts[i] for i in live_idx], compute
+            [prompts[i] for i in live_idx], compute,
+            counts=[counts[i] for i in live_idx],
         )
         values: list[object] = [None] * len(prompts)
         for i, r in zip(live_idx, live_results):
@@ -92,4 +162,5 @@ class SemanticRunner:
             distinct_calls=self.cache.stats.misses - misses_before,
             cache_hits=self.cache.stats.hits - hits_before,
             null_rows=null_rows,
+            prompts_rendered=len(prompts),
         )

@@ -61,6 +61,14 @@ class ServingEngine:
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode, donate_argnums=(1,))
 
+    @property
+    def preferred_batch_rows(self) -> int:
+        """Dispatch-size hint for the semantic tier: one upstream chunk
+        fills a handful of serving batches, so a huge pulled-up filter
+        streams through as bounded bucket-aligned batches instead of one
+        monolithic host-side queue."""
+        return self.batch_size * 8
+
     # ------------------------------------------------------------------
     def _encode_batch(self, prompts: Sequence[str]) -> tuple[np.ndarray, np.ndarray]:
         toks = np.zeros((self.batch_size, self.max_seq), dtype=np.int32)

@@ -1,0 +1,178 @@
+"""Vectorized semantic batch pipeline: the hash_dedup kernel collapses
+duplicate ref-row keys before any prompt is rendered, and the result /
+stats contract is *identical* to the per-row reference path on every
+benchmarks/corpus.py query.
+"""
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+from benchmarks.corpus import ALL_QUERIES  # noqa: E402
+
+from repro.core import Q, optimize  # noqa: E402
+from repro.data import SCHEMAS  # noqa: E402
+from repro.engine import Database, Executor, result_f1  # noqa: E402
+from repro.semantic import OracleBackend, SemanticRunner  # noqa: E402
+
+_DBS = {}
+
+
+def _db(schema):
+    if schema not in _DBS:
+        _DBS[schema] = SCHEMAS[schema](seed=0, scale=0.15)
+    return _DBS[schema]
+
+
+def _run(db, plan, vectorized, out_cols):
+    backend = OracleBackend(truths=db.truths)
+    ex = Executor(db, SemanticRunner(backend), vectorized=vectorized)
+    table, stats = ex.execute(plan)
+    return db.materialize(table, list(out_cols)), stats, backend
+
+
+# ---------------------------------------------------------------------------
+# Prompts are rendered only for distinct ref-row keys
+# ---------------------------------------------------------------------------
+
+def _dup_heavy_db(n_cats=17, n_events=400):
+    db = Database()
+    cats = [{"cat_id": i, "name": f"category number {i}"}
+            for i in range(n_cats)]
+    rng = np.random.default_rng(3)
+    events = [{"event_id": j, "cat_id": int(rng.integers(0, n_cats))}
+              for j in range(n_events)]
+    db.add_table("cats", cats, text_columns={"name"})
+    db.add_table("events", events)
+    phi = "SEMANTIC: does {cats.name} sound odd?"
+    db.truths = {phi: lambda ctx: ctx["cats"]["cat_id"] % 2 == 1}
+    return db, phi
+
+
+def test_prompts_rendered_only_for_distinct_keys():
+    """A pulled-up filter over a fan-out join probes N rows but renders
+    only one prompt per distinct referenced key (the kernel dedup)."""
+    db, phi = _dup_heavy_db()
+    plan = (Q.scan("events")
+            .join(Q.scan("cats"), "events.cat_id", "cats.cat_id")
+            .sem_filter(phi)
+            .build())
+    recs_v, sv, _ = _run(db, plan, True, ["events.event_id"])
+    recs_p, sp, _ = _run(db, plan, False, ["events.event_id"])
+
+    n_rows = sv.probe_rows
+    distinct = len({e["cat_id"] for e in db.payloads["events"]})
+    assert n_rows == len(db.payloads["events"])
+    # vectorized: one render per distinct key; per-row: one per row
+    assert sv.prompts_rendered == distinct
+    assert sp.prompts_rendered == n_rows
+    # accounting and results still identical
+    assert sv.llm_calls == sp.llm_calls == distinct
+    assert sv.cache_hits == sp.cache_hits == n_rows - distinct
+    assert result_f1(recs_p, recs_v) == 1.0
+
+
+def test_dedup_handles_null_payload_values():
+    """Rows whose referenced payload value is NULL skip the backend on
+    both paths with identical null accounting."""
+    db, phi = _dup_heavy_db(n_cats=5, n_events=0)
+    db.payloads["cats"][2]["name"] = None
+    plan = Q.scan("cats").sem_filter(phi).build()
+    recs_v, sv, _ = _run(db, plan, True, ["cats.cat_id"])
+    recs_p, sp, _ = _run(db, plan, False, ["cats.cat_id"])
+    assert sv.null_skipped == sp.null_skipped == 1
+    assert sv.llm_calls == sp.llm_calls == 4
+    assert result_f1(recs_p, recs_v) == 1.0
+
+
+def test_dedup_handles_negative_row_ids():
+    """A row_id < 0 sentinel (NULL ref row, e.g. from an outer join) must
+    map to a None context — not index payloads[-1] — on both paths."""
+    import jax.numpy as jnp
+    from repro.engine import Table
+
+    db, phi = _dup_heavy_db(n_cats=6, n_events=0)
+    t = db.tables["cats"]
+    ids = np.asarray(t.col("cats.row_id")).copy()
+    ids[1] = -1
+    ids[4] = -1
+    db.tables["cats"] = Table(
+        columns={**t.columns, "cats.row_id": jnp.asarray(ids)},
+        valid=t.valid)
+    plan = Q.scan("cats").sem_filter(phi).build()
+    recs_v, sv, _ = _run(db, plan, True, ["cats.cat_id"])
+    recs_p, sp, _ = _run(db, plan, False, ["cats.cat_id"])
+    assert sv.null_skipped == sp.null_skipped == 2
+    assert sv.llm_calls == sp.llm_calls == 4
+    # vectorized path dedups both NULL rows into one representative
+    assert sv.prompts_rendered == 5 and sp.prompts_rendered == 6
+    assert result_f1(recs_p, recs_v) == 1.0
+
+
+def test_identical_prompts_across_distinct_keys_bind_first_context():
+    """Two distinct ref keys can render the *same* prompt (equal visible
+    values, different latent truths). Function caching keys on the prompt,
+    so both paths must bind the globally first row's context — reps must
+    come back in row order, not hash order."""
+    db = Database()
+    cats = [{"cat_id": i, "name": "same name"} for i in range(12)]
+    db.add_table("cats", cats, text_columns={"name"})
+    phi = "SEMANTIC: is {cats.name} odd?"
+    db.truths = {phi: lambda ctx: ctx["cats"]["cat_id"] % 2 == 1}
+    plan = Q.scan("cats").sem_filter(phi).build()
+    recs_v, sv, _ = _run(db, plan, True, ["cats.cat_id"])
+    recs_p, sp, _ = _run(db, plan, False, ["cats.cat_id"])
+    # cat_id 0's context binds the prompt: truth False, all rows dropped
+    assert recs_p == [] and recs_v == []
+    assert sv.llm_calls == sp.llm_calls == 1
+    assert sv.cache_hits == sp.cache_hits == 11
+
+
+def test_placeholder_free_phi_single_call():
+    """A φ with no {table.col} placeholders references no tables: both
+    paths make exactly one backend call and keep every row decision."""
+    db = Database()
+    db.add_table("t", [{"x": i} for i in range(6)])
+    phi = "SEMANTIC: is the sky blue?"
+    db.truths = {phi: lambda ctx: True}
+    plan = Q.scan("t").sem_filter(phi).build()
+    recs_v, sv, bv = _run(db, plan, True, ["t.x"])
+    recs_p, sp, bp = _run(db, plan, False, ["t.x"])
+    assert len(recs_v) == len(recs_p) == 6
+    assert sv.llm_calls == sp.llm_calls == 1
+    assert sv.cache_hits == sp.cache_hits == 5
+    assert bv.calls == bp.calls == 1
+    assert sv.prompts_rendered == 1 and sp.prompts_rendered == 6
+
+
+def test_empty_input_semantic_filter():
+    db, phi = _dup_heavy_db(n_cats=3, n_events=10)
+    from repro.core import col
+    # the filter invalidates every row before the semantic operator
+    plan = (Q.scan("events").where(col("events.event_id") < 0)
+            .join(Q.scan("cats"), "events.cat_id", "cats.cat_id")
+            .sem_filter(phi).build())
+    recs, stats, backend = _run(db, plan, True, ["events.event_id"])
+    assert recs == [] and stats.llm_calls == 0 and backend.calls == 0
+
+
+# ---------------------------------------------------------------------------
+# Corpus-wide equivalence: vectorized == per-row on results AND stats
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", ALL_QUERIES, ids=lambda s: s.qid)
+def test_corpus_equivalence(spec):
+    db = _db(spec.schema)
+    plan = spec.build()
+    opt = optimize(plan, db.catalog(), strategy="cost")
+    recs_v, sv, bv = _run(db, opt.plan, True, spec.out_cols)
+    recs_p, sp, bp = _run(db, opt.plan, False, spec.out_cols)
+    assert result_f1(recs_p, recs_v) == 1.0, spec.qid
+    for f in ("llm_calls", "cache_hits", "null_skipped", "probe_rows",
+              "sem_rows", "rel_rows"):
+        assert getattr(sv, f) == getattr(sp, f), (spec.qid, f)
+    assert bv.calls == bp.calls
+    # dedup never renders more prompts than the per-row path
+    assert sv.prompts_rendered <= sp.prompts_rendered

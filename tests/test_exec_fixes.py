@@ -1,0 +1,251 @@
+"""Regression tests for executor crashes and precision bugs fixed with the
+vectorized semantic batch pipeline:
+
+* descending ORDER BY over string (and other non-negatable) columns;
+* integer-preserving aggregates (count integral, sum/min/max exact for
+  int64 beyond float32's 2**24 mantissa);
+* single-pass render_prompt (substituted values containing placeholder
+  text are never re-expanded);
+* chunked backend dispatch.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Q, col
+from repro.core.plan import Sort
+from repro.engine import Database, Executor
+from repro.engine.table import Table, as_column
+from repro.semantic import FunctionCache, OracleBackend, SemanticRunner
+from repro.semantic.backend import Backend
+from repro.semantic.runner import render_prompt
+
+
+def _executor(db=None):
+    db = db or Database()
+    return Executor(db, SemanticRunner(OracleBackend(truths={})))
+
+
+# ---------------------------------------------------------------------------
+# Sort: descending keys on non-numeric dtypes
+# ---------------------------------------------------------------------------
+
+class TestSortDescending:
+    def _sort(self, table, keys):
+        ex = _executor()
+        return ex._run_relational(Sort(keys=keys, children=[]), [table],
+                                  None)
+
+    def test_desc_on_strings(self):
+        names = np.asarray(["pear", "apple", "fig", "apple", "quince"])
+        t = Table(columns={"t.name": names,
+                           "t.x": jnp.arange(5, dtype=jnp.int32)},
+                  valid=jnp.ones(5, dtype=bool))
+        out = self._sort(t, [("t.name", True)])
+        got = list(np.asarray(out.col("t.name")))
+        assert got == sorted(names.tolist(), reverse=True)
+
+    def test_desc_on_strings_is_stable_secondary(self):
+        names = np.asarray(["b", "a", "b", "a"])
+        t = Table(columns={"t.name": names,
+                           "t.x": jnp.asarray([3, 9, 1, 4], dtype=jnp.int32)},
+                  valid=jnp.ones(4, dtype=bool))
+        out = self._sort(t, [("t.name", True), ("t.x", False)])
+        assert list(np.asarray(out.col("t.name"))) == ["b", "b", "a", "a"]
+        assert np.asarray(out.col("t.x")).tolist() == [1, 3, 4, 9]
+
+    def test_desc_numeric_unchanged(self):
+        t = Table(columns={"t.x": jnp.asarray([5, -3, 7, 0],
+                                              dtype=jnp.int32)},
+                  valid=jnp.ones(4, dtype=bool))
+        out = self._sort(t, [("t.x", True)])
+        assert np.asarray(out.col("t.x")).tolist() == [7, 5, 0, -3]
+
+    def test_desc_float_keeps_nan_last(self):
+        # NULL SemanticProject outputs are NaN: descending sort must keep
+        # them last (as the seed's float negation did), not rank them first
+        vals = np.asarray([3.0, np.nan, 1.0, 2.0], dtype=np.float32)
+        t = Table(columns={"t.x": jnp.asarray(vals)},
+                  valid=jnp.ones(4, dtype=bool))
+        out = self._sort(t, [("t.x", True)])
+        got = np.asarray(out.col("t.x"))
+        assert got[:3].tolist() == [3.0, 2.0, 1.0]
+        assert np.isnan(got[3])
+
+    def test_desc_int32_min_exact(self):
+        # -INT_MIN overflows int32; rank-based descending must not
+        vals = np.asarray([0, -2**31, 5], dtype=np.int32)
+        t = Table(columns={"t.x": vals}, valid=jnp.ones(3, dtype=bool))
+        out = self._sort(t, [("t.x", True)])
+        assert np.asarray(out.col("t.x")).tolist() == [5, 0, -2**31]
+
+    def test_string_columns_survive_compact_and_gather(self):
+        names = np.asarray(["x", "y", "z"])
+        t = Table(columns={"t.name": names},
+                  valid=jnp.asarray([True, False, True]))
+        tc = t.compact()
+        assert list(np.asarray(tc.col("t.name"))) == ["x", "z"]
+
+
+# ---------------------------------------------------------------------------
+# Aggregates: dtype preservation
+# ---------------------------------------------------------------------------
+
+class TestAggregatePrecision:
+    @pytest.fixture
+    def db(self):
+        db = Database()
+        db.add_table("t", [
+            {"g": 1, "v": 1},
+            {"g": 1, "v": 2},
+            {"g": 2, "v": 3},
+            {"g": 2, "v": 4},
+            {"g": 2, "v": 5},
+        ])
+        return db
+
+    def test_count_stays_integral(self, db):
+        plan = (Q.scan("t")
+                .group_by(["t.g"], [("count", "*", "cnt")]).build())
+        table, _ = _executor(db).execute(plan)
+        cnt = np.asarray(table.compact().col("agg.cnt"))
+        assert cnt.dtype.kind in "iu", cnt.dtype
+        assert sorted(cnt.tolist()) == [2, 3]
+
+    def test_int_sum_exact_above_2p24(self):
+        # 2**24 + 1 is not representable in float32: the seed's float32
+        # coercion silently rounded it. Keep ids below int32 so the table
+        # column itself is exact; the *sum* exceeds 2**24.
+        big = 2**23
+        db = Database()
+        db.add_table("t", [{"g": 1, "v": big}, {"g": 1, "v": big + 1}])
+        plan = (Q.scan("t")
+                .group_by(["t.g"], [("sum", "t.v", "s")]).build())
+        table, _ = _executor(db).execute(plan)
+        s = np.asarray(table.compact().col("agg.s"))
+        assert s.dtype.kind == "i"
+        # float32 would round 2**24 + 1 down to 2**24 (the seed's bug)
+        assert s.tolist() == [2**24 + 1]
+
+    def test_chained_group_by_keeps_int64_keys(self):
+        # an exact int64 sum used as a downstream group key must not wrap
+        # through jnp's 32-bit mode
+        db = Database()
+        db.add_table("t", [{"g": 1, "v": 2**30}, {"g": 1, "v": 2**30 + 1},
+                           {"g": 2, "v": 5}])
+        plan = (Q.scan("t")
+                .group_by(["t.g"], [("sum", "t.v", "s")])
+                .group_by(["agg.s"], [("count", "*", "c")]).build())
+        table, _ = _executor(db).execute(plan)
+        keys = np.asarray(table.compact().col("agg.s"))
+        assert sorted(keys.tolist()) == [5, 2**31 + 1]
+
+    def test_min_max_preserve_int_dtype(self, db):
+        plan = (Q.scan("t")
+                .group_by(["t.g"], [("min", "t.v", "lo"),
+                                    ("max", "t.v", "hi")]).build())
+        table, _ = _executor(db).execute(plan)
+        t = table.compact()
+        assert np.asarray(t.col("agg.lo")).dtype.kind in "iu"
+        assert np.asarray(t.col("agg.hi")).dtype.kind in "iu"
+        gs = np.asarray(t.col("t.g")).tolist()
+        lo = dict(zip(gs, np.asarray(t.col("agg.lo")).tolist()))
+        hi = dict(zip(gs, np.asarray(t.col("agg.hi")).tolist()))
+        assert lo == {1: 1, 2: 3} and hi == {1: 2, 2: 5}
+
+    def test_global_count_integral(self, db):
+        plan = Q.scan("t").group_by([], [("count", "*", "n")]).build()
+        table, _ = _executor(db).execute(plan)
+        n = np.asarray(table.compact().col("agg.n"))
+        assert n.dtype.kind in "iu" and n.tolist() == [5]
+
+    def test_avg_float(self, db):
+        plan = (Q.scan("t")
+                .group_by(["t.g"], [("avg", "t.v", "m")]).build())
+        table, _ = _executor(db).execute(plan)
+        t = table.compact()
+        gs = np.asarray(t.col("t.g")).tolist()
+        m = dict(zip(gs, np.asarray(t.col("agg.m")).tolist()))
+        assert m[1] == pytest.approx(1.5) and m[2] == pytest.approx(4.0)
+
+    def test_as_column_keeps_64bit_host_side(self):
+        a = as_column(np.asarray([2**40, 1], dtype=np.int64))
+        assert isinstance(a, np.ndarray) and a[0] == 2**40
+        b = as_column(np.asarray([1, 2], dtype=np.int32))
+        assert isinstance(b, jnp.ndarray)
+
+
+# ---------------------------------------------------------------------------
+# render_prompt: single-pass substitution
+# ---------------------------------------------------------------------------
+
+class TestRenderPrompt:
+    def test_value_containing_placeholder_not_reexpanded(self):
+        phi = "Is {r.text} about {b.title}?"
+        ctx = {"r": {"text": "see {b.title} inside"},
+               "b": {"title": "AI Book"}}
+        out = render_prompt(phi, ctx)
+        # the injected "{b.title}" inside the value must stay verbatim
+        assert out == "Is see {b.title} inside about AI Book?"
+
+    def test_value_equal_to_other_placeholder(self):
+        phi = "{a.x} vs {a.y}"
+        ctx = {"a": {"x": "{a.y}", "y": "SECRET"}}
+        assert render_prompt(phi, ctx) == "{a.y} vs SECRET"
+
+    def test_null_value_returns_none(self):
+        assert render_prompt("{a.x}", {"a": {"x": None}}) is None
+        assert render_prompt("{a.x}", {"a": None}) is None
+        assert render_prompt("{a.x}", {}) is None
+
+    def test_plain_substitution(self):
+        assert render_prompt("v={a.x}", {"a": {"x": 3}}) == "v=3"
+
+
+# ---------------------------------------------------------------------------
+# Chunked dispatch
+# ---------------------------------------------------------------------------
+
+class _RecordingBackend(Backend):
+    def __init__(self, preferred_batch_rows=None):
+        self.calls = 0
+        self.batches = []
+        self.preferred_batch_rows = preferred_batch_rows
+
+    def evaluate_batch(self, prompts, contexts):
+        self.calls += len(prompts)
+        self.batches.append(len(prompts))
+        return [True] * len(prompts)
+
+
+class TestChunkedDispatch:
+    def _ctxs(self, n):
+        return [{"t": {"x": i}} for i in range(n)]
+
+    def test_max_batch_rows_bounds_each_dispatch(self):
+        be = _RecordingBackend()
+        runner = SemanticRunner(be, max_batch_rows=10)
+        res = runner.evaluate("p {t.x}", self._ctxs(37))
+        assert res.distinct_calls == 37
+        assert be.batches == [10, 10, 10, 7]
+
+    def test_backend_preference_used_when_unset(self):
+        be = _RecordingBackend(preferred_batch_rows=16)
+        runner = SemanticRunner(be)
+        runner.evaluate("p {t.x}", self._ctxs(40))
+        assert be.batches == [16, 16, 8]
+
+    def test_unbounded_by_default(self):
+        be = _RecordingBackend()
+        runner = SemanticRunner(be)
+        runner.evaluate("p {t.x}", self._ctxs(25))
+        assert be.batches == [25]
+
+    def test_weighted_cache_counts(self):
+        cache = FunctionCache()
+        out = cache.lookup_batch(["a", "b"],
+                                 lambda ks: [k.upper() for k in ks],
+                                 counts=[5, 1])
+        assert out == ["A", "B"]
+        assert cache.stats.probes == 6
+        assert cache.stats.misses == 2 and cache.stats.hits == 4
