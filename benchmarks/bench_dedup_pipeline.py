@@ -10,13 +10,17 @@ the vectorized path hashes the (N, C) ref-key matrix with the
 representatives.
 
     PYTHONPATH=src python benchmarks/bench_dedup_pipeline.py \
-        [--rows 120000] [--distinct 512] [--repeats 3]
+        [--rows 120000] [--distinct 512] [--repeats 3] [--smoke] [--json P]
 
 Acceptance gate: >= 2x improvement in sem_wall_s at >= 100k probe rows.
+``--smoke`` shrinks the workload for CI and only fails on crash or
+result mismatch, never on timing; both modes write a
+``BENCH_dedup_pipeline.json`` artifact.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 from pathlib import Path
@@ -69,7 +73,13 @@ def main(argv=None) -> int:
     ap.add_argument("--rows", type=int, default=120_000)
     ap.add_argument("--distinct", type=int, default=512)
     ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload; fail on crash/mismatch, not timing")
+    ap.add_argument("--json", type=Path,
+                    default=Path("artifacts/bench/BENCH_dedup_pipeline.json"))
     args = ap.parse_args(argv)
+    if args.smoke:
+        args.rows, args.distinct, args.repeats = 8_000, 128, 1
 
     db = build_db(args.rows, args.distinct)
     plan = pulled_up_plan()
@@ -97,10 +107,26 @@ def main(argv=None) -> int:
     speedup = results["per-row"][0] / max(results["vectorized"][0], 1e-12)
     print(f"\nspeedup (per-row / vectorized sem_wall_s): {speedup:.2f}x "
           f"on {args.rows} probe rows, {args.distinct} distinct keys")
-    if speedup < 2.0:
+
+    gated = not args.smoke
+    ok = not gated or speedup >= 2.0
+    out = {
+        "name": "dedup_pipeline",
+        "config": {"rows": args.rows, "distinct": args.distinct,
+                   "repeats": args.repeats, "smoke": args.smoke},
+        "vectorized_s": results["vectorized"][0],
+        "per_row_s": results["per-row"][0],
+        "speedup": speedup,
+        "gate": {"speedup_min": 2.0 if gated else None, "pass": ok},
+    }
+    args.json.parent.mkdir(parents=True, exist_ok=True)
+    args.json.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {args.json}")
+
+    if not ok:
         print("FAIL: expected >= 2x", file=sys.stderr)
         return 1
-    print("PASS: >= 2x")
+    print("PASS" + ("" if gated else " (smoke: crash/equivalence only)"))
     return 0
 
 

@@ -1,0 +1,151 @@
+"""Microbenchmark: per-group / searchsorted reference vs. segmented
+relational path (``segmented_reduce`` ops) on grouped aggregation and
+equi-joins.
+
+The workload is the regime where the O(G*N) per-group loop blows up:
+100k+ input rows with 10k+ distinct groups, several aggregate columns
+(each reference group runs ``np.nonzero(inverse == gi)`` per aggregate).
+The join side measures a fan-out probe over a hash-grouped build side.
+
+    PYTHONPATH=src python benchmarks/bench_relational_path.py \
+        [--rows 120000] [--groups 12000] [--repeats 3] [--smoke] [--json P]
+
+Acceptance gate: >= 5x on the grouped-aggregate path at >= 100k rows and
+>= 10k groups. ``--smoke`` shrinks the workload for CI and only fails on
+crash or result mismatch, never on timing; both modes write a
+``BENCH_relational_path.json`` artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core import Q  # noqa: E402
+from repro.engine import Database, Executor, result_f1  # noqa: E402
+from repro.semantic import OracleBackend, SemanticRunner  # noqa: E402
+
+AGG_SPEEDUP_GATE = 5.0
+
+
+def build_db(rows: int, groups: int, fanout_rows: int) -> Database:
+    rng = np.random.default_rng(0)
+    facts = [{"fact_id": i,
+              "g": int(rng.integers(0, groups)),
+              "v": int(rng.integers(0, 2**23)),
+              "w": float(rng.normal())}
+             for i in range(rows)]
+    dims = [{"g": gi, "tag": int(rng.integers(0, 97))}
+            for gi in range(groups)]
+    probes = [{"probe_id": j, "g": int(rng.integers(0, groups))}
+              for j in range(fanout_rows)]
+    db = Database()
+    db.add_table("facts", facts)
+    db.add_table("dims", dims)
+    db.add_table("probes", probes)
+    return db
+
+
+def agg_plan():
+    return (Q.scan("facts")
+            .group_by(["facts.g"],
+                      [("count", "*", "cnt"), ("sum", "facts.v", "s"),
+                       ("avg", "facts.w", "m"), ("min", "facts.v", "lo"),
+                       ("max", "facts.w", "hi")])
+            .build())
+
+
+def join_plan():
+    return (Q.scan("probes")
+            .join(Q.scan("facts"), "probes.g", "facts.g")
+            .build())
+
+
+def run_once(db, plan, vectorized: bool):
+    ex = Executor(db, SemanticRunner(OracleBackend(truths={})),
+                  vectorized=vectorized)
+    table, stats = ex.execute(plan)
+    return table, stats
+
+
+def bench(db, plan, out_cols, repeats: int) -> dict:
+    walls = {}
+    tables = {}
+    for vectorized in (True, False):  # vectorized first: warms jit
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            table, _ = run_once(db, plan, vectorized)
+            best = min(best, time.perf_counter() - t0)
+        walls[vectorized] = best
+        tables[vectorized] = db.materialize(table, out_cols)
+    f1 = result_f1(tables[False], tables[True])
+    if f1 != 1.0:
+        raise AssertionError(f"vectorized result mismatch (f1={f1})")
+    return {"vectorized_s": walls[True], "reference_s": walls[False],
+            "speedup": walls[False] / max(walls[True], 1e-12),
+            "out_rows": len(tables[True])}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=120_000)
+    ap.add_argument("--groups", type=int, default=12_000)
+    ap.add_argument("--fanout-rows", type=int, default=60_000)
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload; fail on crash/mismatch, not timing")
+    ap.add_argument("--json", type=Path,
+                    default=Path("artifacts/bench/BENCH_relational_path.json"))
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.rows, args.groups, args.fanout_rows = 5_000, 500, 2_000
+        args.repeats = 1
+
+    db = build_db(args.rows, args.groups, args.fanout_rows)
+
+    agg = bench(db, agg_plan(),
+                ["facts.g", "agg.cnt", "agg.s", "agg.m", "agg.lo", "agg.hi"],
+                args.repeats)
+    print(f"aggregate: vectorized={agg['vectorized_s']:.3f}s  "
+          f"reference={agg['reference_s']:.3f}s  "
+          f"speedup={agg['speedup']:.2f}x  groups={agg['out_rows']}")
+
+    join = bench(db, join_plan(), ["probes.probe_id", "facts.fact_id"],
+                 args.repeats)
+    print(f"join:      vectorized={join['vectorized_s']:.3f}s  "
+          f"reference={join['reference_s']:.3f}s  "
+          f"speedup={join['speedup']:.2f}x  out_rows={join['out_rows']}")
+
+    gated = not args.smoke
+    ok = not gated or agg["speedup"] >= AGG_SPEEDUP_GATE
+    out = {
+        "name": "relational_path",
+        "config": {"rows": args.rows, "groups": args.groups,
+                   "fanout_rows": args.fanout_rows,
+                   "repeats": args.repeats, "smoke": args.smoke},
+        "aggregate": agg,
+        "join": join,
+        "gate": {"aggregate_speedup_min": AGG_SPEEDUP_GATE if gated else None,
+                 "pass": ok},
+    }
+    args.json.parent.mkdir(parents=True, exist_ok=True)
+    args.json.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {args.json}")
+
+    if not ok:
+        print(f"FAIL: aggregate speedup {agg['speedup']:.2f}x < "
+              f"{AGG_SPEEDUP_GATE}x", file=sys.stderr)
+        return 1
+    print("PASS" + ("" if gated else " (smoke: crash/equivalence only)"))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,7 +8,7 @@ to 6+ joins with 2-4 semantic filters (Q26-Q30).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Optional
+from typing import Callable
 
 from repro.core import Q, col
 from repro.data import schemas as S

@@ -4,10 +4,9 @@ phases (pushdown / simplify / DP placement) vs. end-to-end runtime."""
 from __future__ import annotations
 
 import json
-import time
 from pathlib import Path
 
-from repro.core import Catalog, CostParams, Q, col, optimize
+from repro.core import Catalog, CostParams, Q, optimize
 
 
 def _make_plan(n_sf: int):

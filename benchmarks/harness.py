@@ -21,7 +21,7 @@ from dataclasses import dataclass, field
 
 from repro.core import CostParams, optimize
 from repro.data import SCHEMAS
-from repro.engine import Executor, result_f1
+from repro.engine import Executor
 from repro.semantic import OracleBackend, SemanticRunner
 
 # ---- LLM serving model (per distinct call) --------------------------------

@@ -11,7 +11,6 @@ Full JSON/CSV artifacts land in artifacts/bench/.
 """
 from __future__ import annotations
 
-import json
 import sys
 import time
 

@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.configs import get_tiny
 from repro.data import make_ecommerce
-from repro.models import forward_loss, init_params
+from repro.models import init_params
 from repro.sharding import ShardingPolicy
 from repro.training.checkpoint import CheckpointManager
 from repro.training.data import HashTokenizer, PromptStream

@@ -19,9 +19,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..semantic.runner import SemanticRunner, render_prompt
+from ..semantic.runner import SemanticRunner
 from .cost import CostParams
-from .plan import Join, Node, Scan, SemanticFilter
+from .plan import Join, Node, SemanticFilter
 
 
 def sample_sf_selectivity(db, sf: SemanticFilter, runner: SemanticRunner,

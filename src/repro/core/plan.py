@@ -16,7 +16,7 @@ from __future__ import annotations
 import copy
 import itertools
 from dataclasses import dataclass, field
-from typing import Callable, Iterator, Optional, Sequence
+from typing import Iterator, Optional, Sequence
 
 # ---------------------------------------------------------------------------
 # Relational predicate expressions (for σ). Small AST so pushdown can reason

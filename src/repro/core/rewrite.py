@@ -21,18 +21,15 @@
 """
 from __future__ import annotations
 
-from typing import Optional
 
 from .plan import (
     Aggregate,
     Catalog,
     CrossJoin,
-    Expr,
     Filter,
     Join,
     Node,
     Project,
-    Scan,
     SemanticFilter,
     SemanticJoin,
     SemanticProject,

@@ -28,8 +28,8 @@ import re
 from dataclasses import dataclass
 from typing import Optional
 
-from .builder import Q, template_columns
-from .plan import BoolOp, Cmp, Col, Const, Expr, Node
+from .builder import Q
+from .plan import BoolOp, Cmp, Col, Expr, Node
 
 _TOKEN_RE = re.compile(
     r"""

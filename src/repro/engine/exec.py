@@ -4,6 +4,13 @@ Vectorised, mask-based execution (DuckDB-pipeline analogue, DESIGN.md §4.2):
 
 * σ / SF update validity masks (no materialisation);
 * ⋈ / × / γ / sort / limit materialise compacted outputs;
+* γ groups key rows through the same ``hash_dedup`` kernel the semantic
+  pipeline uses (arbitrary-dtype keys become int32 codes) and reduces
+  every aggregate column in ONE segmented pass (``segmented_reduce``
+  ops) instead of a per-group Python loop;
+* ⋈ builds its match lists from a hash-grouped build side + segment
+  offsets (``join_match_lists``) instead of argsort + double
+  searchsorted, and shares its compact/gather output path with ×;
 * semantic operators stack the referenced row_ids of *valid* rows into an
   (N, C) key matrix, collapse duplicates with the ``hash_dedup`` kernel,
   render prompts only for first-occurrence representatives, and scatter
@@ -15,15 +22,15 @@ The executor records the quantities the paper's cost model predicts:
 ``llm_calls`` (distinct backend invocations = C_LLM), ``rel_rows`` (rows
 processed by relational operators = C_rel) and ``probe_rows`` (cache
 lookups triggered by pulled-up filters). ``Executor(vectorized=False)``
-keeps the per-row reference path for equivalence testing; both paths
-produce identical results and identical llm_calls / cache_hits /
-null_skipped accounting.
+keeps the per-row / per-group reference paths for equivalence testing;
+both paths produce identical results (rows AND row order — a LIMIT
+directly above a join or group-by observes it) and identical llm_calls /
+cache_hits / null_skipped accounting.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -49,6 +56,12 @@ from ..core.plan import (
     Union,
 )
 from ..kernels.hash_dedup.ops import dedup_representatives
+from ..kernels.segmented_reduce.ops import (
+    group_key_codes,
+    join_match_lists,
+    make_segment_plan,
+    segmented_aggregate,
+)
 from ..semantic.runner import SemanticResult, SemanticRunner
 from .table import Database, Table, as_column
 
@@ -238,20 +251,36 @@ class Executor:
         rt = right.compact()
         lkv = np.asarray(lt.col(lk))
         rkv = np.asarray(rt.col(rk))
-        order = np.argsort(rkv, kind="stable")
-        rk_sorted = rkv[order]
-        lo = np.searchsorted(rk_sorted, lkv, "left")
-        hi = np.searchsorted(rk_sorted, lkv, "right")
-        counts = hi - lo
-        total = int(counts.sum())
-        out_l = np.repeat(np.arange(len(lkv)), counts)
-        starts = np.repeat(lo, counts)
-        within = np.arange(total) - np.repeat(np.cumsum(counts) - counts, counts)
-        out_r = order[starts + within]
-        lcols = lt.gather(out_l).columns
-        rcols = rt.gather(out_r).columns
-        cols = {**lcols, **rcols}
-        return Table(columns=cols, valid=jnp.ones(total, dtype=bool))
+        if self.vectorized:
+            # hash-grouped build side + segment offsets; identical output
+            # rows in identical order to the reference below
+            out_l, out_r = join_match_lists(lkv, rkv)
+        else:
+            order = np.argsort(rkv, kind="stable")
+            rk_sorted = rkv[order]
+            lo = np.searchsorted(rk_sorted, lkv, "left")
+            hi = np.searchsorted(rk_sorted, lkv, "right")
+            counts = hi - lo
+            total = int(counts.sum())
+            out_l = np.repeat(np.arange(len(lkv)), counts)
+            starts = np.repeat(lo, counts)
+            within = np.arange(total) - np.repeat(
+                np.cumsum(counts) - counts, counts)
+            out_r = order[starts + within]
+        return self._gather_joined(lt, rt, out_l, out_r)
+
+    @staticmethod
+    def _gather_joined(lt: Table, rt: Table, out_l: np.ndarray,
+                       out_r: np.ndarray) -> Table:
+        """Materialise join output columns with ONE gather per column.
+        Shared by ⋈ and ×; host-side (string/64-bit) columns pass through
+        ``as_column`` exactly once instead of being densified into two
+        intermediate tables."""
+        cols = {k: as_column(np.asarray(v)[out_l])
+                for k, v in lt.columns.items()}
+        for k, v in rt.columns.items():
+            cols[k] = as_column(np.asarray(v)[out_r])
+        return Table(columns=cols, valid=jnp.ones(len(out_l), dtype=bool))
 
     def _cross_join(self, left: Table, right: Table) -> Table:
         lt = left.compact()
@@ -262,8 +291,7 @@ class Executor:
                 f"cross join of {n1}x{n2} exceeds MAX_CROSS_ROWS")
         out_l = np.repeat(np.arange(n1), n2)
         out_r = np.tile(np.arange(n2), n1)
-        cols = {**lt.gather(out_l).columns, **rt.gather(out_r).columns}
-        return Table(columns=cols, valid=jnp.ones(n1 * n2, dtype=bool))
+        return self._gather_joined(lt, rt, out_l, out_r)
 
     def _aggregate(self, node: Aggregate, child: Table) -> Table:
         t = child.compact()
@@ -274,6 +302,14 @@ class Executor:
                 cols[f"agg.{name}"] = as_column(
                     [self._agg_value(func, t, c, np.arange(n))])
             return Table(columns=cols, valid=jnp.ones(1, dtype=bool))
+        if not self.vectorized or n == 0:
+            return self._aggregate_ref(node, t)
+        return self._aggregate_vectorized(node, t)
+
+    def _aggregate_ref(self, node: Aggregate, t: Table) -> Table:
+        """Per-group reference path: O(G*N) ``np.nonzero`` scan per group
+        and aggregate column. Kept for equivalence testing (and the n == 0
+        case, whose empty-column dtypes it defines)."""
         keys = np.stack([np.asarray(t.col(k)) for k in node.group_by], axis=1)
         uniq, inverse = np.unique(keys, axis=0, return_inverse=True)
         g = uniq.shape[0]
@@ -289,6 +325,40 @@ class Executor:
             # numpy promotion keeps integer aggregates integral (int64);
             # as_column keeps 64-bit results host-side at full precision
             cols[f"agg.{name}"] = as_column(vals)
+        return Table(columns=cols, valid=jnp.ones(g, dtype=bool))
+
+    def _aggregate_vectorized(self, node: Aggregate, t: Table) -> Table:
+        """Grouped aggregation in one segmented pass per aggregate column.
+
+        Group keys become per-column int32 codes (``group_key_codes``),
+        the ``hash_dedup`` kernel collapses code rows to group ids, and
+        ``segmented_aggregate`` reduces each column over the group
+        segments — no per-group Python loop. Groups are reordered to the
+        reference path's ``np.unique(axis=0)`` lexicographic order so
+        order-sensitive downstream operators (LIMIT) see identical rows;
+        key columns are gathered from the originals, preserving dtypes
+        without the reference's promotion round-trip.
+        """
+        key_vals = [np.asarray(t.col(k)) for k in node.group_by]
+        codes = group_key_codes(key_vals)
+        _, reps, inverse = dedup_representatives(codes)
+        g = len(reps)
+        # codes are order-isomorphic to key values, so lexsorting the
+        # representatives' code rows (primary = first group-by column)
+        # reproduces np.unique(axis=0)'s group order
+        grp_order = np.lexsort(
+            tuple(codes[reps, j] for j in range(codes.shape[1] - 1, -1, -1)))
+        group_id = np.empty(g, dtype=np.int64)
+        group_id[grp_order] = np.arange(g)
+        plan = make_segment_plan(group_id[inverse], g)
+        reps_sorted = reps[grp_order]
+        cols = {}
+        for i, k in enumerate(node.group_by):
+            cols[k] = as_column(key_vals[i][reps_sorted])
+        for func, c, name in node.aggs:
+            values = None if func == "count" else np.asarray(t.col(c))
+            cols[f"agg.{name}"] = as_column(
+                segmented_aggregate(plan, values, func))
         return Table(columns=cols, valid=jnp.ones(g, dtype=bool))
 
     @staticmethod

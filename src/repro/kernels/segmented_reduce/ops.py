@@ -1,0 +1,254 @@
+"""Segmented-reduction ops for the relational path.
+
+Three layers, mirroring ``hash_dedup``:
+
+* ``segment_reduce`` — jit'd device dispatch (Pallas kernel on TPU, jnp
+  ``segment_*`` elsewhere) with padded static shapes;
+* ``segment_reduce_host`` / ``segment_count`` — host-facing wrappers that
+  bucket N and the segment count to powers of two before the jit boundary
+  so varying batch sizes reuse a bounded set of compiles (the same
+  contract as ``hash_dedup.ops.dedup_representatives``);
+* the executor-facing grouping toolkit: ``group_key_codes`` (per-column
+  int32 codes for arbitrary-dtype group keys, feeding the ``hash_dedup``
+  kernel), ``SegmentPlan``/``segmented_aggregate`` (one-pass grouped
+  aggregates preserving the executor's exactness contract: integral
+  counts, int64-exact integer sum, float64 accumulation, dtype-preserving
+  min/max incl. strings) and ``join_match_lists`` (hash-grouped build
+  side + segment offsets replacing argsort + double searchsorted).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .ref import segment_reduce_jnp
+from .segmented_reduce import OPS, reduce_identity, segment_reduce_kernel
+
+
+@partial(jax.jit, static_argnames=("num_segments", "op", "block_rows",
+                                   "block_segments", "impl"))
+def segment_reduce(values, segment_ids, *, num_segments: int,
+                   op: str = "sum", block_rows: int = 256,
+                   block_segments: int = 512, impl: str = "auto"):
+    """(N,) values + (N,) int32 segment ids -> (num_segments,) reduction.
+    Empty segments yield the op's identity."""
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return segment_reduce_jnp(values, segment_ids, num_segments, op)
+    n = values.shape[0]
+    pad = (-n) % block_rows
+    if pad:
+        # identity-valued pad rows in segment 0 cannot perturb any result
+        ident = reduce_identity(op, np.dtype(values.dtype))
+        values = jnp.concatenate(
+            [values, jnp.full((pad,), ident, dtype=values.dtype)])
+        segment_ids = jnp.concatenate(
+            [segment_ids, jnp.zeros((pad,), dtype=segment_ids.dtype)])
+    gpad = (-num_segments) % block_segments
+    out = segment_reduce_kernel(
+        values, segment_ids, num_segments + gpad, op=op,
+        block_rows=block_rows, block_segments=block_segments,
+        interpret=(impl == "interpret"))
+    return out[:num_segments]
+
+
+def _pow2_bucket(n: int, floor: int) -> int:
+    return max(floor, 1 << (max(n, 1) - 1).bit_length())
+
+
+def segment_reduce_host(values, segment_ids, num_segments: int,
+                        op: str = "sum", *, impl: str = "auto") -> np.ndarray:
+    """Host-facing ``segment_reduce``: buckets both the row count and the
+    segment count to powers of two before the jit boundary (bounded
+    compiles across varying table sizes), pads with identity rows and
+    slices the real segments back out."""
+    if op not in OPS:
+        raise ValueError(f"op must be one of {OPS}, got {op!r}")
+    v = np.ascontiguousarray(values)
+    seg = np.ascontiguousarray(segment_ids, dtype=np.int32)
+    if num_segments == 0:
+        return np.empty(0, dtype=v.dtype)
+    if len(v) == 0:
+        return np.full(num_segments, reduce_identity(op, v.dtype),
+                       dtype=v.dtype)
+    n_bucket = _pow2_bucket(len(v), 1024)
+    g_bucket = _pow2_bucket(num_segments, 512)
+    if n_bucket != len(v):
+        ident = reduce_identity(op, v.dtype)
+        v = np.concatenate([v, np.full(n_bucket - len(v), ident,
+                                       dtype=v.dtype)])
+        seg = np.concatenate([seg, np.zeros(n_bucket - len(seg),
+                                            dtype=np.int32)])
+    out = segment_reduce(jnp.asarray(v), jnp.asarray(seg),
+                         num_segments=g_bucket, op=op, impl=impl)
+    return np.asarray(out)[:num_segments]
+
+
+def segment_count(segment_ids, num_segments: int, *,
+                  impl: str = "auto") -> np.ndarray:
+    """Per-segment row counts as int64 (the join-build histogram).
+    ``impl`` is "host" (``np.bincount``) or any ``segment_reduce`` token
+    ("ref"/"kernel"/"interpret"); "auto" picks host off-TPU, the kernel
+    on TPU."""
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "host"
+    if impl == "host":
+        return np.bincount(np.asarray(segment_ids),
+                           minlength=num_segments).astype(np.int64)
+    ones = np.ones(len(segment_ids), dtype=np.int32)
+    return segment_reduce_host(ones, segment_ids, num_segments, "sum",
+                               impl=impl).astype(np.int64)
+
+
+# ------------------------------------------------------------------ grouping
+
+def group_key_codes(key_columns: list) -> np.ndarray:
+    """Encode arbitrary-dtype group-key columns as an (N, C) int32 code
+    matrix for the ``hash_dedup`` kernel.
+
+    Codes are order-isomorphic to the column values (np.unique's sorted
+    code space), so lexsorting code rows reproduces the group order of
+    ``np.unique(keys, axis=0)`` on the stacked key matrix — which the
+    reference aggregate path uses, and which downstream order-sensitive
+    operators (a LIMIT directly above a group-by) observe.
+
+    NaN keys follow the reference semantics: ``np.unique(axis=0)`` never
+    equates NaN rows, so every NaN key value gets its own code (ascending
+    in row order — NaN groups sort last, in first-appearance order).
+    """
+    out = []
+    for kv in key_columns:
+        kv = np.asarray(kv)
+        if kv.dtype.kind in "fc" and np.isnan(kv).any():
+            isn = np.isnan(kv)
+            uniq, inv = np.unique(kv[~isn], return_inverse=True)
+            codes = np.empty(len(kv), dtype=np.int64)
+            codes[~isn] = inv
+            codes[isn] = len(uniq) + np.arange(int(isn.sum()))
+            out.append(codes)
+        else:
+            out.append(np.unique(kv, return_inverse=True)[1].astype(np.int64))
+    return np.stack(out, axis=1).astype(np.int32)
+
+
+@dataclass(frozen=True)
+class SegmentPlan:
+    """Host grouping plan shared by every aggregate column of one
+    group-by: ``seg`` assigns each row its group id, ``order`` is the
+    stable sort by group, ``starts``/``counts`` delimit the segments."""
+
+    seg: np.ndarray
+    num_groups: int
+    counts: np.ndarray
+    order: np.ndarray
+    starts: np.ndarray
+
+
+def make_segment_plan(seg, num_groups: int) -> SegmentPlan:
+    seg = np.asarray(seg)
+    counts = np.bincount(seg, minlength=num_groups).astype(np.int64)
+    order = np.argsort(seg, kind="stable")
+    starts = np.zeros(num_groups, dtype=np.int64)
+    if num_groups:
+        np.cumsum(counts[:-1], out=starts[1:])
+    return SegmentPlan(seg=seg, num_groups=num_groups, counts=counts,
+                       order=order, starts=starts)
+
+
+_DEVICE_DTYPES = (np.dtype(np.int32), np.dtype(np.float32))
+
+
+def segmented_aggregate(plan: SegmentPlan, values, func: str, *,
+                        impl: str = "auto") -> np.ndarray:
+    """One segmented pass over all groups for one aggregate column.
+
+    Exactness contract (the per-group reference's guarantees): count is
+    integral int64; integer sum accumulates in int64; float sum and avg
+    accumulate in float64; min/max preserve the column dtype (strings
+    included) and propagate NaN like ``np.min``/``np.max``. min/max over
+    int32/float32 columns run through the device ``segment_reduce``;
+    everything needing 64-bit accumulation (or a non-device dtype) stays
+    host-side. Every group must be non-empty (true by construction when
+    groups come from observed key rows).
+    """
+    if func == "count":
+        return plan.counts
+    v = np.asarray(values)
+    if plan.num_groups == 0:
+        if func in ("min", "max"):
+            return np.empty(0, dtype=v.dtype)
+        if func != "avg" and v.dtype.kind in "biu":
+            return np.zeros(0, dtype=np.int64)
+        return np.zeros(0, dtype=np.float64)
+    if func in ("min", "max"):
+        if v.dtype in _DEVICE_DTYPES:
+            return segment_reduce_host(v, plan.seg, plan.num_groups, func,
+                                       impl=impl)
+        if v.dtype.kind in "biufc":
+            ufunc = np.minimum if func == "min" else np.maximum
+            return ufunc.reduceat(v[plan.order], plan.starts)
+        # strings / objects: no reduceat ufunc — sort within segments and
+        # take the boundary element of each
+        order2 = np.lexsort((v, plan.seg))
+        idx = plan.starts if func == "min" else plan.starts + plan.counts - 1
+        return v[order2[idx]]
+    sorted_v = v[plan.order]
+    if func == "sum":
+        acc = sorted_v.astype(
+            np.int64 if v.dtype.kind in "bui" else np.float64)
+        return np.add.reduceat(acc, plan.starts)
+    if func == "avg":
+        sums = np.add.reduceat(sorted_v.astype(np.float64), plan.starts)
+        return sums / plan.counts
+    raise ValueError(f"unsupported aggregate {func!r}")
+
+
+# ---------------------------------------------------------------------- join
+
+def encode_join_keys(probe_keys, build_keys
+                     ) -> tuple[np.ndarray, np.ndarray, int]:
+    """Shared sorted code space over both join sides. Codes are
+    order-isomorphic to the values (NaN collapses to the top code,
+    matching searchsorted's NaN-matches-NaN behaviour), so stable sorts
+    over codes equal stable sorts over values."""
+    n_probe = len(probe_keys)
+    both = np.concatenate([np.asarray(probe_keys), np.asarray(build_keys)])
+    uniq, codes = np.unique(both, return_inverse=True)
+    codes = codes.astype(np.int32)
+    return codes[:n_probe], codes[n_probe:], len(uniq)
+
+
+def join_match_lists(probe_keys, build_keys, *, impl: str = "auto"
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """Equi-join match lists from a hash-grouped build side.
+
+    The build side is grouped by key code (one segment per distinct key);
+    probing is then a direct histogram/offset lookup per probe row —
+    replacing the reference's argsort + double searchsorted. Output
+    ordering is identical to the reference: probe-major, and within one
+    probe row the build matches appear in stable build-key sort order.
+    """
+    n_probe, n_build = len(probe_keys), len(build_keys)
+    empty = np.zeros(0, dtype=np.int64)
+    if n_probe == 0 or n_build == 0:
+        return empty, empty
+    probe_codes, build_codes, num_codes = encode_join_keys(
+        probe_keys, build_keys)
+    counts_by_code = segment_count(build_codes, num_codes, impl=impl)
+    build_order = np.argsort(build_codes, kind="stable")
+    offsets = np.zeros(num_codes, dtype=np.int64)
+    np.cumsum(counts_by_code[:-1], out=offsets[1:])
+    cnt = counts_by_code[probe_codes]
+    total = int(cnt.sum())
+    if total == 0:
+        return empty, empty
+    out_probe = np.repeat(np.arange(n_probe, dtype=np.int64), cnt)
+    first = np.cumsum(cnt) - cnt
+    within = np.arange(total, dtype=np.int64) - np.repeat(first, cnt)
+    out_build = build_order[np.repeat(offsets[probe_codes], cnt) + within]
+    return out_probe, out_build

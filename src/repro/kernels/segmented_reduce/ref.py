@@ -1,0 +1,51 @@
+"""Oracles for segmented reduction: pure-jnp (``jax.ops.segment_*``) and
+exact numpy (sort + ``ufunc.reduceat``)."""
+from __future__ import annotations
+
+import numpy as np
+from jax import ops as jax_ops
+
+
+def segment_reduce_jnp(values, segment_ids, num_segments: int, op: str):
+    """(N,) values, (N,) int segment ids -> (num_segments,) reduction.
+    Empty segments yield the op's identity (jnp ``segment_*`` semantics)."""
+    fn = {"sum": jax_ops.segment_sum, "min": jax_ops.segment_min,
+          "max": jax_ops.segment_max}[op]
+    return fn(values, segment_ids, num_segments=num_segments)
+
+
+def segment_reduce_np(values, segment_ids, num_segments: int, op: str):
+    """Exact numpy oracle, matching ``segment_reduce_jnp`` (including the
+    identity fill of empty segments)."""
+    values = np.asarray(values)
+    seg = np.asarray(segment_ids)
+    from .segmented_reduce import reduce_identity
+
+    out = np.full(num_segments, reduce_identity(op, values.dtype),
+                  dtype=values.dtype)
+    if len(values) == 0 or num_segments == 0:
+        return out
+    order = np.argsort(seg, kind="stable")
+    sseg = seg[order]
+    sval = values[order]
+    starts = np.nonzero(np.concatenate([[True], sseg[1:] != sseg[:-1]]))[0]
+    ufunc = {"sum": np.add, "min": np.minimum, "max": np.maximum}[op]
+    out[sseg[starts]] = ufunc.reduceat(sval, starts)
+    return out
+
+
+def segment_reduce_brute(values, segment_ids, num_segments: int, op: str):
+    """Per-group python loop — the O(G*N) shape the kernel replaces; kept
+    as the simplest possible cross-check for property tests."""
+    values = np.asarray(values)
+    seg = np.asarray(segment_ids)
+    from .segmented_reduce import reduce_identity
+
+    red = {"sum": np.sum, "min": np.min, "max": np.max}[op]
+    out = np.full(num_segments, reduce_identity(op, values.dtype),
+                  dtype=values.dtype)
+    for g in range(num_segments):
+        v = values[seg == g]
+        if len(v):
+            out[g] = red(v)
+    return out

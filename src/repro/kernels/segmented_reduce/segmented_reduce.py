@@ -1,0 +1,90 @@
+"""Segmented reduction — Pallas kernel (PLOP's relational hot spot).
+
+Grouped aggregation and hash-join builds both reduce row values into
+per-segment accumulators (group-by groups, join-key buckets). The kernel
+is a two-level tiled masked reduction: grid (segment tiles, row tiles),
+one (block_rows,) value/segment-id strip in VMEM per step, compared
+against the tile's segment range with a broadcasted iota and reduced into
+a persistent (block_segments,) accumulator block. The TPU grid iterates
+the trailing (row) dimension sequentially, so the accumulator block for a
+segment tile is initialised at the first row tile and accumulated across
+the rest — the standard Pallas accumulate pattern.
+
+Exact int64 accumulation happens host-side in ops.py (the executor's
+precision contract); the kernel mirrors jnp ``segment_sum``/``min``/
+``max`` semantics at the input dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+OPS = ("sum", "min", "max")
+
+
+def reduce_identity(op: str, dtype):
+    """Neutral element for ``op`` at ``dtype`` (padding rows and empty
+    segments yield it, matching jnp ``segment_*``: ±inf for floats,
+    iinfo extremes for ints)."""
+    if op == "sum":
+        return np.zeros((), dtype=dtype)[()]
+    if np.issubdtype(dtype, np.floating):
+        sign = 1.0 if op == "min" else -1.0
+        return np.asarray(sign * np.inf, dtype=dtype)[()]
+    info = np.iinfo(dtype)
+    return info.max if op == "min" else info.min
+
+
+def _seg_reduce_kernel(vals_ref, seg_ref, out_ref, *, op: str,
+                       block_segments: int):
+    g = pl.program_id(0)
+    r = pl.program_id(1)
+    ident = reduce_identity(op, out_ref.dtype)
+
+    @pl.when(r == 0)
+    def _():
+        out_ref[...] = jnp.full_like(out_ref[...], ident)
+
+    vals = vals_ref[...]                       # (block_rows,)
+    seg = seg_ref[...]                         # (block_rows,)
+    block_rows = vals.shape[0]
+    local = seg - g * block_segments           # position inside this tile
+    cols = jax.lax.broadcasted_iota(jnp.int32, (block_rows, block_segments), 1)
+    hit = local[:, None] == cols               # (block_rows, block_segments)
+    masked = jnp.where(hit, vals[:, None], jnp.asarray(ident, vals.dtype))
+    if op == "sum":
+        out_ref[...] += jnp.sum(masked, axis=0)
+    elif op == "min":
+        out_ref[...] = jnp.minimum(out_ref[...], jnp.min(masked, axis=0))
+    else:
+        out_ref[...] = jnp.maximum(out_ref[...], jnp.max(masked, axis=0))
+
+
+def segment_reduce_kernel(values, segment_ids, num_segments: int, *,
+                          op: str = "sum", block_rows: int = 256,
+                          block_segments: int = 512,
+                          interpret: bool = False):
+    """values, segment_ids: (N,) with N % block_rows == 0 and
+    num_segments % block_segments == 0 (ops.py pads) -> (num_segments,)
+    per-segment reduction in the values' dtype."""
+    if op not in OPS:
+        raise ValueError(f"op must be one of {OPS}, got {op!r}")
+    n = values.shape[0]
+    grid = (num_segments // block_segments, n // block_rows)
+    kernel = functools.partial(_seg_reduce_kernel, op=op,
+                               block_segments=block_segments)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows,), lambda g, r: (r,)),
+            pl.BlockSpec((block_rows,), lambda g, r: (r,)),
+        ],
+        out_specs=pl.BlockSpec((block_segments,), lambda g, r: (g,)),
+        out_shape=jax.ShapeDtypeStruct((num_segments,), values.dtype),
+        interpret=interpret,
+    )(values, segment_ids)

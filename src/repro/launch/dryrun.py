@@ -20,7 +20,6 @@ from ..models import (  # noqa: E402
     abstract_params,
     cache_specs,
     decode_step,
-    forward_loss,
     param_specs,
     prefill,
 )

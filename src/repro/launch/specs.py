@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import get_config
-from ..models import abstract_cache, abstract_params
+from ..models import abstract_cache
 from ..models.config import ModelConfig
 from ..sharding.policy import ShardingPolicy
 

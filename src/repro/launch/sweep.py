@@ -9,13 +9,12 @@ are recorded as <cell>.FAILED with the stderr tail; the sweep continues.
 from __future__ import annotations
 
 import argparse
-import json
 import subprocess
 import sys
 import time
 from pathlib import Path
 
-from .specs import SHAPES, all_cells
+from .specs import all_cells
 
 
 def cell_path(out: Path, arch: str, shape: str, mesh: str) -> Path:

@@ -17,10 +17,9 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..configs import get_config, get_tiny
-from ..models import init_params, param_shardings, param_specs
+from ..models import init_params, param_specs
 from ..sharding.policy import ShardingPolicy
 from ..training.checkpoint import CheckpointManager
 from ..training.data import TokenStream

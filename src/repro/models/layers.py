@@ -13,13 +13,11 @@ roofline with fake FLOPs).
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from ..sharding.policy import ShardingPolicy

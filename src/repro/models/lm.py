@@ -15,12 +15,10 @@ assignment: patches/frames arrive as precomputed embeddings.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..sharding.policy import ShardingPolicy
 from .config import ModelConfig
@@ -127,7 +125,7 @@ def _scan_blocks(cfg, policy, params, h, positions, mode, prefix,
 
 def _collect_kv(cfg, bp, x_normed, positions):
     """K/V (or latent) of one layer for prefill cache construction."""
-    from .layers import _mla_kv_latent, _qkv, rope
+    from .layers import _mla_kv_latent, rope
 
     if cfg.family == "ssm":
         return None

@@ -225,7 +225,6 @@ def param_axes(cfg: ModelConfig) -> dict:
 
 
 def param_specs(cfg: ModelConfig, policy: ShardingPolicy):
-    from jax.sharding import PartitionSpec
 
     def make(path, shape, axes, scale):
         return policy.spec(*axes)

@@ -19,7 +19,7 @@ Both count invocations so benchmarks can report C_LLM exactly.
 from __future__ import annotations
 
 import hashlib
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional, Sequence
 
 

@@ -12,7 +12,7 @@ analogue (batch dedup before the backend call) lives in
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Hashable, Optional, Sequence
 
 

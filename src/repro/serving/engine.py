@@ -12,7 +12,6 @@ straggler mitigation (DESIGN.md §8).
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Optional, Sequence
 

@@ -14,7 +14,7 @@ checkpoint is the other half). Two generators:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 

@@ -10,8 +10,6 @@ PartitionSpec as the parameter itself.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -160,7 +158,8 @@ def apply_updates(params, grads, state, cfg: AdamWConfig):
 
     flat_p, treedef = jax.tree.flatten(params)
     flat_g = treedef.flatten_up_to(grads)
-    is_q = lambda x: isinstance(x, dict) and set(x) == {"q", "s"}
+    def is_q(x):
+        return isinstance(x, dict) and set(x) == {"q", "s"}
     flat_m = jax.tree.flatten(state["m"], is_leaf=is_q)[0]
     flat_v = jax.tree.flatten(state["v"], is_leaf=is_q)[0]
     out = [upd(p, g, m, v) for p, g, m, v in

@@ -7,7 +7,6 @@ for jit with donated (params, opt_state).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax

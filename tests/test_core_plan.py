@@ -10,12 +10,10 @@ from repro.core import (
     CrossJoin,
     Filter,
     Join,
-    Limit,
     Project,
     Q,
     Scan,
     SemanticFilter,
-    SemanticJoin,
     SemanticProject,
     col,
     count_ops,

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import Q, col
+from repro.core import Q
 from repro.core.plan import Sort
 from repro.engine import Database, Executor
 from repro.engine.table import Table, as_column

@@ -19,7 +19,7 @@ from repro.kernels.decode_attention.ref import decode_attention_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.hash_dedup.ops import dedup_mask, hash_rows
-from repro.kernels.hash_dedup.ref import first_occurrence_ref, hash_rows_ref
+from repro.kernels.hash_dedup.ref import hash_rows_ref
 from repro.kernels.ssd.ops import ssd
 from repro.models.layers import ssd_reference
 

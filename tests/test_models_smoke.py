@@ -14,7 +14,6 @@ from repro.models import (
     decode_step,
     forward,
     forward_loss,
-    init_cache,
     init_params,
     prefill,
 )

@@ -1,0 +1,241 @@
+"""segmented_reduce kernel family: interpret-mode Pallas vs pure-jnp vs
+exact-numpy oracles across shape/dtype/op sweeps, plus the host-exact
+aggregation helpers and join match-list builder the executor uses."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+# hypothesis is a dev-only dependency (requirements-dev.txt). Collection
+# must never hard-fail without it: only the property tests skip.
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+from repro.kernels.segmented_reduce.ops import (
+    group_key_codes,
+    join_match_lists,
+    make_segment_plan,
+    segment_count,
+    segment_reduce,
+    segment_reduce_host,
+    segmented_aggregate,
+)
+from repro.kernels.segmented_reduce.ref import (
+    segment_reduce_brute,
+    segment_reduce_np,
+)
+
+OPS = ("sum", "min", "max")
+
+
+def _tol(dtype, op):
+    if np.dtype(dtype).kind == "f" and op == "sum":
+        # summation-order differences only (pairwise vs sequential)
+        return dict(rtol=1e-5, atol=1e-4)
+    return dict(rtol=0, atol=0)
+
+
+class TestSegmentReduce:
+    @pytest.mark.parametrize("op", OPS)
+    @pytest.mark.parametrize("dtype", [np.float32, np.int32])
+    @pytest.mark.parametrize("n,g", [
+        (100, 7),      # row padding
+        (1024, 512),   # exact tiles
+        (1000, 600),   # both padded, multiple segment tiles
+        (257, 1),      # all rows in one group
+        (64, 64),      # all distinct
+    ])
+    def test_kernel_vs_oracles(self, op, dtype, n, g):
+        rng = np.random.default_rng(0)
+        v = (rng.normal(size=n) * 100).astype(dtype)
+        s = rng.integers(0, g, n).astype(np.int32)
+        ref = segment_reduce_np(v, s, g, op)
+        np.testing.assert_allclose(
+            ref, segment_reduce_brute(v, s, g, op), **_tol(dtype, op))
+        got_jnp = np.asarray(segment_reduce(
+            jnp.asarray(v), jnp.asarray(s), num_segments=g, op=op,
+            impl="ref"))
+        np.testing.assert_allclose(got_jnp, ref, **_tol(dtype, op))
+        got_kernel = segment_reduce_host(v, s, g, op, impl="interpret")
+        np.testing.assert_allclose(got_kernel, ref, **_tol(dtype, op))
+
+    def test_empty_segments_get_identity(self):
+        v = np.asarray([1.0, 2.0], dtype=np.float32)
+        s = np.asarray([0, 3], dtype=np.int32)
+        out = segment_reduce_host(v, s, 5, "sum")
+        np.testing.assert_array_equal(out, [1.0, 0.0, 0.0, 2.0, 0.0])
+
+    def test_empty_input(self):
+        out = segment_reduce_host(np.zeros(0, np.float32),
+                                  np.zeros(0, np.int32), 3, "max")
+        assert out.shape == (3,)
+        out = segment_reduce_host(np.zeros(0, np.float32),
+                                  np.zeros(0, np.int32), 0, "sum")
+        assert out.shape == (0,)
+
+    def test_segment_count(self):
+        s = np.asarray([2, 0, 2, 2, 1], dtype=np.int32)
+        np.testing.assert_array_equal(segment_count(s, 4), [1, 1, 3, 0])
+        assert segment_count(s, 4).dtype == np.int64
+
+
+class TestSegmentedAggregate:
+    def _plan(self, seg):
+        seg = np.asarray(seg)
+        return make_segment_plan(seg, int(seg.max()) + 1 if len(seg) else 0)
+
+    def test_count_integral(self):
+        plan = self._plan([0, 1, 0, 0])
+        out = segmented_aggregate(plan, None, "count")
+        assert out.dtype == np.int64
+        np.testing.assert_array_equal(out, [3, 1])
+
+    def test_int_sum_exact_past_2p24(self):
+        plan = self._plan([0, 0])
+        v = np.asarray([2**23, 2**23 + 1], dtype=np.int32)
+        out = segmented_aggregate(plan, v, "sum")
+        assert out.dtype == np.int64 and out.tolist() == [2**24 + 1]
+
+    def test_float_sum_accumulates_float64(self):
+        plan = self._plan([0, 0, 0])
+        v = np.asarray([1e8, 1.0, -1e8], dtype=np.float32)
+        out = segmented_aggregate(plan, v, "sum")
+        assert out.dtype == np.float64 and out[0] == 1.0
+
+    def test_avg_float64(self):
+        plan = self._plan([0, 0, 1])
+        out = segmented_aggregate(
+            plan, np.asarray([1, 2, 5], dtype=np.int32), "avg")
+        assert out.dtype == np.float64
+        np.testing.assert_allclose(out, [1.5, 5.0])
+
+    def test_min_max_preserve_dtype_and_nan(self):
+        plan = self._plan([0, 0, 1, 1])
+        vi = np.asarray([3, -7, 9, 9], dtype=np.int32)
+        assert segmented_aggregate(plan, vi, "min").dtype == np.int32
+        np.testing.assert_array_equal(
+            segmented_aggregate(plan, vi, "max"), [3, 9])
+        vf = np.asarray([1.0, np.nan, 2.0, 3.0], dtype=np.float32)
+        mn = segmented_aggregate(plan, vf, "min")
+        assert np.isnan(mn[0]) and mn[1] == 2.0  # NaN propagates like np.min
+
+    def test_min_max_strings(self):
+        plan = self._plan([0, 1, 0, 1])
+        v = np.asarray(["pear", "fig", "apple", "quince"])
+        np.testing.assert_array_equal(
+            segmented_aggregate(plan, v, "min"), ["apple", "fig"])
+        np.testing.assert_array_equal(
+            segmented_aggregate(plan, v, "max"), ["pear", "quince"])
+
+    def test_int64_stays_host_exact(self):
+        plan = self._plan([0, 0])
+        v = np.asarray([2**40, 2**40 + 3], dtype=np.int64)
+        assert segmented_aggregate(plan, v, "sum").tolist() == [2**41 + 3]
+        assert segmented_aggregate(plan, v, "max").tolist() == [2**40 + 3]
+
+
+class TestGroupKeyCodes:
+    def test_codes_order_isomorphic(self):
+        kv = np.asarray([30, 10, 20, 10], dtype=np.int32)
+        codes = group_key_codes([kv])[:, 0]
+        np.testing.assert_array_equal(codes, [2, 0, 1, 0])
+
+    def test_nan_rows_stay_distinct(self):
+        kv = np.asarray([1.0, np.nan, np.nan, 2.0], dtype=np.float32)
+        codes = group_key_codes([kv])[:, 0]
+        # NaN codes: above every non-NaN code, ascending in row order
+        assert codes[1] != codes[2]
+        assert codes[1] > codes[3] and codes[2] > codes[1]
+
+    def test_mixed_dtypes_no_promotion_loss(self):
+        big = np.asarray([2**53 + 1, 2**53], dtype=np.int64)  # f64-collides
+        f = np.asarray([0.5, 0.5], dtype=np.float32)
+        codes = group_key_codes([big, f])
+        assert not np.array_equal(codes[0], codes[1])
+
+
+class TestJoinMatchLists:
+    @staticmethod
+    def _ref(lkv, rkv):
+        order = np.argsort(rkv, kind="stable")
+        rk_sorted = rkv[order]
+        lo = np.searchsorted(rk_sorted, lkv, "left")
+        hi = np.searchsorted(rk_sorted, lkv, "right")
+        counts = hi - lo
+        total = int(counts.sum())
+        out_l = np.repeat(np.arange(len(lkv)), counts)
+        starts = np.repeat(lo, counts)
+        within = np.arange(total) - np.repeat(
+            np.cumsum(counts) - counts, counts)
+        return out_l, order[starts + within]
+
+    def _check(self, lkv, rkv):
+        el, er = self._ref(lkv, rkv)
+        gl, gr = join_match_lists(lkv, rkv)
+        np.testing.assert_array_equal(el, gl)
+        np.testing.assert_array_equal(er, gr)
+
+    def test_fuzz_matches_searchsorted_reference(self):
+        rng = np.random.default_rng(1)
+        for trial in range(150):
+            n1, n2 = int(rng.integers(0, 50)), int(rng.integers(0, 50))
+            kind = trial % 3
+            if kind == 0:
+                lkv = rng.integers(-5, 5, n1).astype(np.int32)
+                rkv = rng.integers(-5, 5, n2).astype(np.int32)
+            elif kind == 1:
+                lkv = rng.integers(-3, 3, n1).astype(np.float32)
+                rkv = rng.integers(-3, 3, n2).astype(np.float32)
+                lkv[rng.random(n1) < 0.2] = np.nan
+                rkv[rng.random(n2) < 0.2] = np.nan
+            else:
+                lkv = np.asarray([f"k{x}" for x in rng.integers(0, 6, n1)])
+                rkv = np.asarray([f"k{x}" for x in rng.integers(0, 6, n2)])
+            self._check(lkv, rkv)
+
+    def test_empty_sides(self):
+        a = np.asarray([1, 2], dtype=np.int32)
+        for lkv, rkv in [(a[:0], a), (a, a[:0]), (a[:0], a[:0])]:
+            out_l, out_r = join_match_lists(lkv, rkv)
+            assert len(out_l) == len(out_r) == 0
+
+    def test_no_matches(self):
+        out_l, out_r = join_match_lists(np.asarray([1, 2], np.int32),
+                                        np.asarray([3, 4], np.int32))
+        assert len(out_l) == len(out_r) == 0
+
+
+if not HAVE_HYPOTHESIS:
+
+    def test_segment_reduce_property_requires_hypothesis():
+        pytest.importorskip("hypothesis")
+
+else:
+    class TestSegmentReduceProperty:
+        @settings(max_examples=25, deadline=None)
+        @given(st.lists(st.tuples(st.integers(-1000, 1000),
+                                  st.integers(0, 20)),
+                        min_size=1, max_size=200),
+               st.sampled_from(OPS))
+        def test_np_ref_matches_brute(self, rows, op):
+            v = np.asarray([r[0] for r in rows], dtype=np.int32)
+            s = np.asarray([r[1] for r in rows], dtype=np.int32)
+            g = int(s.max()) + 1
+            np.testing.assert_array_equal(
+                segment_reduce_np(v, s, g, op),
+                segment_reduce_brute(v, s, g, op))
+
+        @settings(max_examples=25, deadline=None)
+        @given(st.lists(st.integers(-8, 8), min_size=0, max_size=40),
+               st.lists(st.integers(-8, 8), min_size=0, max_size=40))
+        def test_join_match_lists_vs_nested_loop(self, lks, rks):
+            lkv = np.asarray(lks, dtype=np.int32)
+            rkv = np.asarray(rks, dtype=np.int32)
+            out_l, out_r = join_match_lists(lkv, rkv)
+            expected = [(i, j) for i in range(len(lks))
+                        for j in range(len(rks)) if lks[i] == rks[j]]
+            assert sorted(zip(out_l.tolist(), out_r.tolist())) == \
+                sorted(expected)

@@ -1,6 +1,5 @@
 """Serving engine + end-to-end model-backend tests."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

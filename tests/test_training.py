@@ -1,6 +1,5 @@
 """Training substrate tests: 8-bit optimizer, checkpoint/restart (incl.
 simulated failure + bitwise-identical resume), elastic resharding."""
-import json
 import os
 import subprocess
 import sys
@@ -15,7 +14,7 @@ from repro.configs import get_tiny
 from repro.models import forward_loss, init_params
 from repro.sharding import ShardingPolicy
 from repro.training.checkpoint import CheckpointManager
-from repro.training.data import HashTokenizer, TokenStream
+from repro.training.data import TokenStream
 from repro.training.optimizer import (
     AdamWConfig,
     apply_updates,
