@@ -285,8 +285,19 @@ def rebuild_plan(
     widening any projection between its anchor and its new position so the
     referenced columns stay available (mirrors Alg. 1 lines 7-8)."""
     root = skeleton.clone()
-    # order: most selective first when stacked at the same node
-    order = sorted(range(len(lifted)), key=lambda i: lifted[i].sf.sf_id)
+
+    # order: most selective first when stacked at the same node.
+    # ``insert_above`` pushes earlier insertions upward, so iterating in
+    # DESCENDING selectivity leaves the most selective SF directly above
+    # the target — it executes first and every stacked filter above it
+    # sees the fewest rows. Hint-less SFs count as non-selective (1.0);
+    # ties resolve toward the lower sf_id at the bottom.
+    def _sel(i: int) -> float:
+        h = lifted[i].sf.selectivity_hint
+        return h if h is not None else 1.0
+
+    order = sorted(range(len(lifted)),
+                   key=lambda i: (_sel(i), lifted[i].sf.sf_id), reverse=True)
     for i in order:
         target_nid = placement[i]
         sf = lifted[i].sf

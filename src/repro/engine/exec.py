@@ -4,19 +4,25 @@ Vectorised, mask-based execution (DuckDB-pipeline analogue, DESIGN.md §4.2):
 
 * σ / SF update validity masks (no materialisation);
 * ⋈ / × / γ / sort / limit materialise compacted outputs;
-* γ groups key rows through the same ``hash_dedup`` kernel the semantic
-  pipeline uses (arbitrary-dtype keys become int32 codes) and reduces
-  every aggregate column in ONE segmented pass (``segmented_reduce``
-  ops) instead of a per-group Python loop;
-* ⋈ builds its match lists from a hash-grouped build side + segment
-  offsets (``join_match_lists``) instead of argsort + double
-  searchsorted, and shares its compact/gather output path with ×;
+* γ, ⋈ and semantic dedup all sit on the device ``group_build`` op
+  (``kernels/hash_dedup``): one sort-by-key + boundary-scan pass that
+  returns representatives, inverse scatter map, group counts and
+  segment offsets behind a single device→host fetch;
+* γ turns arbitrary-dtype keys into int32 codes, gets its group ids +
+  ``SegmentPlan`` straight from the kernel and reduces every aggregate
+  column in ONE segmented pass (``segmented_reduce`` ops);
+* ⋈ groups its build side with the same op (integer keys group by raw
+  value — exact, no host re-encode) and probes via a representative
+  searchsorted over the kernel's segment offsets, sharing its
+  compact/gather output path with ×;
 * semantic operators stack the referenced row_ids of *valid* rows into an
-  (N, C) key matrix, collapse duplicates with the ``hash_dedup`` kernel,
+  (N, C) key matrix, collapse duplicates with ``dedup_representatives``,
   render prompts only for first-occurrence representatives, and scatter
   backend results back to all N rows through the inverse mapping. The
   ``FunctionCache`` stays above this as the cross-operator dedup layer
-  (two SFs sharing a prompt still hit each other's entries).
+  (two SFs sharing a prompt still hit each other's entries); its
+  key-probe fast path recognises representatives by kernel row hash +
+  key row, so repeat operators skip even the prompt render.
 
 The executor records the quantities the paper's cost model predicts:
 ``llm_calls`` (distinct backend invocations = C_LLM), ``rel_rows`` (rows
@@ -55,11 +61,11 @@ from ..core.plan import (
     Sort,
     Union,
 )
-from ..kernels.hash_dedup.ops import dedup_representatives
+from ..kernels.hash_dedup.ops import dedup_representatives, group_build
 from ..kernels.segmented_reduce.ops import (
     group_key_codes,
     join_match_lists,
-    make_segment_plan,
+    segment_plan_from_group_build,
     segmented_aggregate,
 )
 from ..semantic.runner import SemanticResult, SemanticRunner
@@ -194,8 +200,13 @@ class Executor:
         for c in cols:
             if c in t.columns:
                 out.append(c)
-            # text columns exist only as payload; silently okay — they are
-            # reconstructed from row_id at result materialisation
+            elif c not in self.db.text_cols:
+                # text columns exist only as payload (reconstructed from
+                # row_id at result materialisation); anything else is a
+                # planner bug that must not silently drop output columns
+                raise ExecutionError(
+                    f"unknown projection column {c} "
+                    f"(have {sorted(t.columns)[:8]}...)")
         return out or list(t.columns)
 
     def _eval_pred(self, e: Expr, t: Table) -> jnp.ndarray:
@@ -215,10 +226,12 @@ class Executor:
         if isinstance(e, Cmp):
             lhs = self._eval_value(e.left, t)
             if e.op == "in":
-                vals = jnp.asarray(list(e.right))
-                return jnp.isin(lhs, vals)
+                return self._pred_in(lhs, e.right)
             if e.op == "between":
                 lo, hi = e.right
+                if self._on_host(lhs, lo) or self._on_host(lhs, hi):
+                    v = np.asarray(lhs)
+                    return jnp.asarray((v >= lo) & (v <= hi))
                 return (lhs >= lo) & (lhs <= hi)
             rhs = (
                 self._eval_value(e.right, t)
@@ -233,8 +246,43 @@ class Executor:
                 ">": lambda a, b: a > b,
                 ">=": lambda a, b: a >= b,
             }
+            if self._on_host(lhs, rhs):
+                out = np.asarray(ops[e.op](np.asarray(lhs), rhs))
+                if out.ndim == 0:  # incomparable types collapse to a scalar
+                    out = np.full(np.shape(lhs)[0], bool(out))
+                return jnp.asarray(out)
             return ops[e.op](lhs, rhs)
         raise ExecutionError(f"unsupported predicate {e}")
+
+    @staticmethod
+    def _on_host(lhs, rhs) -> bool:
+        """Host-side numpy columns (strings, 64-bit numerics kept exact
+        by ``as_column``) and constants outside int32 range must compare
+        in numpy: jnp would reject strings outright and silently wrap
+        64-bit values through 32-bit mode."""
+        if isinstance(lhs, np.ndarray) or isinstance(rhs, np.ndarray):
+            return True
+        if isinstance(rhs, str):
+            return True
+        if isinstance(rhs, (int, np.integer)) and not isinstance(rhs, bool):
+            return not -2**31 <= int(rhs) < 2**31
+        return False
+
+    @staticmethod
+    def _pred_in(lhs, values) -> jnp.ndarray:
+        """IN-list membership. Numeric lists against device columns stay
+        on device; string lists and integer values outside int32 range
+        evaluate host-side in numpy (exact — no 32-bit wrap for signed
+        OR unsigned lists). Float lists compare at the column's device
+        precision, matching scalar ``==`` semantics."""
+        vals = np.asarray(list(values))
+        if isinstance(lhs, jnp.ndarray) and vals.dtype.kind in "iufb":
+            in_range = vals.dtype.kind not in "iu" or (
+                len(vals) == 0
+                or (-2**31 <= int(vals.min()) and int(vals.max()) < 2**31))
+            if in_range:
+                return jnp.isin(lhs, jnp.asarray(vals))
+        return jnp.asarray(np.isin(np.asarray(lhs), vals))
 
     def _eval_value(self, e: Expr, t: Table):
         if isinstance(e, Col):
@@ -331,34 +379,36 @@ class Executor:
         """Grouped aggregation in one segmented pass per aggregate column.
 
         Group keys become per-column int32 codes (``group_key_codes``),
-        the ``hash_dedup`` kernel collapses code rows to group ids, and
-        ``segmented_aggregate`` reduces each column over the group
-        segments — no per-group Python loop. Groups are reordered to the
-        reference path's ``np.unique(axis=0)`` lexicographic order so
-        order-sensitive downstream operators (LIMIT) see identical rows;
-        key columns are gathered from the originals, preserving dtypes
-        without the reference's promotion round-trip.
+        the device ``group_build`` op turns the code rows into group ids
+        plus a ready ``SegmentPlan`` (counts, segment offsets and the
+        grouped row order all come off the kernel — no host lexsort or
+        bincount over N rows), and ``segmented_aggregate`` reduces each
+        column over the group segments. Per-group outputs are then
+        permuted (a G-sized gather) to the reference path's
+        ``np.unique(axis=0)`` lexicographic order so order-sensitive
+        downstream operators (LIMIT) see identical rows; key columns are
+        gathered from the originals, preserving dtypes without the
+        reference's promotion round-trip.
         """
         key_vals = [np.asarray(t.col(k)) for k in node.group_by]
         codes = group_key_codes(key_vals)
-        _, reps, inverse = dedup_representatives(codes)
-        g = len(reps)
-        # codes are order-isomorphic to key values, so lexsorting the
+        gb = group_build(codes)
+        g = gb.num_groups
+        plan = segment_plan_from_group_build(gb)
+        # codes are order-isomorphic to key values, so lexsorting the G
         # representatives' code rows (primary = first group-by column)
         # reproduces np.unique(axis=0)'s group order
         grp_order = np.lexsort(
-            tuple(codes[reps, j] for j in range(codes.shape[1] - 1, -1, -1)))
-        group_id = np.empty(g, dtype=np.int64)
-        group_id[grp_order] = np.arange(g)
-        plan = make_segment_plan(group_id[inverse], g)
-        reps_sorted = reps[grp_order]
+            tuple(codes[gb.reps, j]
+                  for j in range(codes.shape[1] - 1, -1, -1)))
+        reps_sorted = gb.reps[grp_order]
         cols = {}
         for i, k in enumerate(node.group_by):
             cols[k] = as_column(key_vals[i][reps_sorted])
         for func, c, name in node.aggs:
             values = None if func == "count" else np.asarray(t.col(c))
             cols[f"agg.{name}"] = as_column(
-                segmented_aggregate(plan, values, func))
+                segmented_aggregate(plan, values, func)[grp_order])
         return Table(columns=cols, valid=jnp.ones(g, dtype=bool))
 
     @staticmethod
@@ -366,14 +416,17 @@ class Executor:
         """Aggregate one group, preserving exactness: count is integral,
         sum/min/max over integer columns stay integer (no float32 round
         trip that loses precision above 2**24), avg accumulates in
-        float64."""
+        float64. Over zero rows (a global aggregate above a fully
+        filtered table) min/max/avg are SQL NULL — represented as NaN —
+        while count is 0 and sum keeps the 0/0.0 identity."""
         if func == "count":
             return np.int64(len(idx))
         v = np.asarray(t.col(c))[idx]
         if len(v) == 0:
-            if func != "avg" and v.dtype.kind in "bui":
-                return np.int64(0)
-            return np.float64(0.0)
+            if func != "sum":
+                return np.float64(np.nan)
+            return (np.int64(0) if v.dtype.kind in "bui"
+                    else np.float64(0.0))
         if func == "sum":
             return (v.sum(dtype=np.int64) if v.dtype.kind in "bui"
                     else v.sum(dtype=np.float64))
@@ -460,11 +513,19 @@ class Executor:
             # constant key, so a single representative covers the batch
             keys = (np.stack(id_cols, axis=1) if id_cols
                     else np.zeros((n, 1), dtype=np.int32))
-            _, reps, inverse = dedup_representatives(keys)
+            keys = np.ascontiguousarray(keys, dtype=np.int32)
+            _, reps, inverse, rep_hashes = dedup_representatives(
+                keys, return_hashes=True)
             rep_ctxs = [self._context_at(rts, id_cols, int(r)) for r in reps]
             counts = np.bincount(inverse, minlength=len(reps))
+            # key-probe fast path: the kernel's row hash + exact key row
+            # let the FunctionCache recognise representatives seen by an
+            # earlier operator before any prompt is re-rendered
+            key_ids = [(int(h), keys[int(r)].tobytes())
+                       for h, r in zip(rep_hashes, reps)]
             res = self.runner.evaluate_unique(
-                node.phi, rep_ctxs, counts=counts, out_dtype=out_dtype)
+                node.phi, rep_ctxs, counts=counts, out_dtype=out_dtype,
+                key_ids=key_ids)
 
         return tc, res, inverse
 

@@ -1,0 +1,81 @@
+"""Device-side group boundary scan — Pallas kernel (the build step of the
+group-build subsystem).
+
+``group_build`` (ops.py) turns an (N, C) int32 key matrix into full
+segment structure — representatives, inverse scatter map, group counts
+and segment offsets — with one device pass: rows are sorted by a 32-bit
+sort key (the raw key column for C == 1, which is injective and
+therefore exact; the FNV-1a row hash otherwise) and every group quantity
+falls out of a single boundary scan over the sorted keys.
+
+This module holds that scan. The TPU grid iterates row tiles
+sequentially, so the kernel carries the previous tile's last key and the
+running boundary count in SMEM scratch — the same accumulate-across-the-
+grid pattern as ``segmented_reduce``. Per tile it emits
+
+* ``bnd``  — 1 where a new group starts (first valid position, or the
+  sorted key differs from its predecessor);
+* ``gid``  — the running group id (exclusive cumsum of boundaries - 1),
+  i.e. each sorted position's segment index.
+
+Padding rows (``valid == 0``) sort after every valid row (ops.py sorts
+by ``(is_pad, key)``), never open a group, and inherit the last group id
+— ops.py slices them off before anything reads them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _boundary_kernel(sk_ref, valid_ref, bnd_ref, gid_ref, carry_sk,
+                     carry_cnt):
+    r = pl.program_id(0)
+
+    @pl.when(r == 0)
+    def _():
+        carry_cnt[0] = 0
+        # any value != the first key: position 0 is always a boundary
+        carry_sk[0] = sk_ref[0] ^ jnp.uint32(1)
+
+    sk = sk_ref[...]                    # (block_rows,) uint32, sorted
+    valid = valid_ref[...]              # (block_rows,) int32 0/1
+    prev = jnp.concatenate([jnp.full((1,), carry_sk[0], sk.dtype), sk[:-1]])
+    bnd = ((valid != 0) & (sk != prev)).astype(jnp.int32)
+    csum = jnp.cumsum(bnd)
+    bnd_ref[...] = bnd
+    gid_ref[...] = carry_cnt[0] + csum - 1
+    carry_cnt[0] = carry_cnt[0] + csum[-1]
+    carry_sk[0] = sk[-1]
+
+
+def group_boundaries_kernel(sort_keys, valid, *, block_rows: int = 1024,
+                            interpret: bool = False):
+    """sort_keys: (N,) uint32 sorted (valid rows first), valid: (N,)
+    int32 0/1, N % block_rows == 0 (ops.py pads) -> (bnd, gid) int32
+    pair: boundary flags and per-sorted-position group ids."""
+    n = sort_keys.shape[0]
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        _boundary_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.SMEM((1,), jnp.uint32),
+            pltpu.SMEM((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(sort_keys, valid)

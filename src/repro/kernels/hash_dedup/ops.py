@@ -1,14 +1,43 @@
-"""jit'd wrapper: hash (kernel) + first-occurrence dedup (sort-based)."""
+"""jit'd wrappers: row hashing, first-occurrence dedup, and the
+device-resident group build.
+
+``group_build`` is the shared entry point of the group-build subsystem:
+one device pass (sort by 32-bit key + Pallas boundary scan) that returns
+representatives, the inverse scatter map, group counts and segment
+offsets for an (N, C) int32 key matrix. Three executor consumers sit on
+top of it:
+
+* ``dedup_representatives`` — the semantic batch pipeline's dedup
+  (reps reordered to ascending first-occurrence row order);
+* ``Executor._aggregate_vectorized`` — group ids + ``SegmentPlan``
+  come straight from the kernel (no host lexsort/bincount over N rows);
+* ``join_match_lists`` — the equi-join build side consumes the same
+  segment offsets (no host-side key re-encode).
+
+For C == 1 the sort key is the raw key column — injective, so grouping
+is exact by construction. For C > 1 it is the FNV-1a row hash; a single
+device-side comparison detects 32-bit collisions and the host regroups
+exactly (``np.unique(axis=0)``) in that rare case.
+"""
 from __future__ import annotations
 
+from dataclasses import dataclass
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..sync import HOST_SYNCS
+from .group_build import group_boundaries_kernel
 from .hash_dedup import hash_rows_kernel
-from .ref import first_occurrence_ref, hash_rows_ref
+from .ref import (
+    first_occurrence_ref,
+    group_boundaries_ref,
+    group_build_np,
+    hash_rows_np,
+    hash_rows_ref,
+)
 
 
 @partial(jax.jit, static_argnames=("block_rows", "impl"))
@@ -37,60 +66,201 @@ def dedup_mask(keys, *, impl: str = "auto", return_hashes: bool = False):
     return (m, h) if return_hashes else m
 
 
-def dedup_representatives(keys, *, impl: str = "auto"):
+# ---------------------------------------------------------------- group build
+
+@dataclass(frozen=True)
+class GroupBuild:
+    """Device-built grouping of an (N, C) int32 key matrix.
+
+    Groups are ordered by ascending 32-bit sort key (the raw key column
+    for C == 1, the FNV-1a row hash for C > 1; after a collision repair,
+    lexicographically by key row). ``reps[g]`` is the first row of group
+    g, ``group_ids[i]`` maps row i to its group (the inverse scatter
+    map), ``order`` lists the rows grouped (the stable sort of rows by
+    ``group_ids``) and ``starts``/``counts`` delimit each group's
+    segment inside ``order``. ``sort_keys[i]`` is row i's sort key —
+    the kernel's row hash for C > 1, usable as a cache-probe tag.
+    """
+
+    num_groups: int
+    group_ids: np.ndarray  # (N,) int64
+    reps: np.ndarray       # (G,) int64, first occurrence per group
+    counts: np.ndarray     # (G,) int64
+    starts: np.ndarray     # (G,) int64, exclusive cumsum of counts
+    order: np.ndarray      # (N,) int64, rows sorted by group id (stable)
+    sort_keys: np.ndarray  # (N,) int32/uint32
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def _group_build_device(keys, n_valid, *, impl: str):
+    """Sort-by-key + boundary-scan over a padded (N, C) key matrix.
+    Rows >= ``n_valid`` are padding: they sort last, never open a group
+    and contribute nothing to counts. Returns device arrays sized to the
+    padded N; the host wrapper slices the real rows/groups back out."""
+    n, c = keys.shape
+    if c == 1:
+        sk = keys[:, 0]
+        # order-preserving int32 -> uint32 bias keeps signed key order
+        bits = sk.astype(jnp.uint32) ^ jnp.uint32(0x80000000)
+    else:
+        sk = hash_rows(keys, impl=impl)
+        bits = sk
+    iota = jnp.arange(n, dtype=jnp.int32)
+    is_pad = iota >= n_valid
+    # padding sorts to the max key; a real row tying with it (INT32_MAX
+    # key / 0xFFFFFFFF hash) still precedes every pad row under the
+    # stable sort, so valid rows occupy sorted positions [0, n_valid)
+    bits = jnp.where(is_pad, jnp.uint32(0xFFFFFFFF), bits)
+    order = jnp.argsort(bits, stable=True).astype(jnp.int32)
+    valid_sorted = (order < n_valid).astype(jnp.int32)
+    sk_sorted = bits[order]  # bias is bijective: equality is unchanged
+    if impl == "ref":
+        bnd, gid = group_boundaries_ref(sk_sorted, valid_sorted)
+    else:
+        bnd, gid = group_boundaries_kernel(
+            sk_sorted, valid_sorted, interpret=(impl == "interpret"))
+    num_groups = jnp.sum(bnd)
+    is_b = bnd != 0
+    # scatter per-group quantities to group-id slots; non-boundary rows
+    # target index n and are dropped
+    slot = jnp.where(is_b, gid, n)
+    reps = jnp.zeros(n, jnp.int32).at[slot].set(order, mode="drop")
+    starts = jnp.zeros(n, jnp.int32).at[slot].set(iota, mode="drop")
+    counts = jax.ops.segment_sum(valid_sorted, gid, num_segments=n)
+    inverse = jnp.zeros(n, jnp.int32).at[order].set(gid)
+    # exact-collision check (single device-side comparison): every valid
+    # row must equal its representative's key row
+    rep_rows = reps[jnp.clip(inverse, 0, n - 1)]
+    eq = jnp.all(keys[rep_rows] == keys, axis=1)
+    collision = jnp.any(~eq & (iota < n_valid))
+    return num_groups, inverse, reps, counts, starts, order, sk, collision
+
+
+def _group_build_exact_host(keys_np: np.ndarray) -> GroupBuild:
+    """32-bit hash collision repair: exact regroup by key row. Groups
+    come back in ``np.unique(axis=0)`` lexicographic order — consumers
+    only rely on reps being first occurrences and the segment structure
+    being self-consistent, never on hash order."""
+    uniq, reps, inverse, counts = np.unique(
+        keys_np, axis=0, return_index=True, return_inverse=True,
+        return_counts=True)
+    inverse = inverse.reshape(-1)
+    g = uniq.shape[0]
+    order = np.argsort(inverse, kind="stable")
+    starts = np.zeros(g, dtype=np.int64)
+    if g:
+        np.cumsum(counts[:-1], out=starts[1:])
+    return GroupBuild(
+        num_groups=g,
+        group_ids=inverse.astype(np.int64),
+        reps=reps.astype(np.int64),
+        counts=counts.astype(np.int64),
+        starts=starts,
+        order=order.astype(np.int64),
+        sort_keys=hash_rows_np(keys_np),
+    )
+
+
+def _group_build_host(keys_np: np.ndarray) -> GroupBuild:
+    """Pure-numpy group build (the oracle + collision repair): identical
+    field contract to the device path, zero device round-trips. ``auto``
+    picks it off-TPU, where numpy's sort beats XLA's."""
+    g, inverse, reps, counts, starts, order, sk = group_build_np(keys_np)
+    if keys_np.shape[1] > 1 and \
+            not np.array_equal(keys_np[reps][inverse], keys_np):
+        return _group_build_exact_host(keys_np)
+    return GroupBuild(num_groups=g, group_ids=inverse, reps=reps,
+                      counts=counts, starts=starts, order=order,
+                      sort_keys=sk)
+
+
+def group_build(keys, *, impl: str = "auto") -> GroupBuild:
+    """Host-facing group build for an (N, C) int32 key matrix.
+
+    On the device path ("kernel" on TPU, "ref"/"interpret" elsewhere)
+    one device pass (sort by 32-bit key + boundary scan) and ONE
+    device→host fetch produce the full segment structure; see
+    ``GroupBuild`` for the field contract. N is bucketed to the next
+    power of two before the jit boundary so varying batch sizes reuse a
+    bounded set of compiles; padding rows sort last and cannot perturb
+    any real group. ``impl="auto"`` follows the ``segment_count``
+    convention — the kernel on TPU, the numpy "host" build elsewhere.
+    The result is always exact: C == 1 sorts by the raw key, and C > 1
+    hash collisions are detected by a single comparison and repaired
+    host-side.
+    """
+    keys_np = np.ascontiguousarray(np.asarray(keys), dtype=np.int32)
+    if keys_np.ndim != 2:
+        raise ValueError(f"keys must be (N, C), got {keys_np.shape}")
+    n = keys_np.shape[0]
+    if n == 0:
+        empty = np.zeros(0, dtype=np.int64)
+        return GroupBuild(0, empty, empty, empty, empty, empty,
+                          np.zeros(0, dtype=np.uint32))
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "host"
+    if impl == "host":
+        return _group_build_host(keys_np)
+    bucket = max(1024, 1 << (n - 1).bit_length())
+    keys_in = (np.pad(keys_np, ((0, bucket - n), (0, 0)))
+               if bucket != n else keys_np)
+    out = _group_build_device(jnp.asarray(keys_in), n, impl=impl)
+    (g, inverse, reps, counts, starts, order, sk, collision) = \
+        jax.device_get(out)
+    HOST_SYNCS.tick()
+    if bool(collision):
+        return _group_build_exact_host(keys_np)
+    g = int(g)
+    return GroupBuild(
+        num_groups=g,
+        group_ids=inverse[:n].astype(np.int64),
+        reps=reps[:g].astype(np.int64),
+        counts=counts[:g].astype(np.int64),
+        starts=starts[:g].astype(np.int64),
+        order=order[:n].astype(np.int64),
+        sort_keys=sk[:n],
+    )
+
+
+def dedup_representatives(keys, *, impl: str = "auto",
+                          return_hashes: bool = False):
     """Host-facing dedup for the semantic batch pipeline.
 
-    keys: (N, C) int32 — one row per candidate LLM invocation, columns are
-    the referenced base tables' row_ids. Returns numpy arrays
-    ``(mask, reps, inverse)`` where ``mask`` is the kernel's
-    first-occurrence mask, ``reps`` are the row indices of the first
-    occurrence of each distinct key, and ``inverse[i]`` maps row i to its
-    index into ``reps`` (the scatter map for broadcasting representative
-    results back to all rows).
+    keys: (N, C) int32 — one row per candidate LLM invocation, columns
+    are the referenced base tables' row_ids. Returns numpy arrays
+    ``(mask, reps, inverse)`` where ``mask`` marks first occurrences,
+    ``reps`` are the row indices of the first occurrence of each
+    distinct key in ascending row order, and ``inverse[i]`` maps row i
+    to its index into ``reps`` (the scatter map for broadcasting
+    representative results back to all rows). First-seen semantics hold
+    globally: the first rep carrying a given prompt is the globally
+    first row carrying it. ``return_hashes=True`` appends the (G,)
+    uint32 per-representative sort keys (the kernel row hashes for
+    C > 1) for the function cache's key-probe fast path.
 
-    Grouping is by the kernel's 32-bit row hash; an exact vectorised check
-    compares every row against its representative's key and falls back to
-    key-wise ``np.unique`` on a hash collision, so the mapping is always
-    exact.
-
-    The mask is the device-side ``dedup_mask`` pass (hash kernel + sort),
-    kept on the semantic hot path by contract; the scatter map
-    (reps/inverse) is built host-side from the same hashes because the
-    executor binds Python payload dicts to representatives anyway. A
-    device-resident scatter-map build that subsumes the ``np.unique`` is a
-    ROADMAP open item.
+    Built entirely on ``group_build`` — grouping, scatter map, counts
+    and the exact-collision repair all come from the shared op (one
+    device→host fetch on accelerators, the numpy host build off-TPU);
+    only the G-sized reordering to row order happens here.
     """
     keys_np = np.ascontiguousarray(np.asarray(keys), dtype=np.int32)
     n = keys_np.shape[0]
     if n == 0:
         empty = np.zeros(0, dtype=np.int64)
-        return np.zeros(0, dtype=bool), empty, empty
-    # bucket N to the next power of two (>= one hash block) before the jit
-    # boundary so varying batch sizes reuse a bounded set of compiles;
-    # trailing zero-padding rows cannot perturb the first-occurrence mask
-    # of real rows and are sliced off before grouping. The host copy is
-    # kept for the exact collision check — one host->device transfer total.
-    bucket = max(1024, 1 << (n - 1).bit_length())
-    if bucket != n:
-        keys_in = np.pad(keys_np, ((0, bucket - n), (0, 0)))
-    else:
-        keys_in = keys_np
-    mask, hashes = dedup_mask(jnp.asarray(keys_in), impl=impl,
-                              return_hashes=True)
-    mask = np.asarray(mask)[:n]
-    _, reps, inverse = np.unique(np.asarray(hashes)[:n], return_index=True,
-                                 return_inverse=True)
-    if not np.array_equal(keys_np[reps][inverse], keys_np):
-        # 32-bit hash collision merged distinct keys: regroup exactly
-        _, reps, inverse = np.unique(keys_np, axis=0, return_index=True,
-                                     return_inverse=True)
-        mask = np.zeros(n, dtype=bool)
-        mask[reps] = True
-    # np.unique orders groups by value; reorder into ascending row order so
-    # downstream first-seen semantics (a prompt-level cache binding the
-    # earliest context) match per-row execution exactly: the first rep
-    # carrying a given prompt is then the globally first row carrying it.
-    order = np.argsort(reps)
+        out = (np.zeros(0, dtype=bool), empty, empty)
+        return out + (np.zeros(0, dtype=np.uint32),) if return_hashes else out
+    gb = group_build(keys_np, impl=impl)
+    # groups come back in sort-key order; reorder into ascending row
+    # order so downstream first-seen semantics (a prompt-level cache
+    # binding the earliest context) match per-row execution exactly
+    order = np.argsort(gb.reps)
     rank = np.empty_like(order)
     rank[order] = np.arange(len(order))
-    return mask, reps[order], rank[inverse]
+    reps = gb.reps[order]
+    inverse = rank[gb.group_ids]
+    mask = np.zeros(n, dtype=bool)
+    mask[reps] = True
+    if return_hashes:
+        hashes = np.asarray(gb.sort_keys)[reps].astype(np.uint32)
+        return mask, reps, inverse, hashes
+    return mask, reps, inverse

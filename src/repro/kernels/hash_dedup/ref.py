@@ -1,4 +1,5 @@
-"""Pure-jnp oracle: FNV-1a row hashes + first-occurrence dedup mask."""
+"""Pure-jnp oracles (FNV-1a row hashes, first-occurrence dedup mask,
+group-boundary scan) plus the exact numpy oracle for ``group_build``."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -28,3 +29,47 @@ def first_occurrence_ref(hashes):
         [jnp.ones((1,), bool), sorted_h[1:] != sorted_h[:-1]])
     mask = jnp.zeros((n,), bool).at[order].set(is_first_sorted)
     return mask
+
+
+def group_boundaries_ref(sort_keys, valid):
+    """jnp fallback for the Pallas boundary-scan kernel: (N,) sorted
+    keys + (N,) 0/1 valid flags -> (bnd, gid) int32 pair (boundary flags
+    and per-sorted-position group ids = cumsum of boundaries - 1)."""
+    prev = jnp.concatenate([sort_keys[:1] ^ 1, sort_keys[:-1]])
+    bnd = ((valid != 0) & (sort_keys != prev)).astype(jnp.int32)
+    gid = jnp.cumsum(bnd) - 1
+    return bnd, gid
+
+
+def hash_rows_np(keys) -> np.ndarray:
+    """Exact numpy mirror of ``hash_rows``: (N, C) int32 -> (N,) uint32
+    FNV-1a row hashes (integer wrap-around is numpy's native modular
+    arithmetic, matching the kernel bit for bit)."""
+    keys = np.ascontiguousarray(keys, dtype=np.int32)
+    h = np.full(keys.shape[0], FNV_OFFSET, dtype=np.uint32)
+    for c in range(keys.shape[1]):
+        w = keys[:, c].astype(np.uint32)
+        for shift in (0, 8, 16, 24):
+            byte = (w >> np.uint32(shift)) & np.uint32(0xFF)
+            h = (h ^ byte) * FNV_PRIME
+    return h
+
+
+def group_build_np(keys):
+    """Exact numpy oracle for ``ops.group_build`` (hash grouping, no
+    collision repair): groups ordered by ascending 32-bit sort key (the
+    raw key column for C == 1, the FNV-1a row hash otherwise). Returns
+    ``(num_groups, group_ids, reps, counts, starts, order, sort_keys)``
+    where ``reps`` are first-occurrence row indices, ``order`` is the
+    stable sort of rows by group id and ``starts``/``counts`` delimit
+    each group's segment inside ``order``."""
+    keys = np.ascontiguousarray(keys, dtype=np.int32)
+    sk = keys[:, 0] if keys.shape[1] == 1 else hash_rows_np(keys)
+    uniq, reps, inverse, counts = np.unique(
+        sk, return_index=True, return_inverse=True, return_counts=True)
+    order = np.argsort(inverse, kind="stable")
+    starts = np.zeros(len(uniq), dtype=np.int64)
+    if len(uniq):
+        np.cumsum(counts[:-1], out=starts[1:])
+    return (len(uniq), inverse.astype(np.int64), reps.astype(np.int64),
+            counts.astype(np.int64), starts, order.astype(np.int64), sk)

@@ -13,8 +13,10 @@ Three layers, mirroring ``hash_dedup``:
   kernel), ``SegmentPlan``/``segmented_aggregate`` (one-pass grouped
   aggregates preserving the executor's exactness contract: integral
   counts, int64-exact integer sum, float64 accumulation, dtype-preserving
-  min/max incl. strings) and ``join_match_lists`` (hash-grouped build
-  side + segment offsets replacing argsort + double searchsorted).
+  min/max incl. strings) and ``join_match_lists`` (build side grouped by
+  the device ``group_build`` op for narrow integer keys — the kernel's
+  segment offsets drive the probe with no host-side key re-encode; the
+  host encode path remains as the fallback for strings/floats).
 """
 from __future__ import annotations
 
@@ -25,6 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..hash_dedup.ops import group_build
+from ..sync import HOST_SYNCS
 from .ref import segment_reduce_jnp
 from .segmented_reduce import OPS, reduce_identity, segment_reduce_kernel
 
@@ -86,7 +90,9 @@ def segment_reduce_host(values, segment_ids, num_segments: int,
                                             dtype=np.int32)])
     out = segment_reduce(jnp.asarray(v), jnp.asarray(seg),
                          num_segments=g_bucket, op=op, impl=impl)
-    return np.asarray(out)[:num_segments]
+    out = np.asarray(out)[:num_segments]
+    HOST_SYNCS.tick()
+    return out
 
 
 def segment_count(segment_ids, num_segments: int, *,
@@ -160,6 +166,16 @@ def make_segment_plan(seg, num_groups: int) -> SegmentPlan:
                        order=order, starts=starts)
 
 
+def segment_plan_from_group_build(gb) -> SegmentPlan:
+    """Adopt a device ``group_build`` result as a ``SegmentPlan`` without
+    re-deriving anything on the host: the kernel's ``order`` IS the
+    stable sort of rows by group id (rows sort by key with ties in row
+    order, and group ids ascend along that sort), and ``starts`` /
+    ``counts`` already delimit the segments."""
+    return SegmentPlan(seg=gb.group_ids, num_groups=gb.num_groups,
+                       counts=gb.counts, order=gb.order, starts=gb.starts)
+
+
 _DEVICE_DTYPES = (np.dtype(np.int32), np.dtype(np.float32))
 
 
@@ -225,30 +241,65 @@ def encode_join_keys(probe_keys, build_keys
 
 def join_match_lists(probe_keys, build_keys, *, impl: str = "auto"
                      ) -> tuple[np.ndarray, np.ndarray]:
-    """Equi-join match lists from a hash-grouped build side.
+    """Equi-join match lists from a device-grouped build side.
 
-    The build side is grouped by key code (one segment per distinct key);
-    probing is then a direct histogram/offset lookup per probe row —
-    replacing the reference's argsort + double searchsorted. Output
-    ordering is identical to the reference: probe-major, and within one
+    Narrow integer keys (the common join-key shape) take the device
+    path: ``group_build`` groups the build side by raw key value (exact,
+    representatives ascending), and probing is a searchsorted over the G
+    representative keys plus a histogram/offset lookup per probe row —
+    no host-side key re-encode and no build-side argsort. Arbitrary
+    dtypes (strings, floats where NaN must match NaN like searchsorted)
+    fall back to the shared host code space. Output ordering is
+    identical to the reference either way: probe-major, and within one
     probe row the build matches appear in stable build-key sort order.
     """
     n_probe, n_build = len(probe_keys), len(build_keys)
     empty = np.zeros(0, dtype=np.int64)
     if n_probe == 0 or n_build == 0:
         return empty, empty
-    probe_codes, build_codes, num_codes = encode_join_keys(
-        probe_keys, build_keys)
+    pk = np.asarray(probe_keys)
+    bk = np.asarray(build_keys)
+    if pk.dtype == bk.dtype and pk.dtype.kind in "iub" \
+            and pk.dtype.itemsize <= 4:
+        # same-dtype cast to int32 is value-consistent across both sides
+        return _join_match_device(pk.astype(np.int32),
+                                  bk.astype(np.int32), impl=impl)
+    probe_codes, build_codes, num_codes = encode_join_keys(pk, bk)
     counts_by_code = segment_count(build_codes, num_codes, impl=impl)
     build_order = np.argsort(build_codes, kind="stable")
     offsets = np.zeros(num_codes, dtype=np.int64)
     np.cumsum(counts_by_code[:-1], out=offsets[1:])
     cnt = counts_by_code[probe_codes]
+    return _expand_matches(cnt, build_order, offsets[probe_codes])
+
+
+def _join_match_device(pk: np.ndarray, bk: np.ndarray, *, impl: str = "auto"
+                       ) -> tuple[np.ndarray, np.ndarray]:
+    """Device build table: ``group_build`` on the raw key column (C == 1
+    sorts by value, so grouping is exact and representatives come back
+    ascending by key), then a representative searchsorted per probe row
+    consumes the kernel's counts/starts/order directly."""
+    gb = group_build(bk[:, None], impl=impl)
+    rep_keys = bk[gb.reps]  # ascending by construction
+    pos = np.searchsorted(rep_keys, pk)
+    pos_c = np.minimum(pos, gb.num_groups - 1)
+    matched = rep_keys[pos_c] == pk
+    gid = np.where(matched, pos_c, 0)
+    cnt = np.where(matched, gb.counts[gid], 0)
+    return _expand_matches(cnt, gb.order, gb.starts[gid])
+
+
+def _expand_matches(cnt: np.ndarray, build_order: np.ndarray,
+                    probe_offsets: np.ndarray
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """Expand per-probe match counts into (out_probe, out_build) index
+    lists: probe-major, build rows in segment (stable) order."""
     total = int(cnt.sum())
+    empty = np.zeros(0, dtype=np.int64)
     if total == 0:
         return empty, empty
-    out_probe = np.repeat(np.arange(n_probe, dtype=np.int64), cnt)
+    out_probe = np.repeat(np.arange(len(cnt), dtype=np.int64), cnt)
     first = np.cumsum(cnt) - cnt
     within = np.arange(total, dtype=np.int64) - np.repeat(first, cnt)
-    out_build = build_order[np.repeat(offsets[probe_codes], cnt) + within]
+    out_build = build_order[np.repeat(probe_offsets, cnt) + within]
     return out_probe, out_build

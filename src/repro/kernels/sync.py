@@ -1,0 +1,26 @@
+"""Device→host synchronisation accounting for the kernel layer.
+
+Every host-facing kernel wrapper that materialises device results
+(``group_build``, ``segment_reduce_host``) ticks the global counter once
+per device→host fetch. The dedup/relational microbenchmarks report the
+count so removed round-trips stay visible in the BENCH_*.json artifacts
+— the cost model's fidelity to the executor depends on the executor not
+hiding host bounces (Larch's placement-vs-executor drift argument).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass
+class HostSyncStats:
+    syncs: int = 0
+
+    def tick(self, n: int = 1) -> None:
+        self.syncs += n
+
+    def reset(self) -> None:
+        self.syncs = 0
+
+
+HOST_SYNCS = HostSyncStats()

@@ -19,11 +19,11 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import get_config, get_tiny
-from ..models import init_params, param_specs
+from ..models import init_params
 from ..sharding.policy import ShardingPolicy
 from ..training.checkpoint import CheckpointManager
 from ..training.data import TokenStream
-from ..training.optimizer import AdamWConfig, init_state, state_specs
+from ..training.optimizer import AdamWConfig, init_state
 from ..training.train_step import build_train_step
 from .mesh import make_mesh
 
@@ -63,19 +63,6 @@ def main(argv=None):
     params = init_params(cfg, jax.random.PRNGKey(0))
     opt_state = init_state(params, opt_cfg)
     if mgr is not None and mgr.latest_step() is not None:
-        shardings = None
-        if mesh.size > 1:
-            pspec = param_specs(cfg, policy)
-            sspec = state_specs(pspec, opt_cfg)
-            from jax.sharding import NamedSharding
-
-            shardings = {
-                "params": jax.tree.map(
-                    lambda s: NamedSharding(mesh, s), pspec),
-                "opt": jax.tree.map(
-                    lambda s: NamedSharding(mesh, s), sspec,
-                    is_leaf=lambda x: hasattr(x, "index")),
-            }
         tree, manifest = mgr.restore()
         params = jax.tree.map(jnp.asarray, tree["params"])
         opt_state = jax.tree.map(jnp.asarray, tree["opt"])

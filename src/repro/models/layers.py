@@ -212,7 +212,6 @@ def attention_decode(cfg: ModelConfig, policy: ShardingPolicy, p, x,
             v_new = v_new + p["bv"]
         q = rope(q, pos[:, None], cfg.rope_theta)
         k_new = rope(k_new, pos[:, None], cfg.rope_theta)
-        T = k_cache.shape[1]
         slot = jnp.where(window > 0, pos % jnp.maximum(window, 1), pos)
         bidx = jnp.arange(B)
         k_cache = k_cache.at[bidx, slot].set(k_new[:, 0])

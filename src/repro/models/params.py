@@ -186,7 +186,7 @@ def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> dict:
         leaves.append((path, shape, scale))
         return (path, shape, scale)
 
-    skeleton = build_params(cfg, collect)
+    build_params(cfg, collect)  # first pass: record leaf paths/shapes
     keys = jax.random.split(key, len(leaves))
     key_of = {path: k for (path, _, _), k in zip(leaves, keys)}
     # second pass building real arrays (paths may repeat across blocks —

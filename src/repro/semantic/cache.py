@@ -9,11 +9,27 @@ The paper uses a concurrent bucket-locked hash table inside DuckDB's
 vectorised pipeline; host-side Python needs no locking, and the on-device
 analogue (batch dedup before the backend call) lives in
 ``repro.kernels.hash_dedup``.
+
+Two levels:
+
+* the prompt store (``lookup_batch``) — keyed on the rendered prompt
+  string, the paper's semantics;
+* the key-probe fast path (``probe_keys``/``bind_keys``) — keyed on the
+  ``group_build`` kernel's (row hash, exact key row) identity of a
+  representative. A representative an earlier operator already resolved
+  maps straight to its rendered prompt (or to NULL for rows whose
+  referenced value was NULL), so the cross-operator dedup layer probes
+  once per distinct representative instead of re-rendering and probing
+  once per key string. Both levels share one scope: ``clear()`` empties
+  them together.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Hashable, Optional, Sequence
+from typing import Callable, Hashable, Iterable, Optional, Sequence
+
+# sentinel distinguishing "key never seen" from "key renders to NULL"
+KEY_MISS = object()
 
 
 @dataclass
@@ -35,6 +51,9 @@ class CacheStats:
 class FunctionCache:
     def __init__(self):
         self._store: dict[Hashable, object] = {}
+        # key-probe fast path: representative key id -> rendered prompt
+        # (None = the key's referenced values render to NULL)
+        self._key_prompts: dict[Hashable, Optional[str]] = {}
         self.stats = CacheStats()
 
     def __len__(self) -> int:
@@ -42,6 +61,20 @@ class FunctionCache:
 
     def clear(self) -> None:
         self._store.clear()
+        self._key_prompts.clear()
+
+    def probe_keys(self, key_ids: Sequence[Hashable]) -> list[object]:
+        """Batch-probe the key fast path. Returns, per key id, the
+        rendered prompt bound to it, None for a known-NULL key, or
+        ``KEY_MISS`` for a key this scope has not seen."""
+        return [self._key_prompts.get(k, KEY_MISS) for k in key_ids]
+
+    def bind_keys(
+        self, bindings: Iterable[tuple[Hashable, Optional[str]]]
+    ) -> None:
+        """Record key id -> rendered prompt (or None = NULL) bindings so
+        later operators skip the render for the same representative."""
+        self._key_prompts.update(bindings)
 
     def lookup_batch(
         self,

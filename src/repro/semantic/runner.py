@@ -8,11 +8,13 @@ for SF / SP / SJ work. Two paths:
   backend.
 * ``evaluate_unique`` — vectorised path: the executor has already
   collapsed rows to distinct-key *representatives* (via the
-  ``hash_dedup`` kernel) and passes each representative's row
-  multiplicity in ``counts``; prompts are rendered only for
-  representatives, and cache statistics are weighted so
-  ``llm_calls`` / ``cache_hits`` / ``null_skipped`` match the per-row
-  path exactly.
+  ``hash_dedup`` group-build kernel) and passes each representative's
+  row multiplicity in ``counts``; prompts are rendered only for
+  representatives — and only for representatives the cache's key-probe
+  fast path (keyed on the kernel's row hash + exact key row) has not
+  already bound to a prompt in this scope. Cache statistics are
+  weighted so ``llm_calls`` / ``cache_hits`` / ``null_skipped`` match
+  the per-row path exactly.
 
 Backend dispatch is chunked: distinct misses go out in slices of
 ``max_batch_rows`` (defaulting to the backend's ``preferred_batch_rows``,
@@ -30,7 +32,7 @@ from dataclasses import dataclass
 from typing import Optional, Sequence
 
 from .backend import Backend
-from .cache import FunctionCache
+from .cache import KEY_MISS, FunctionCache
 
 _TEMPLATE_COL = re.compile(r"\{([A-Za-z_][\w]*\.[A-Za-z_][\w]*)\}")
 
@@ -122,13 +124,40 @@ class SemanticRunner:
         contexts: Sequence[dict[str, dict]],
         counts: Optional[Sequence[int]] = None,
         out_dtype: str = "bool",
+        key_ids: Optional[Sequence[object]] = None,
     ) -> SemanticResult:
         """Evaluate distinct-key representatives. ``counts[i]`` is the
         number of input rows context i stands for (None = all 1, i.e. the
         per-row path). Returned ``values`` are per *representative*; the
         caller scatters them back through its inverse mapping. Stats are
-        row-weighted so accounting matches per-row execution."""
-        prompts: list[Optional[str]] = [render_prompt(phi, c) for c in contexts]
+        row-weighted so accounting matches per-row execution.
+
+        ``key_ids[i]`` (optional) is a stable identity of representative
+        i — the dedup kernel's (row hash, key row) pair — feeding the
+        ``FunctionCache`` key-probe fast path: a representative an
+        earlier operator already resolved under the same φ reuses its
+        rendered prompt (or NULL verdict) without re-rendering, and
+        ``prompts_rendered`` counts only actual renders. Cache statistics
+        are unchanged by the fast path — a key-hit row still probes (and
+        hits) the prompt store exactly as per-row execution would."""
+        if key_ids is not None:
+            known = self.cache.probe_keys([(phi, k) for k in key_ids])
+        else:
+            known = None
+        prompts: list[Optional[str]] = []
+        rendered = 0
+        new_bindings: list[tuple[object, Optional[str]]] = []
+        for i, ctx in enumerate(contexts):
+            if known is not None and known[i] is not KEY_MISS:
+                prompts.append(known[i])
+                continue
+            p = render_prompt(phi, ctx)
+            rendered += 1
+            prompts.append(p)
+            if key_ids is not None:
+                new_bindings.append(((phi, key_ids[i]), p))
+        if new_bindings:
+            self.cache.bind_keys(new_bindings)
         if counts is None:
             counts = [1] * len(prompts)
         live_idx = [i for i, p in enumerate(prompts) if p is not None]
@@ -162,5 +191,5 @@ class SemanticRunner:
             distinct_calls=self.cache.stats.misses - misses_before,
             cache_hits=self.cache.stats.hits - hits_before,
             null_rows=null_rows,
-            prompts_rendered=len(prompts),
+            prompts_rendered=rendered,
         )

@@ -103,28 +103,26 @@ class ServingEngine:
         # positions differ per row: prefill computed the full padded seq;
         # take the logits at each row's last real token instead
         answers = [[] for _ in chunk]
-        # first sampled token comes from per-row last prompt position —
-        # recompute cheaply with one decode step at pos = len
-        tok_next = None
+        # first sampled token comes from each row's last real prompt
+        # position: one decode step at pos = len - 1 re-derives it
         pos = jnp.asarray(lens - 1)
         # decode loop with slot recycling
         done = np.zeros(len(chunk), dtype=bool)
         cur = jnp.asarray(toks[np.arange(self.batch_size),
                                np.maximum(lens - 1, 0)])
-        for step in range(self.max_new + 1):
+        for _step in range(self.max_new + 1):
             logits, cache = self._decode(self.params, cache, cur, pos)
             self.stats.decode_steps += 1
             nxt = np.asarray(jnp.argmax(logits, axis=-1))
             pos = pos + 1
             cur = jnp.asarray(nxt)
-            if step == 0:
-                continue_from = nxt  # token emitted at SEP position
-            for i in range(len(chunk)):
-                if not done[i]:
-                    answers[i].append(int(nxt[i]))
-                    if nxt[i] in (self.tok.YES, self.tok.NO) or \
-                            len(answers[i]) >= self.max_new:
-                        done[i] = True
+            # only live slots reach the host loop: finished sequences and
+            # padded slots past len(chunk) are masked out entirely
+            for i in np.nonzero(~done)[0]:
+                answers[i].append(int(nxt[i]))
+                if nxt[i] in (self.tok.YES, self.tok.NO) or \
+                        len(answers[i]) >= self.max_new:
+                    done[i] = True
             if done.all():
                 break  # every live slot finished: recycle the batch
         return [self._detok(a) for a in answers]

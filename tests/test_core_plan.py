@@ -352,6 +352,51 @@ class TestDP:
         rebuilt = rebuild_plan(skeleton, lifted, res.placement, catalog)
         assert count_ops(rebuilt) == count_ops(plan)
 
+    @staticmethod
+    def _stacked_sf_chain(root):
+        """Bottom-up list of the SFs stacked directly above the scan."""
+        chain = []
+        for n in root.walk():
+            if isinstance(n, SemanticFilter) and \
+                    not isinstance(n.children[0], SemanticFilter):
+                v = n
+                while isinstance(v, SemanticFilter):
+                    chain.append(v)
+                    v = next((p for p in root.walk() if v in p.children),
+                             None)
+                break
+        return chain
+
+    def test_rebuild_stacks_most_selective_first(self, catalog):
+        """SFs placed at the same node execute most-selective first
+        (bottom of the stack), regardless of sf_id order."""
+        plan = (Q.scan("books")
+                .sem_filter("{books.title} is about AI?", selectivity=0.9)
+                .sem_filter("{books.description} is long?", selectivity=0.1)
+                .sem_filter("{books.title} sounds fun?", selectivity=0.5)
+                .build())
+        for i, n in enumerate(p for p in plan.walk()
+                              if isinstance(p, SemanticFilter)):
+            n.sf_id = i
+        skeleton, lifted = lift_semantic_filters(plan)
+        placement = {l.idx: l.anchor_nid for l in lifted}  # all stacked
+        rebuilt = rebuild_plan(skeleton, lifted, placement, catalog)
+        chain = self._stacked_sf_chain(rebuilt)
+        assert [sf.selectivity_hint for sf in chain] == [0.1, 0.5, 0.9]
+
+    def test_rebuild_stack_ties_by_sf_id(self, catalog):
+        plan = (Q.scan("books")
+                .sem_filter("{books.title} A?")
+                .sem_filter("{books.title} B?")
+                .build())
+        sfs = [n for n in plan.walk() if isinstance(n, SemanticFilter)]
+        sfs[0].sf_id, sfs[1].sf_id = 1, 0
+        skeleton, lifted = lift_semantic_filters(plan)
+        placement = {l.idx: l.anchor_nid for l in lifted}
+        rebuilt = rebuild_plan(skeleton, lifted, placement, catalog)
+        chain = self._stacked_sf_chain(rebuilt)
+        assert [sf.sf_id for sf in chain] == [0, 1]
+
 
 class TestOptimizerPipeline:
     def test_overhead_reported(self, catalog):

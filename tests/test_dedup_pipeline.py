@@ -147,6 +147,55 @@ def test_placeholder_free_phi_single_call():
     assert sv.prompts_rendered == 1 and sp.prompts_rendered == 6
 
 
+def test_key_probe_fast_path_skips_rerender():
+    """Stacked filters sharing one φ: the FunctionCache key-probe fast
+    path recognises representatives from the first operator by kernel
+    row hash + key row, so the second operator renders NO new prompts —
+    while llm_calls/cache_hits stay identical to per-row execution."""
+    db, phi = _dup_heavy_db(n_cats=9, n_events=300)
+    plan = (Q.scan("events")
+            .join(Q.scan("cats"), "events.cat_id", "cats.cat_id")
+            .sem_filter(phi)
+            .sem_filter(phi)
+            .build())
+    recs_v, sv, _ = _run(db, plan, True, ["events.event_id"])
+    recs_p, sp, _ = _run(db, plan, False, ["events.event_id"])
+    distinct = len({e["cat_id"] for e in db.payloads["events"]})
+    surviving = len({e["cat_id"] for e in db.payloads["events"]
+                     if e["cat_id"] % 2 == 1})
+    # first SF renders one prompt per distinct key; the second sees only
+    # keys the key store already binds -> zero additional renders
+    assert sv.prompts_rendered == distinct
+    # per-row path renders one prompt per row reaching each SF
+    assert sp.prompts_rendered == sp.probe_rows > sv.prompts_rendered
+    assert sv.llm_calls == sp.llm_calls == distinct
+    assert sv.cache_hits == sp.cache_hits
+    assert sv.null_skipped == sp.null_skipped == 0
+    assert surviving <= distinct
+    assert result_f1(recs_p, recs_v) == 1.0
+
+
+def test_key_probe_fast_path_caches_null_verdicts():
+    """A key whose referenced value renders to NULL is bound as NULL in
+    the key store: a later operator sharing φ skips the render for it
+    AND keeps null accounting identical to per-row execution. SP keeps
+    NULL rows alive, so the following SF sees the NULL key again."""
+    db, phi = _dup_heavy_db(n_cats=5, n_events=0)
+    db.payloads["cats"][2]["name"] = None
+    plan = (Q.scan("cats")
+            .sem_project(phi, "odd", dtype="bool")
+            .sem_filter(phi)
+            .build())
+    recs_v, sv, _ = _run(db, plan, True, ["cats.cat_id"])
+    recs_p, sp, _ = _run(db, plan, False, ["cats.cat_id"])
+    # the NULL key is skipped at BOTH operators on both paths
+    assert sv.null_skipped == sp.null_skipped == 2
+    assert sv.llm_calls == sp.llm_calls == 4
+    assert sv.prompts_rendered == 5  # all at the SP, none at the SF
+    assert sp.prompts_rendered == 10
+    assert result_f1(recs_p, recs_v) == 1.0
+
+
 def test_empty_input_semantic_filter():
     db, phi = _dup_heavy_db(n_cats=3, n_events=10)
     from repro.core import col

@@ -238,6 +238,149 @@ class TestCrossJoinHostColumns:
         assert list(np.asarray(out.col("r.b"))) == ["q", "q"]
 
 
+class TestHostSidePredicates:
+    """``IN``/``BETWEEN``/comparison predicates over host-side numpy
+    columns (strings, 64-bit aggregates) must evaluate exactly: jnp
+    rejected string sets outright and silently wrapped 64-bit values
+    through 32-bit mode."""
+
+    def _filter(self, table, pred):
+        from repro.core.plan import Filter
+        db = Database()
+        ex = _executor(db, True)
+        out = ex._run_relational(Filter(pred=pred, children=[]), [table],
+                                 None)
+        return out.compact()
+
+    def _string_table(self):
+        return Table(columns={"t.k": np.asarray(["a", "b", "c", "a", "d"]),
+                              "t.x": jnp.arange(5, dtype=jnp.int32)},
+                     valid=jnp.ones(5, dtype=bool))
+
+    def test_string_in_list(self):
+        out = self._filter(self._string_table(),
+                           col("t.k").isin(["a", "d"]))
+        assert np.asarray(out.col("t.x")).tolist() == [0, 3, 4]
+
+    def test_string_equality(self):
+        out = self._filter(self._string_table(), col("t.k") == "b")
+        assert np.asarray(out.col("t.x")).tolist() == [1]
+
+    def test_string_between(self):
+        out = self._filter(self._string_table(),
+                           col("t.k").between("b", "c"))
+        assert np.asarray(out.col("t.x")).tolist() == [1, 2]
+
+    def _big_table(self):
+        big = np.asarray([2**35, 2**35 + 2**32, 7, -2**40], dtype=np.int64)
+        return Table(columns={"t.v": big,
+                              "t.x": jnp.arange(4, dtype=jnp.int32)},
+                     valid=jnp.ones(4, dtype=bool))
+
+    def test_int64_in_no_truncation(self):
+        # 2**35 and 2**35 + 2**32 collide mod 2**32: int32 truncation
+        # would match both
+        out = self._filter(self._big_table(), col("t.v").isin([2**35]))
+        assert np.asarray(out.col("t.x")).tolist() == [0]
+
+    def test_int64_between_and_compare(self):
+        out = self._filter(self._big_table(),
+                           col("t.v").between(-2**39, 2**34))
+        assert np.asarray(out.col("t.x")).tolist() == [2]
+        out = self._filter(self._big_table(), col("t.v") > 2**35)
+        assert np.asarray(out.col("t.x")).tolist() == [1]
+
+    def test_uint64_in_no_wrap(self):
+        # unsigned lists past 2**31 must also route host-side: 2**35
+        # wraps to 0 through a uint32/int32 cast and would falsely match
+        t = Table(columns={"t.x": jnp.asarray([0, 8, 3], jnp.int32)},
+                  valid=jnp.ones(3, dtype=bool))
+        out = self._filter(
+            t, col("t.x").isin(np.asarray([2**35], dtype=np.uint64)))
+        assert out.capacity == 0
+
+    def test_int64_const_against_device_column(self):
+        # device int32 column vs out-of-range constant: nothing matches
+        # (previously the constant wrapped through int32)
+        t = Table(columns={"t.x": jnp.asarray([1, -2, 3], jnp.int32)},
+                  valid=jnp.ones(3, dtype=bool))
+        out = self._filter(t, col("t.x") == 2**32 + 1)
+        assert out.capacity == 0
+        out = self._filter(t, col("t.x").isin([2**32 + 1, 3]))
+        assert np.asarray(out.col("t.x")).tolist() == [3]
+
+    def test_device_in_stays_exact_through_plan(self):
+        db = Database()
+        db.add_table("t", [{"g": i % 3, "v": i} for i in range(30)])
+        plan = (Q.scan("t").where(col("t.g").isin([0, 2])).build())
+        vec, ref = _both(db, plan, ["t.v"])
+        assert vec == ref and len(vec) == 20
+
+    def test_int64_aggregate_filtered_through_plan(self):
+        # sums past 2**32 live in a host-side int64 column; IN over them
+        # must compare exactly on both paths
+        db = Database()
+        db.add_table("t", [{"g": 0, "v": 2**30}] * 32
+                     + [{"g": 1, "v": 2**30}] * 36 + [{"g": 2, "v": 5}])
+        plan = (Q.scan("t")
+                .group_by(["t.g"], [("sum", "t.v", "s")])
+                .where(col("agg.s").isin([32 * 2**30]))
+                .build())
+        vec, ref = _both(db, plan, ["t.g", "agg.s"])
+        assert vec == ref == [{"t.g": 0, "agg.s": 32 * 2**30}]
+
+
+class TestEmptyGlobalAggregates:
+    def test_min_max_avg_null_on_empty(self):
+        """Global aggregate over a fully-filtered table: SQL NULL (NaN)
+        for min/max/avg, 0 for count and sum — identical on both
+        executor paths."""
+        db = Database()
+        db.add_table("t", [{"g": 1, "v": 2}, {"g": 2, "v": 3}])
+        plan = (Q.scan("t").where(col("t.g") < 0)
+                .group_by([], [("count", "*", "cnt"), ("sum", "t.v", "s"),
+                               ("min", "t.v", "lo"), ("max", "t.v", "hi"),
+                               ("avg", "t.v", "m")])
+                .build())
+        vec, ref = _both(db, plan, None)
+        assert len(vec) == len(ref) == 1
+        for rec in (vec[0], ref[0]):
+            assert rec["agg.cnt"] == 0
+            assert rec["agg.s"] == 0
+            for k in ("agg.lo", "agg.hi", "agg.m"):
+                assert np.isnan(rec[k]), k
+
+    def test_nonempty_unchanged(self):
+        db = Database()
+        db.add_table("t", [{"g": 1, "v": 4}, {"g": 2, "v": 10}])
+        plan = (Q.scan("t")
+                .group_by([], [("min", "t.v", "lo"), ("avg", "t.v", "m")])
+                .build())
+        vec, ref = _both(db, plan, None)
+        assert vec == ref == [{"agg.lo": 4, "agg.m": 7.0}]
+
+
+class TestProjectionResolution:
+    def test_unknown_projection_column_raises(self):
+        from repro.engine.exec import ExecutionError
+        db = Database()
+        db.add_table("t", [{"x": 1}])
+        plan = Q.scan("t").select("t.nope").build()
+        with pytest.raises(ExecutionError, match="t.nope"):
+            _executor(db, True).execute(plan)
+
+    def test_text_projection_column_still_allowed(self):
+        # text columns exist only as payload; projecting them must keep
+        # working (reconstructed through row_id at materialisation)
+        db = Database()
+        db.add_table("t", [{"x": 1, "name": "a"}, {"x": 2, "name": "b"}],
+                     text_columns={"name"})
+        plan = Q.scan("t").select("t.name", "t.x").build()
+        table, _ = _executor(db, True).execute(plan)
+        recs = db.materialize(table, ["t.name", "t.x"])
+        assert recs == [{"t.name": "a", "t.x": 1}, {"t.name": "b", "t.x": 2}]
+
+
 class TestVectorizedFlagCoverage:
     @pytest.mark.parametrize("vectorized", [True, False])
     def test_joined_aggregate_pipeline(self, vectorized):
