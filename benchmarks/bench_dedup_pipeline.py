@@ -74,7 +74,7 @@ def run_once(db, plan, vectorized: bool):
                   vectorized=vectorized)
     HOST_SYNCS.reset()
     table, stats = ex.execute(plan)
-    return table.num_valid, stats, HOST_SYNCS.syncs
+    return table.num_valid, stats, HOST_SYNCS.snapshot()
 
 
 def main(argv=None) -> int:
@@ -108,7 +108,8 @@ def main(argv=None) -> int:
               f"probe_rows={stats.probe_rows}  llm_calls={stats.llm_calls}  "
               f"cache_hits={stats.cache_hits}  "
               f"prompts_rendered={stats.prompts_rendered}  "
-              f"host_syncs={syncs}")
+              f"host_syncs={syncs['syncs']} by_site={syncs['by_site']} "
+              f"host_fallbacks={syncs['host_fallbacks']}")
 
     sv, sp = results["vectorized"][2], results["per-row"][2]
     assert results["vectorized"][1] == results["per-row"][1], "row mismatch"
@@ -118,10 +119,12 @@ def main(argv=None) -> int:
     speedup = results["per-row"][0] / max(results["vectorized"][0], 1e-12)
     print(f"\nspeedup (per-row / vectorized sem_wall_s): {speedup:.2f}x "
           f"on {args.rows} probe rows, {args.distinct} distinct keys")
-    print(f"kernel-layer host syncs: vectorized={host_syncs['vectorized']} "
+    hv = host_syncs["vectorized"]
+    print(f"kernel-layer host syncs: vectorized={hv['syncs']} "
+          f"host_fallbacks={hv['host_fallbacks']} "
           f"(group_build: one fetch per kernel-grouped operator on "
-          f"accelerators, zero on the CPU host build; the pre-group-build "
-          f"pipeline took 2+ device fetches per dedup)")
+          f"accelerators, zero on the CPU host build; host_fallbacks "
+          f"counts requests the host oracle served instead)")
 
     gated = not args.smoke
     ok = not gated or speedup >= 2.0

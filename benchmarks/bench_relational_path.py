@@ -29,6 +29,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.core import Q  # noqa: E402
 from repro.engine import Database, Executor, result_f1  # noqa: E402
+from repro.kernels.sync import HOST_SYNCS  # noqa: E402
 from repro.semantic import OracleBackend, SemanticRunner  # noqa: E402
 
 AGG_SPEEDUP_GATE = 5.0
@@ -70,27 +71,32 @@ def join_plan():
 def run_once(db, plan, vectorized: bool):
     ex = Executor(db, SemanticRunner(OracleBackend(truths={})),
                   vectorized=vectorized)
+    HOST_SYNCS.reset()
     table, stats = ex.execute(plan)
-    return table, stats
+    return table, stats, HOST_SYNCS.snapshot()
 
 
 def bench(db, plan, out_cols, repeats: int) -> dict:
     walls = {}
     tables = {}
+    syncs = {}
     for vectorized in (True, False):  # vectorized first: warms jit
         best = float("inf")
         for _ in range(repeats):
             t0 = time.perf_counter()
-            table, _ = run_once(db, plan, vectorized)
+            table, _, snap = run_once(db, plan, vectorized)
             best = min(best, time.perf_counter() - t0)
         walls[vectorized] = best
         tables[vectorized] = db.materialize(table, out_cols)
+        syncs[vectorized] = snap
     f1 = result_f1(tables[False], tables[True])
     if f1 != 1.0:
         raise AssertionError(f"vectorized result mismatch (f1={f1})")
     return {"vectorized_s": walls[True], "reference_s": walls[False],
             "speedup": walls[False] / max(walls[True], 1e-12),
-            "out_rows": len(tables[True])}
+            "out_rows": len(tables[True]),
+            "host_syncs": {"vectorized": syncs[True],
+                           "reference": syncs[False]}}
 
 
 def main(argv=None) -> int:
@@ -122,6 +128,10 @@ def main(argv=None) -> int:
     print(f"join:      vectorized={join['vectorized_s']:.3f}s  "
           f"reference={join['reference_s']:.3f}s  "
           f"speedup={join['speedup']:.2f}x  out_rows={join['out_rows']}")
+    for name, r in (("aggregate", agg), ("join", join)):
+        hs = r["host_syncs"]["vectorized"]
+        print(f"{name} host syncs (vectorized): {hs['syncs']} "
+              f"by_site={hs['by_site']} host_fallbacks={hs['host_fallbacks']}")
 
     gated = not args.smoke
     ok = not gated or agg["speedup"] >= AGG_SPEEDUP_GATE

@@ -12,9 +12,15 @@ Vectorised, mask-based execution (DuckDB-pipeline analogue, DESIGN.md §4.2):
   ``SegmentPlan`` straight from the kernel and reduces every aggregate
   column in ONE segmented pass (``segmented_reduce`` ops);
 * ⋈ groups its build side with the same op (integer keys group by raw
-  value — exact, no host re-encode) and probes via a representative
-  searchsorted over the kernel's segment offsets, sharing its
-  compact/gather output path with ×;
+  value — exact, no host re-encode), probes via a representative
+  searchsorted over the kernel's segment offsets and expands the match
+  lists through the ``kernels/expand`` op (device scatter+scan on
+  accelerated impls — no ``np.repeat``), sharing its compact/gather
+  output path with × (which enumerates its row pairs through the same
+  op, so cross and equi joins cannot drift in row order);
+* γ's key columns become per-column rank codes inside the same device
+  pass as the group build (``group_build_columns`` — no per-column host
+  ``np.unique``);
 * semantic operators stack the referenced row_ids of *valid* rows into an
   (N, C) key matrix, collapse duplicates with ``dedup_representatives``,
   render prompts only for first-occurrence representatives, and scatter
@@ -22,7 +28,9 @@ Vectorised, mask-based execution (DuckDB-pipeline analogue, DESIGN.md §4.2):
   ``FunctionCache`` stays above this as the cross-operator dedup layer
   (two SFs sharing a prompt still hit each other's entries); its
   key-probe fast path recognises representatives by kernel row hash +
-  key row, so repeat operators skip even the prompt render.
+  key row, so repeat operators skip even the prompt render, and on
+  accelerators its device ``VerdictTable`` resolves repeat filter
+  verdicts in one gather without the host dict round-trip.
 
 The executor records the quantities the paper's cost model predicts:
 ``llm_calls`` (distinct backend invocations = C_LLM), ``rel_rows`` (rows
@@ -61,13 +69,15 @@ from ..core.plan import (
     Sort,
     Union,
 )
-from ..kernels.hash_dedup.ops import dedup_representatives, group_build
+from ..kernels.expand.ops import expand_segments
+from ..kernels.hash_dedup.ops import dedup_representatives, group_build_columns
+from ..kernels.hash_dedup.ref import hash_rows_np
 from ..kernels.segmented_reduce.ops import (
-    group_key_codes,
     join_match_lists,
     segment_plan_from_group_build,
     segmented_aggregate,
 )
+from ..semantic.cache import FP_BASIS
 from ..semantic.runner import SemanticResult, SemanticRunner
 from .table import Database, Table, as_column
 
@@ -76,6 +86,12 @@ MAX_CROSS_ROWS = 30_000_000
 
 @dataclass
 class ExecStats:
+    """Per-query execution counters mirroring the cost model's terms:
+    ``llm_calls`` (distinct backend invocations = C_LLM), ``rel_rows``
+    (rows through relational operators = C_rel), ``probe_rows`` (cache
+    lookups triggered by pulled-up filters), plus wall-clock splits and
+    per-operator breakdowns."""
+
     llm_calls: int = 0
     cache_hits: int = 0
     probe_rows: int = 0
@@ -90,27 +106,48 @@ class ExecStats:
     prompts_rendered: int = 0  # host-side renders (== distinct keys when vectorized)
 
     def bump(self, op: str, key: str, v: float) -> None:
+        """Accumulate ``v`` under ``per_op[op][key]``."""
         d = self.per_op.setdefault(op, {})
         d[key] = d.get(key, 0) + v
 
 
 class ExecutionError(RuntimeError):
-    pass
+    """A plan references columns/tables the executor cannot resolve, or
+    an operator hits a hard resource bound (``MAX_CROSS_ROWS``)."""
 
 
 class Executor:
+    """Physical executor for hybrid plans over a ``Database``.
+
+    ``vectorized=True`` (default) runs the kernel-accelerated paths
+    (group build, segmented aggregation, device join expansion, batch
+    semantic dedup); ``vectorized=False`` keeps the per-row / per-group
+    reference paths, and both must produce identical rows, row order
+    and llm_calls / cache_hits / null_skipped accounting.
+    ``kernel_impl`` threads an implementation token ("auto" | "kernel"
+    | "interpret" | "ref" | "host") through every kernel-backed
+    operator — tests force "ref"/"interpret" to exercise the
+    accelerated path on CPU and assert, via
+    ``kernels.sync.HOST_SYNCS``, that it performs zero host-side
+    ``np.unique``/``np.repeat``."""
+
     def __init__(self, db: Database, runner: SemanticRunner,
                  fresh_cache_per_query: bool = True,
-                 vectorized: bool = True):
+                 vectorized: bool = True,
+                 kernel_impl: str = "auto"):
         self.db = db
         self.runner = runner
         self.fresh_cache_per_query = fresh_cache_per_query
         # vectorized=False keeps the per-row reference path (one rendered
         # prompt and context dict per row) for equivalence testing.
         self.vectorized = vectorized
+        self.kernel_impl = kernel_impl
 
     # ------------------------------------------------------------------ API
     def execute(self, plan: Node) -> tuple[Table, ExecStats]:
+        """Run ``plan`` to a materialised ``Table`` plus its
+        ``ExecStats`` (resetting the per-query cache scope first unless
+        constructed with ``fresh_cache_per_query=False``)."""
         if self.fresh_cache_per_query:
             self.runner.reset_query_scope()
         stats = ExecStats()
@@ -295,6 +332,10 @@ class Executor:
         raise ExecutionError(f"unsupported value expr {e}")
 
     def _equi_join(self, left: Table, right: Table, lk: str, rk: str) -> Table:
+        """Equi join. Vectorized: device-grouped build side + device
+        match expansion (``join_match_lists``); reference: stable
+        argsort + searchsorted + ``np.repeat``. Identical output rows in
+        identical order either way."""
         lt = left.compact()
         rt = right.compact()
         lkv = np.asarray(lt.col(lk))
@@ -302,7 +343,7 @@ class Executor:
         if self.vectorized:
             # hash-grouped build side + segment offsets; identical output
             # rows in identical order to the reference below
-            out_l, out_r = join_match_lists(lkv, rkv)
+            out_l, out_r = join_match_lists(lkv, rkv, impl=self.kernel_impl)
         else:
             order = np.argsort(rkv, kind="stable")
             rk_sorted = rkv[order]
@@ -331,17 +372,29 @@ class Executor:
         return Table(columns=cols, valid=jnp.ones(len(out_l), dtype=bool))
 
     def _cross_join(self, left: Table, right: Table) -> Table:
+        """Cross join. Vectorized: the row-pair enumeration is the same
+        ``kernels/expand`` op the equi join expands matches with (n2
+        rows per left segment, zero offsets → tiled right indices), so
+        × and ⋈ cannot drift in row order; reference: host
+        ``np.repeat``/``np.tile``."""
         lt = left.compact()
         rt = right.compact()
         n1, n2 = lt.capacity, rt.capacity
         if n1 * n2 > MAX_CROSS_ROWS:
             raise ExecutionError(
                 f"cross join of {n1}x{n2} exceeds MAX_CROSS_ROWS")
-        out_l = np.repeat(np.arange(n1), n2)
-        out_r = np.tile(np.arange(n2), n1)
+        if self.vectorized:
+            out_l, out_r = expand_segments(
+                np.full(n1, n2, dtype=np.int64), impl=self.kernel_impl)
+        else:
+            out_l = np.repeat(np.arange(n1), n2)
+            out_r = np.tile(np.arange(n2), n1)
         return self._gather_joined(lt, rt, out_l, out_r)
 
     def _aggregate(self, node: Aggregate, child: Table) -> Table:
+        """Dispatch grouped/global aggregation to the vectorized or
+        per-group reference implementation (the reference also defines
+        the n == 0 empty-column dtypes)."""
         t = child.compact()
         n = t.capacity
         if not node.group_by:
@@ -378,21 +431,24 @@ class Executor:
     def _aggregate_vectorized(self, node: Aggregate, t: Table) -> Table:
         """Grouped aggregation in one segmented pass per aggregate column.
 
-        Group keys become per-column int32 codes (``group_key_codes``),
-        the device ``group_build`` op turns the code rows into group ids
-        plus a ready ``SegmentPlan`` (counts, segment offsets and the
-        grouped row order all come off the kernel — no host lexsort or
-        bincount over N rows), and ``segmented_aggregate`` reduces each
-        column over the group segments. Per-group outputs are then
-        permuted (a G-sized gather) to the reference path's
-        ``np.unique(axis=0)`` lexicographic order so order-sensitive
-        downstream operators (LIMIT) see identical rows; key columns are
-        gathered from the originals, preserving dtypes without the
-        reference's promotion round-trip.
+        The fused ``group_build_columns`` op assigns per-column int32
+        rank codes AND builds the groups in a single device pass (one
+        device→host fetch, zero per-column host ``np.unique`` on
+        device-width keys; strings/64-bit columns use the exact host
+        oracle), yielding group ids plus a ready ``SegmentPlan``
+        (counts, segment offsets and the grouped row order all come off
+        the kernel — no host lexsort or bincount over N rows), and
+        ``segmented_aggregate`` reduces each column over the group
+        segments. Per-group outputs are then permuted (a G-sized
+        gather) to the reference path's ``np.unique(axis=0)``
+        lexicographic order so order-sensitive downstream operators
+        (LIMIT) see identical rows; key columns are gathered from the
+        originals, preserving dtypes without the reference's promotion
+        round-trip.
         """
-        key_vals = [np.asarray(t.col(k)) for k in node.group_by]
-        codes = group_key_codes(key_vals)
-        gb = group_build(codes)
+        key_cols = [t.col(k) for k in node.group_by]
+        codes, gb = group_build_columns(key_cols, impl=self.kernel_impl)
+        key_vals = [np.asarray(c) for c in key_cols]
         g = gb.num_groups
         plan = segment_plan_from_group_build(gb)
         # codes are order-isomorphic to key values, so lexsorting the G
@@ -408,7 +464,8 @@ class Executor:
         for func, c, name in node.aggs:
             values = None if func == "count" else np.asarray(t.col(c))
             cols[f"agg.{name}"] = as_column(
-                segmented_aggregate(plan, values, func)[grp_order])
+                segmented_aggregate(plan, values, func,
+                                    impl=self.kernel_impl)[grp_order])
         return Table(columns=cols, valid=jnp.ones(g, dtype=bool))
 
     @staticmethod
@@ -515,7 +572,7 @@ class Executor:
                     else np.zeros((n, 1), dtype=np.int32))
             keys = np.ascontiguousarray(keys, dtype=np.int32)
             _, reps, inverse, rep_hashes = dedup_representatives(
-                keys, return_hashes=True)
+                keys, return_hashes=True, impl=self.kernel_impl)
             rep_ctxs = [self._context_at(rts, id_cols, int(r)) for r in reps]
             counts = np.bincount(inverse, minlength=len(reps))
             # key-probe fast path: the kernel's row hash + exact key row
@@ -523,9 +580,14 @@ class Executor:
             # earlier operator before any prompt is re-rendered
             key_ids = [(int(h), keys[int(r)].tobytes())
                        for h, r in zip(rep_hashes, reps)]
+            # device verdict table: hash + independent fingerprint key
+            # the int8 verdict column — boolean operators only
+            key_fps = (hash_rows_np(keys[reps], basis=FP_BASIS)
+                       if (self.runner.cache.verdicts.enabled
+                           and out_dtype == "bool") else None)
             res = self.runner.evaluate_unique(
                 node.phi, rep_ctxs, counts=counts, out_dtype=out_dtype,
-                key_ids=key_ids)
+                key_ids=key_ids, key_hashes=rep_hashes, key_fps=key_fps)
 
         return tc, res, inverse
 

@@ -13,6 +13,10 @@ from .ref import decode_attention_ref
 @partial(jax.jit, static_argnames=("block_k", "impl"))
 def decode_attention(q, k, v, lengths, *, block_k: int = 512,
                      impl: str = "auto"):
+    """Single-step flash-decode over a padded KV cache: per-sequence
+    ``lengths`` mask the live cache prefix. ``impl``: "kernel" |
+    "interpret" (Pallas) | "ref" (jnp) | "auto" (kernel on TPU, ref
+    elsewhere); the cache length is padded to ``block_k`` multiples."""
     if impl == "auto":
         impl = "kernel" if jax.default_backend() == "tpu" else "ref"
     if impl == "ref":

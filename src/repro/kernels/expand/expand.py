@@ -1,0 +1,57 @@
+"""Segment-expansion scan — Pallas kernel (the probe side of the join).
+
+``expand_segments`` (ops.py) turns per-segment row counts + offsets into
+gather indices: the device analogue of ``np.repeat``-style probe-side
+match expansion. The device formulation is scatter + running prefix sum:
+
+1. scatter a +1 *mark* at every segment's start position inside the
+   (T,) output domain (empty segments collapse onto the next segment's
+   start and are skipped by construction);
+2. a running cumulative sum over the marks assigns every output
+   position its segment id (``cumsum(mark) - 1``);
+3. two gathers (``starts[seg]``, ``offsets[seg]``) finish the
+   within-segment positions — plain jnp in ops.py.
+
+This module holds step 2. The TPU grid iterates row tiles sequentially,
+so the kernel carries the running mark total in SMEM scratch — the same
+accumulate-across-the-grid pattern as ``group_build``'s boundary scan
+and ``segmented_reduce``'s accumulator tiles. Everything downstream of
+the scan is gather/elementwise and fuses into the same device pass.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _running_sum_kernel(mark_ref, seg_ref, carry):
+    r = pl.program_id(0)
+
+    @pl.when(r == 0)
+    def _():
+        carry[0] = 0
+
+    mark = mark_ref[...]                # (block_rows,) int32 segment marks
+    csum = jnp.cumsum(mark)
+    seg_ref[...] = carry[0] + csum - 1
+    carry[0] = carry[0] + csum[-1]
+
+
+def running_segment_ids_kernel(marks, *, block_rows: int = 1024,
+                               interpret: bool = False):
+    """marks: (T,) int32 with T % block_rows == 0 (ops.py pads): +k at
+    positions where k segments start, 0 elsewhere -> (T,) int32 segment
+    ids (inclusive running sum of marks, minus one)."""
+    t = marks.shape[0]
+    grid = (t // block_rows,)
+    return pl.pallas_call(
+        _running_sum_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((t,), jnp.int32),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(marks)

@@ -1,0 +1,110 @@
+"""jit'd wrapper: device segment expansion (counts + offsets -> gather
+indices).
+
+``expand_segments`` is the device replacement for the relational path's
+last ``np.repeat``: the equi-join probe expansion (per-probe match
+counts + build-segment offsets -> probe/build index lists) and the
+cross join's row enumeration both reduce to it. Three implementations,
+following the ``hash_dedup``/``segmented_reduce`` contract:
+
+* ``impl="kernel"``/``"interpret"`` — scatter marks at segment starts,
+  Pallas running-sum scan for segment ids, fused gathers for positions;
+* ``impl="ref"`` — same formulation with a jnp ``cumsum`` scan;
+* ``impl="host"`` — the exact ``np.repeat`` oracle (zero device work);
+* ``impl="auto"`` — the kernel on TPU, the host oracle elsewhere (the
+  ``segment_count`` convention: off-TPU, numpy beats XLA on this shape
+  and costs zero device→host syncs).
+
+Device impls fetch the (seg_ids, positions) pair in ONE device→host
+sync, ticked against ``kernels.sync.HOST_SYNCS``; the host oracle
+records a ``host_fallbacks["expand"]`` serving instead, so tests can
+assert the accelerated path never re-enters ``np.repeat``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sync import HOST_SYNCS
+from ..util import pow2_bucket
+from .expand import running_segment_ids_kernel
+from .ref import expand_segments_np, running_segment_ids_jnp
+
+_EMPTY = np.zeros(0, dtype=np.int64)
+
+
+@partial(jax.jit, static_argnames=("total", "impl", "block_rows"))
+def _expand_device(starts, offsets, *, total: int, impl: str,
+                   block_rows: int = 1024):
+    """Scatter + scan + gather over a padded (T,) output domain.
+
+    ``starts``/``offsets`` are padded (N,) int32; padding segments carry
+    ``starts == total`` so their marks drop out of bounds. Positions
+    ``t >= <real total>`` hold garbage — the host wrapper slices them
+    off before anything reads them."""
+    marks = jnp.zeros(total, jnp.int32).at[starts].add(1, mode="drop")
+    if impl == "ref":
+        seg = running_segment_ids_jnp(marks)
+    else:
+        seg = running_segment_ids_kernel(
+            marks, block_rows=block_rows, interpret=(impl == "interpret"))
+    iota = jnp.arange(total, dtype=jnp.int32)
+    within = iota - starts[seg]
+    return seg, within + offsets[seg]
+
+
+def expand_segments(counts, offsets=None, *, impl: str = "auto"
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """Expand per-segment ``counts`` (N,) into ``(seg_ids, positions)``
+    gather indices over T = sum(counts) output rows.
+
+    ``seg_ids[t]`` is the segment output row t belongs to (segments in
+    order, each repeated count-many times — ``np.repeat(arange(N),
+    counts)``); ``positions[t]`` is ``offsets[seg_ids[t]]`` plus row
+    t's rank within its segment (``offsets=None`` = all-zero offsets).
+    Empty segments contribute no rows; int64 outputs either way.
+
+    The equi-join probe uses ``offsets = build-segment starts`` and
+    gathers the build order through ``positions``; the cross join uses
+    ``counts = full(n_left, n_right)`` with no offsets, making
+    ``positions`` the tiled right-row enumeration. N and T are bucketed
+    to powers of two before the jit boundary (bounded compiles across
+    varying table sizes); padding segments scatter out of bounds and
+    cannot perturb any real row.
+    """
+    counts = np.ascontiguousarray(counts, dtype=np.int64)
+    n = len(counts)
+    offs = (None if offsets is None
+            else np.ascontiguousarray(offsets, dtype=np.int64))
+    if offs is not None and len(offs) != n:
+        raise ValueError(f"offsets must match counts: {len(offs)} != {n}")
+    total = int(counts.sum())
+    if n == 0 or total == 0:
+        return _EMPTY, _EMPTY.copy()
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "host"
+    t_bucket = pow2_bucket(total)
+    if impl == "host" or t_bucket > 2**31 - 1:
+        # int32 device indices cannot address >= 2^31 output rows: a
+        # pathological skew-join expansion keeps the exact int64 oracle
+        HOST_SYNCS.fallback("expand")
+        return expand_segments_np(counts, offs)
+    starts = np.cumsum(counts) - counts
+    if offs is None:
+        offs = np.zeros(n, dtype=np.int64)
+    n_bucket = pow2_bucket(n)
+    if n_bucket != n:
+        # out-of-bounds starts: the padding segments' marks are dropped
+        starts = np.concatenate(
+            [starts, np.full(n_bucket - n, t_bucket, dtype=np.int64)])
+        offs = np.concatenate(
+            [offs, np.zeros(n_bucket - n, dtype=np.int64)])
+    out = _expand_device(jnp.asarray(starts, jnp.int32),
+                         jnp.asarray(offs, jnp.int32),
+                         total=t_bucket, impl=impl)
+    seg, pos = jax.device_get(out)
+    HOST_SYNCS.tick(site="expand")
+    return (seg[:total].astype(np.int64), pos[:total].astype(np.int64))

@@ -25,7 +25,10 @@ def _pad_to(x, axis, mult):
 @partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "impl"))
 def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
                     block_k: int = 128, impl: str = "auto"):
-    """impl: 'kernel' | 'interpret' | 'ref' | 'auto' (kernel on TPU else ref)."""
+    """Tiled flash attention over (B, H, S, D) tensors; sequence
+    lengths are padded to ``block_q``/``block_k`` multiples and sliced
+    back. ``impl``: "kernel" | "interpret" (Pallas) | "ref" (jnp
+    oracle) | "auto" (kernel on TPU, ref elsewhere)."""
     if impl == "auto":
         impl = "kernel" if jax.default_backend() == "tpu" else "ref"
     if impl == "ref":

@@ -29,9 +29,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..sync import HOST_SYNCS
+from ..util import pow2_bucket
 from .group_build import group_boundaries_kernel
 from .hash_dedup import hash_rows_kernel
 from .ref import (
+    column_codes_np,
     first_occurrence_ref,
     group_boundaries_ref,
     group_build_np,
@@ -42,6 +44,10 @@ from .ref import (
 
 @partial(jax.jit, static_argnames=("block_rows", "impl"))
 def hash_rows(keys, *, block_rows: int = 1024, impl: str = "auto"):
+    """(N, C) int32 key matrix -> (N,) uint32 FNV-1a row hashes.
+    ``impl``: "kernel" | "interpret" (Pallas) | "ref" (jnp) | "auto"
+    (kernel on TPU, jnp elsewhere); N is padded to ``block_rows``
+    multiples internally."""
     if impl == "auto":
         impl = "kernel" if jax.default_backend() == "tpu" else "ref"
     if impl == "ref":
@@ -200,18 +206,151 @@ def group_build(keys, *, impl: str = "auto") -> GroupBuild:
     if impl == "auto":
         impl = "kernel" if jax.default_backend() == "tpu" else "host"
     if impl == "host":
+        HOST_SYNCS.fallback("group_build")
         return _group_build_host(keys_np)
-    bucket = max(1024, 1 << (n - 1).bit_length())
+    bucket = pow2_bucket(n)
     keys_in = (np.pad(keys_np, ((0, bucket - n), (0, 0)))
                if bucket != n else keys_np)
     out = _group_build_device(jnp.asarray(keys_in), n, impl=impl)
     (g, inverse, reps, counts, starts, order, sk, collision) = \
         jax.device_get(out)
-    HOST_SYNCS.tick()
+    HOST_SYNCS.tick(site="group_build")
     if bool(collision):
+        # rare 32-bit hash collision: exact host regroup (np.unique) —
+        # recorded so the zero-host-numpy accounting stays honest
+        HOST_SYNCS.fallback("group_build_collision")
         return _group_build_exact_host(keys_np)
     g = int(g)
     return GroupBuild(
+        num_groups=g,
+        group_ids=inverse[:n].astype(np.int64),
+        reps=reps[:g].astype(np.int64),
+        counts=counts[:g].astype(np.int64),
+        starts=starts[:g].astype(np.int64),
+        order=order[:n].astype(np.int64),
+        sort_keys=sk[:n],
+    )
+
+
+# --------------------------------------------------------- code assignment
+
+def _sortable_bits(col):
+    """Order-preserving map of a device-width column to uint32 sort
+    bits, plus the rows that must always open a fresh group (NaN keys —
+    ``np.unique(axis=0)`` never equates NaN rows). -0.0 is canonicalised
+    to +0.0 first, and non-NaN floats can never reach 0xFFFFFFFF, so
+    NaN (and padding) owns the top of the sort space."""
+    if col.dtype.kind == "f":
+        isn = jnp.isnan(col)
+        x = col.astype(jnp.float32)
+        # canonicalise -0.0 to +0.0 by comparison (an `x + 0.0` would be
+        # algebraically folded away and leave the sign bit in the key)
+        x = jnp.where(x == jnp.float32(0.0), jnp.float32(0.0), x)
+        b = jax.lax.bitcast_convert_type(x, jnp.uint32)
+        bits = jnp.where((b >> 31) == 0, b ^ jnp.uint32(0x80000000), ~b)
+        return jnp.where(isn, jnp.uint32(0xFFFFFFFF), bits), isn
+    none = jnp.zeros(col.shape, bool)
+    if col.dtype.kind == "u":
+        return col.astype(jnp.uint32), none
+    # signed ints / bool: order-preserving int32 -> uint32 bias
+    bits = col.astype(jnp.int32).astype(jnp.uint32) ^ jnp.uint32(0x80000000)
+    return bits, none
+
+
+def _rank_codes(bits, force_new):
+    """Dense rank codes for one column: sort the bits, boundary-scan the
+    sorted run (``force_new`` rows — NaN keys — always open a group),
+    scatter the ranks back to row order. The stable sort keeps equal
+    bits (and therefore NaN rows) in row order, matching the oracle's
+    ascending first-appearance NaN codes."""
+    n = bits.shape[0]
+    order = jnp.argsort(bits, stable=True).astype(jnp.int32)
+    sb = bits[order]
+    sf = force_new[order]
+    prev = jnp.concatenate([sb[:1] ^ jnp.uint32(1), sb[:-1]])
+    bnd = ((sb != prev) | sf).astype(jnp.int32)
+    ranks = jnp.cumsum(bnd) - 1
+    return jnp.zeros(n, jnp.int32).at[order].set(ranks)
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def _group_build_columns_device(cols, n_valid, *, impl: str):
+    """Fused device pass: per-column rank codes (sort + boundary scan,
+    the same machinery ``group_build`` sorts rows with) -> (N, C) int32
+    code matrix -> row-wise group build, all in one jit. Padding rows
+    (``>= n_valid``) sort last in every per-column pass (their merged or
+    trailing codes cannot shift any real value's rank) and are masked
+    out of the row-wise build exactly as in ``_group_build_device``."""
+    n = cols[0].shape[0]
+    iota = jnp.arange(n, dtype=jnp.int32)
+    is_pad = iota >= n_valid
+    code_cols = []
+    for col in cols:
+        bits, isn = _sortable_bits(col)
+        bits = jnp.where(is_pad, jnp.uint32(0xFFFFFFFF), bits)
+        code_cols.append(_rank_codes(bits, isn & ~is_pad))
+    codes = jnp.stack(code_cols, axis=1)
+    return (codes,) + tuple(_group_build_device(codes, n_valid, impl=impl))
+
+
+def _device_width(col) -> bool:
+    """True when a column can take the device code-assignment path
+    (narrow numeric/bool — exactly the dtypes ``as_column`` puts on
+    device; strings and 64-bit numerics stay with the host oracle)."""
+    dt = np.dtype(col.dtype) if hasattr(col, "dtype") else None
+    return dt is not None and dt.kind in "iufb" and dt.itemsize <= 4
+
+
+def group_build_columns(key_columns, *, impl: str = "auto"
+                        ) -> tuple[np.ndarray, GroupBuild]:
+    """Device code assignment + group build for arbitrary-dtype key
+    columns: the grouped-aggregation entry point.
+
+    Takes the raw group-by columns (device jnp arrays or host numpy)
+    and returns ``(codes, gb)``: the (N, C) int32 per-column rank codes
+    (order-isomorphic to the values, NaN keys distinct — the
+    ``column_codes_np`` contract) and the ``GroupBuild`` over the code
+    rows. On the device path ("kernel" on TPU, "ref"/"interpret"
+    elsewhere) the per-column code assignment, the row-wise group build
+    and the collision check all run inside ONE jit and come back in ONE
+    device→host fetch — no per-column host ``np.unique``. ``"host"``
+    (and ``"auto"`` off-TPU) is the exact numpy oracle path, recorded
+    as a ``host_fallbacks["group_key_codes"]`` serving. Columns of
+    non-device width (strings, 64-bit numerics) always use the host
+    oracle — the string-key fallback.
+    """
+    if not key_columns:
+        raise ValueError("group_build_columns needs at least one column")
+    n = int(np.shape(key_columns[0])[0])
+    c = len(key_columns)
+    if n == 0:
+        empty = np.zeros(0, dtype=np.int64)
+        return (np.zeros((0, c), dtype=np.int32),
+                GroupBuild(0, empty, empty, empty, empty, empty,
+                           np.zeros(0, dtype=np.uint32)))
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "host"
+    if impl != "host" and not all(_device_width(k) for k in key_columns):
+        impl = "host"
+    if impl == "host":
+        HOST_SYNCS.fallback("group_key_codes")
+        codes = column_codes_np(key_columns)
+        return codes, _group_build_host(codes)
+    bucket = pow2_bucket(n)
+    cols = [jnp.asarray(k) for k in key_columns]
+    if bucket != n:
+        cols = [jnp.pad(k, (0, bucket - n)) for k in cols]
+    out = _group_build_columns_device(cols, n, impl=impl)
+    (codes, g, inverse, reps, counts, starts, order, sk, collision) = \
+        jax.device_get(out)
+    HOST_SYNCS.tick(site="group_build_columns")
+    codes = np.ascontiguousarray(codes[:n])
+    if bool(collision):
+        # rare 32-bit hash collision over code rows: exact host regroup
+        HOST_SYNCS.fallback("group_build_collision")
+        return codes, _group_build_exact_host(codes)
+    g = int(g)
+    return codes, GroupBuild(
         num_groups=g,
         group_ids=inverse[:n].astype(np.int64),
         reps=reps[:g].astype(np.int64),

@@ -8,15 +8,18 @@ Three layers, mirroring ``hash_dedup``:
   bucket N and the segment count to powers of two before the jit boundary
   so varying batch sizes reuse a bounded set of compiles (the same
   contract as ``hash_dedup.ops.dedup_representatives``);
-* the executor-facing grouping toolkit: ``group_key_codes`` (per-column
-  int32 codes for arbitrary-dtype group keys, feeding the ``hash_dedup``
-  kernel), ``SegmentPlan``/``segmented_aggregate`` (one-pass grouped
-  aggregates preserving the executor's exactness contract: integral
-  counts, int64-exact integer sum, float64 accumulation, dtype-preserving
-  min/max incl. strings) and ``join_match_lists`` (build side grouped by
-  the device ``group_build`` op for narrow integer keys — the kernel's
-  segment offsets drive the probe with no host-side key re-encode; the
-  host encode path remains as the fallback for strings/floats).
+* the executor-facing grouping toolkit: ``group_key_codes`` (the host
+  oracle for the device code-assignment pass — see
+  ``hash_dedup.ops.group_build_columns``), ``SegmentPlan``/
+  ``segmented_aggregate`` (one-pass grouped aggregates preserving the
+  executor's exactness contract: integral counts, int64-exact integer
+  sum, float64 accumulation, dtype-preserving min/max incl. strings)
+  and ``join_match_lists`` (build side grouped by the device
+  ``group_build`` op for narrow integer keys — the kernel's segment
+  offsets drive the probe, and the match expansion runs through the
+  ``kernels/expand`` op, so the accelerated path performs no host-side
+  key re-encode and no ``np.repeat``; the host encode path remains as
+  the fallback for strings/floats).
 """
 from __future__ import annotations
 
@@ -27,8 +30,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..expand.ops import expand_segments
 from ..hash_dedup.ops import group_build
+from ..hash_dedup.ref import column_codes_np
 from ..sync import HOST_SYNCS
+from ..util import pow2_bucket
 from .ref import segment_reduce_jnp
 from .segmented_reduce import OPS, reduce_identity, segment_reduce_kernel
 
@@ -61,10 +67,6 @@ def segment_reduce(values, segment_ids, *, num_segments: int,
     return out[:num_segments]
 
 
-def _pow2_bucket(n: int, floor: int) -> int:
-    return max(floor, 1 << (max(n, 1) - 1).bit_length())
-
-
 def segment_reduce_host(values, segment_ids, num_segments: int,
                         op: str = "sum", *, impl: str = "auto") -> np.ndarray:
     """Host-facing ``segment_reduce``: buckets both the row count and the
@@ -80,8 +82,8 @@ def segment_reduce_host(values, segment_ids, num_segments: int,
     if len(v) == 0:
         return np.full(num_segments, reduce_identity(op, v.dtype),
                        dtype=v.dtype)
-    n_bucket = _pow2_bucket(len(v), 1024)
-    g_bucket = _pow2_bucket(num_segments, 512)
+    n_bucket = pow2_bucket(len(v), 1024)
+    g_bucket = pow2_bucket(num_segments, 512)
     if n_bucket != len(v):
         ident = reduce_identity(op, v.dtype)
         v = np.concatenate([v, np.full(n_bucket - len(v), ident,
@@ -91,7 +93,7 @@ def segment_reduce_host(values, segment_ids, num_segments: int,
     out = segment_reduce(jnp.asarray(v), jnp.asarray(seg),
                          num_segments=g_bucket, op=op, impl=impl)
     out = np.asarray(out)[:num_segments]
-    HOST_SYNCS.tick()
+    HOST_SYNCS.tick(site="segment_reduce")
     return out
 
 
@@ -115,31 +117,17 @@ def segment_count(segment_ids, num_segments: int, *,
 
 def group_key_codes(key_columns: list) -> np.ndarray:
     """Encode arbitrary-dtype group-key columns as an (N, C) int32 code
-    matrix for the ``hash_dedup`` kernel.
+    matrix: the exact host oracle (per-column ``np.unique``) for the
+    device code-assignment pass.
 
-    Codes are order-isomorphic to the column values (np.unique's sorted
-    code space), so lexsorting code rows reproduces the group order of
-    ``np.unique(keys, axis=0)`` on the stacked key matrix — which the
-    reference aggregate path uses, and which downstream order-sensitive
-    operators (a LIMIT directly above a group-by) observe.
-
-    NaN keys follow the reference semantics: ``np.unique(axis=0)`` never
-    equates NaN rows, so every NaN key value gets its own code (ascending
-    in row order — NaN groups sort last, in first-appearance order).
+    The accelerated aggregate path gets its codes from
+    ``hash_dedup.ops.group_build_columns`` (per-column sort + boundary
+    scan fused into the group build, one device→host fetch); this
+    function IS that op's ``impl="host"`` code space — see
+    ``column_codes_np`` for the code-order and NaN-key contract both
+    implementations pin down.
     """
-    out = []
-    for kv in key_columns:
-        kv = np.asarray(kv)
-        if kv.dtype.kind in "fc" and np.isnan(kv).any():
-            isn = np.isnan(kv)
-            uniq, inv = np.unique(kv[~isn], return_inverse=True)
-            codes = np.empty(len(kv), dtype=np.int64)
-            codes[~isn] = inv
-            codes[isn] = len(uniq) + np.arange(int(isn.sum()))
-            out.append(codes)
-        else:
-            out.append(np.unique(kv, return_inverse=True)[1].astype(np.int64))
-    return np.stack(out, axis=1).astype(np.int32)
+    return column_codes_np(key_columns)
 
 
 @dataclass(frozen=True)
@@ -156,6 +144,9 @@ class SegmentPlan:
 
 
 def make_segment_plan(seg, num_groups: int) -> SegmentPlan:
+    """Derive a ``SegmentPlan`` from raw group ids on the host (bincount
+    + stable argsort). The accelerated path adopts the kernel's segment
+    structure via ``segment_plan_from_group_build`` instead."""
     seg = np.asarray(seg)
     counts = np.bincount(seg, minlength=num_groups).astype(np.int64)
     order = np.argsort(seg, kind="stable")
@@ -187,8 +178,9 @@ def segmented_aggregate(plan: SegmentPlan, values, func: str, *,
     integral int64; integer sum accumulates in int64; float sum and avg
     accumulate in float64; min/max preserve the column dtype (strings
     included) and propagate NaN like ``np.min``/``np.max``. min/max over
-    int32/float32 columns run through the device ``segment_reduce``;
-    everything needing 64-bit accumulation (or a non-device dtype) stays
+    int32/float32 columns run through the device ``segment_reduce``
+    (unless ``impl="host"`` forces the numpy reduction); everything
+    needing 64-bit accumulation (or a non-device dtype) stays
     host-side. Every group must be non-empty (true by construction when
     groups come from observed key rows).
     """
@@ -202,7 +194,7 @@ def segmented_aggregate(plan: SegmentPlan, values, func: str, *,
             return np.zeros(0, dtype=np.int64)
         return np.zeros(0, dtype=np.float64)
     if func in ("min", "max"):
-        if v.dtype in _DEVICE_DTYPES:
+        if v.dtype in _DEVICE_DTYPES and impl != "host":
             return segment_reduce_host(v, plan.seg, plan.num_groups, func,
                                        impl=impl)
         if v.dtype.kind in "biufc":
@@ -270,7 +262,7 @@ def join_match_lists(probe_keys, build_keys, *, impl: str = "auto"
     offsets = np.zeros(num_codes, dtype=np.int64)
     np.cumsum(counts_by_code[:-1], out=offsets[1:])
     cnt = counts_by_code[probe_codes]
-    return _expand_matches(cnt, build_order, offsets[probe_codes])
+    return _expand_matches(cnt, build_order, offsets[probe_codes], impl=impl)
 
 
 def _join_match_device(pk: np.ndarray, bk: np.ndarray, *, impl: str = "auto"
@@ -286,20 +278,18 @@ def _join_match_device(pk: np.ndarray, bk: np.ndarray, *, impl: str = "auto"
     matched = rep_keys[pos_c] == pk
     gid = np.where(matched, pos_c, 0)
     cnt = np.where(matched, gb.counts[gid], 0)
-    return _expand_matches(cnt, gb.order, gb.starts[gid])
+    return _expand_matches(cnt, gb.order, gb.starts[gid], impl=impl)
 
 
 def _expand_matches(cnt: np.ndarray, build_order: np.ndarray,
-                    probe_offsets: np.ndarray
+                    probe_offsets: np.ndarray, *, impl: str = "auto"
                     ) -> tuple[np.ndarray, np.ndarray]:
     """Expand per-probe match counts into (out_probe, out_build) index
-    lists: probe-major, build rows in segment (stable) order."""
-    total = int(cnt.sum())
-    empty = np.zeros(0, dtype=np.int64)
-    if total == 0:
-        return empty, empty
-    out_probe = np.repeat(np.arange(len(cnt), dtype=np.int64), cnt)
-    first = np.cumsum(cnt) - cnt
-    within = np.arange(total, dtype=np.int64) - np.repeat(first, cnt)
-    out_build = build_order[np.repeat(probe_offsets, cnt) + within]
-    return out_probe, out_build
+    lists: probe-major, build rows in segment (stable) order. The
+    expansion itself is the ``kernels/expand`` op — the device
+    scatter+scan on accelerated impls, the ``np.repeat`` oracle on
+    ``"host"``/auto-off-TPU."""
+    out_probe, pos = expand_segments(cnt, probe_offsets, impl=impl)
+    if len(out_probe) == 0:
+        return out_probe, pos
+    return out_probe, build_order[pos]

@@ -33,15 +33,15 @@ def ssd(x, dt, A, B, C, chunk: int = 128, impl: str = "auto"):
         x, dt, A, B, C, chunk=chunk, interpret=(impl == "interpret"))
     nc = s // chunk
 
-    def step(hprev, inp):
+    def _step(hprev, inp):
         st, dec = inp
         hnew = hprev * dec[:, :, None, None] + st
         return hnew, hprev
 
     h0 = jnp.zeros((b, h, p, states.shape[-1]), jnp.float32)
     final_state, prev_states = jax.lax.scan(
-        step, h0, (states.transpose(1, 0, 2, 3, 4),
-                   chunk_decay.transpose(1, 0, 2)))
+        _step, h0, (states.transpose(1, 0, 2, 3, 4),
+                    chunk_decay.transpose(1, 0, 2)))
     prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b,nc,h,p,n)
 
     Cc = C.reshape(b, nc, chunk, -1)

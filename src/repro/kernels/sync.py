@@ -1,26 +1,61 @@
 """Device→host synchronisation accounting for the kernel layer.
 
 Every host-facing kernel wrapper that materialises device results
-(``group_build``, ``segment_reduce_host``) ticks the global counter once
-per device→host fetch. The dedup/relational microbenchmarks report the
-count so removed round-trips stay visible in the BENCH_*.json artifacts
-— the cost model's fidelity to the executor depends on the executor not
+(``group_build``, ``group_build_columns``, ``segment_reduce_host``,
+``expand_segments``) ticks the global counter once per device→host
+fetch, tagged with the site that fetched. Wrappers that *fall back* to
+host-side numpy (the ``impl="host"`` oracle paths: ``np.unique`` code
+assignment, ``np.repeat`` expansion) record a *fallback* instead — so
+tests can assert that the accelerated path performs zero host-side
+numpy, and the microbenchmarks can report both counts in their
+BENCH_*.json artifacts. Removed round-trips stay visible because the
+cost model's fidelity to the executor depends on the executor not
 hiding host bounces (Larch's placement-vs-executor drift argument).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 
 @dataclass
 class HostSyncStats:
-    syncs: int = 0
+    """Global device→host fetch / host-fallback counters.
 
-    def tick(self, n: int = 1) -> None:
+    ``syncs`` counts device→host fetches (one per host-facing kernel
+    wrapper call on an accelerated impl); ``by_site`` breaks the same
+    count down by wrapper name. ``host_fallbacks`` counts, per site,
+    how often a wrapper served the request with host-side numpy instead
+    of a device pass (``impl="host"`` — zero device fetches, but host
+    ``np.unique``/``np.repeat`` work the accelerated path must avoid).
+    """
+
+    syncs: int = 0
+    by_site: dict = field(default_factory=dict)
+    host_fallbacks: dict = field(default_factory=dict)
+
+    def tick(self, n: int = 1, site: str | None = None) -> None:
+        """Record ``n`` device→host fetches, attributed to ``site``."""
         self.syncs += n
+        if site is not None:
+            self.by_site[site] = self.by_site.get(site, 0) + n
+
+    def fallback(self, site: str, n: int = 1) -> None:
+        """Record ``n`` host-side numpy servings of ``site``'s request."""
+        self.host_fallbacks[site] = self.host_fallbacks.get(site, 0) + n
 
     def reset(self) -> None:
+        """Zero every counter (benchmarks call this between paths)."""
         self.syncs = 0
+        self.by_site = {}
+        self.host_fallbacks = {}
+
+    def snapshot(self) -> dict:
+        """JSON-ready copy of all counters for bench artifacts."""
+        return {
+            "syncs": self.syncs,
+            "by_site": dict(self.by_site),
+            "host_fallbacks": dict(self.host_fallbacks),
+        }
 
 
 HOST_SYNCS = HostSyncStats()

@@ -1,0 +1,10 @@
+"""Shared helpers for the host-facing kernel wrappers."""
+from __future__ import annotations
+
+
+def pow2_bucket(n: int, floor: int = 1024) -> int:
+    """Next power of two >= max(n, 1), floored at ``floor`` — the
+    bucketing every host-facing wrapper applies to data-dependent sizes
+    before its jit boundary so varying table sizes reuse a bounded set
+    of compiles."""
+    return max(floor, 1 << (max(n, 1) - 1).bit_length())

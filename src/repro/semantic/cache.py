@@ -10,7 +10,7 @@ vectorised pipeline; host-side Python needs no locking, and the on-device
 analogue (batch dedup before the backend call) lives in
 ``repro.kernels.hash_dedup``.
 
-Two levels:
+Three levels:
 
 * the prompt store (``lookup_batch``) — keyed on the rendered prompt
   string, the paper's semantics;
@@ -20,48 +20,201 @@ Two levels:
   maps straight to its rendered prompt (or to NULL for rows whose
   referenced value was NULL), so the cross-operator dedup layer probes
   once per distinct representative instead of re-rendering and probing
-  once per key string. Both levels share one scope: ``clear()`` empties
-  them together.
+  once per key string;
+* the device-resident **verdict table** (``VerdictTable``) — an int8
+  verdict column keyed by the kernel row-hash slot, holding resolved
+  semantic-FILTER verdicts (true/false/NULL). On accelerators a batch
+  of representatives resolves in one device gather instead of one host
+  dict probe per representative; misses (and every non-boolean
+  operator) fall back to the exact host levels above, which remain the
+  oracle. All levels share one scope: ``clear()`` empties them
+  together.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Callable, Hashable, Iterable, Optional, Sequence
 
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.hash_dedup.ref import FNV_OFFSET, FNV_PRIME
+from ..kernels.sync import HOST_SYNCS
+
 # sentinel distinguishing "key never seen" from "key renders to NULL"
 KEY_MISS = object()
+
+# int8 verdict codes stored by the device table
+# second-fingerprint FNV basis: an independent hash family over the same
+# key rows (hash_rows_np(keys, basis=FP_BASIS)) guarding slot collisions
+FP_BASIS = np.uint32(0x9747B28C)
+VERDICT_MISS = np.int8(-1)
+VERDICT_FALSE = np.int8(0)
+VERDICT_TRUE = np.int8(1)
+VERDICT_NULL = np.int8(2)
+
+
+def _fnv1a_str(s: str) -> np.uint32:
+    """Stable 32-bit FNV-1a over a string (the per-φ salt — Python's
+    ``hash`` is randomised per process and cannot key device state);
+    same hash family as the kernels' ``hash_rows``."""
+    h = FNV_OFFSET
+    for b in s.encode("utf-8"):
+        h = np.uint32((int(h) ^ b) * int(FNV_PRIME) & 0xFFFFFFFF)
+    return h
+
+
+class VerdictTable:
+    """Device-resident value table for semantic-filter verdicts.
+
+    A fixed pow2-capacity open hash table living in device memory:
+    ``tags`` (uint32 — the dedup kernel's row hash, salted per φ),
+    ``fps`` (uint32 — an independent FNV fingerprint of the exact key
+    row) and ``verdicts`` (int8 — FALSE/TRUE/NULL). ``bind`` scatters a
+    batch of resolved representatives in one device pass (first write
+    wins; a slot taken by a different key simply drops the binding);
+    ``probe`` resolves a batch in one gather + ONE device→host fetch,
+    returning ``VERDICT_MISS`` where the slot is empty or keyed by a
+    different (tag, fingerprint) pair.
+
+    The table is a *cache of the cache*: every miss falls back to the
+    exact host path (key-probe dict + prompt store), which stays the
+    oracle. A hit is trusted on the 64-bit (tag, fingerprint) match —
+    two distinct key rows colliding on both hashes is the accepted
+    ~2^-64 caveat of the design; ``impl="off"`` disables the table
+    outright. ``impl="auto"`` enables it only on TPU backends (the host
+    dict wins on CPU); ``impl="on"`` forces it (tests)."""
+
+    def __init__(self, capacity: int = 1 << 15, impl: str = "auto"):
+        if capacity & (capacity - 1):
+            raise ValueError(f"capacity must be a power of two: {capacity}")
+        self.capacity = capacity
+        if impl == "auto":
+            self.enabled = jax.default_backend() == "tpu"
+        elif impl == "on":
+            self.enabled = True
+        elif impl == "off":
+            self.enabled = False
+        else:
+            raise ValueError(f"impl must be auto|on|off, got {impl!r}")
+        self._phi_salts: dict[str, np.uint32] = {}
+        self._n_bound = 0
+        if self.enabled:
+            self._alloc()
+
+    def _alloc(self) -> None:
+        self._tags = jnp.zeros(self.capacity, dtype=jnp.uint32)
+        self._fps = jnp.zeros(self.capacity, dtype=jnp.uint32)
+        self._verdicts = jnp.full(self.capacity, VERDICT_MISS,
+                                  dtype=jnp.int8)
+
+    def clear(self) -> None:
+        """Drop every binding (query-scope reset, with the host cache)."""
+        if self.enabled and self._n_bound:
+            self._alloc()
+        self._n_bound = 0
+        self._phi_salts.clear()
+
+    def _salted(self, phi: str, hashes, fps):
+        salt = self._phi_salts.get(phi)
+        if salt is None:
+            salt = _fnv1a_str(phi)
+            self._phi_salts[phi] = salt
+        tags = np.asarray(hashes, dtype=np.uint32) ^ salt
+        mix = np.uint32((int(salt) * 0x9E3779B1) & 0xFFFFFFFF)
+        return tags, np.asarray(fps, dtype=np.uint32) ^ mix
+
+    def bind(self, phi: str, hashes, fps, verdicts) -> None:
+        """Scatter resolved verdicts for φ's representatives: one device
+        pass, first write wins (occupied slots keep their entry).
+        In-batch slot duplicates are dropped host-side first — the
+        tag/fp/verdict scatters are separate XLA ops, and duplicate
+        indices could otherwise assemble a slot from two keys."""
+        if not self.enabled or len(np.asarray(hashes)) == 0:
+            return
+        tags, fps = self._salted(phi, hashes, fps)
+        slots_np = tags & np.uint32(self.capacity - 1)
+        first = np.unique(slots_np, return_index=True)[1]
+        tags, fps = tags[first], fps[first]
+        verdicts = np.asarray(verdicts, dtype=np.int8)[first]
+        slots = jnp.asarray(slots_np[first].astype(np.int32))
+        keep = self._verdicts[slots] != VERDICT_MISS
+        new_tags = jnp.where(keep, self._tags[slots], jnp.asarray(tags))
+        new_fps = jnp.where(keep, self._fps[slots], jnp.asarray(fps))
+        new_v = jnp.where(keep, self._verdicts[slots], jnp.asarray(verdicts))
+        self._tags = self._tags.at[slots].set(new_tags)
+        self._fps = self._fps.at[slots].set(new_fps)
+        self._verdicts = self._verdicts.at[slots].set(new_v)
+        self._n_bound += len(first)
+
+    def probe(self, phi: str, hashes, fps) -> np.ndarray:
+        """Resolve a batch of φ representatives against the device
+        column. Returns (G,) int8 — FALSE/TRUE/NULL on a (tag,
+        fingerprint) match, ``VERDICT_MISS`` otherwise. One device→host
+        fetch per non-empty-table batch, ticked as site
+        ``"verdict_table"``; an unbound table answers host-side."""
+        g = len(np.asarray(hashes))
+        if not self.enabled or g == 0 or self._n_bound == 0:
+            return np.full(g, VERDICT_MISS, dtype=np.int8)
+        tags, fps = self._salted(phi, hashes, fps)
+        slots = jnp.asarray(tags & np.uint32(self.capacity - 1),
+                            dtype=jnp.int32)
+        v = self._verdicts[slots]
+        hit = ((v != VERDICT_MISS)
+               & (self._tags[slots] == jnp.asarray(tags))
+               & (self._fps[slots] == jnp.asarray(fps)))
+        out = np.asarray(jnp.where(hit, v, VERDICT_MISS))
+        HOST_SYNCS.tick(site="verdict_table")
+        return out
 
 
 @dataclass
 class CacheStats:
+    """Row-weighted probe/hit/miss counters for the prompt store.
+    Misses equal distinct backend invocations (C_LLM); hits are the
+    calls function caching saved."""
+
     hits: int = 0
     misses: int = 0
     probes: int = 0
 
     @property
     def calls_saved(self) -> int:
+        """Backend calls avoided by the cache (== ``hits``)."""
         return self.hits
 
     def reset(self) -> None:
+        """Zero all counters (query-scope reset)."""
         self.hits = 0
         self.misses = 0
         self.probes = 0
 
 
 class FunctionCache:
-    def __init__(self):
+    """Per-query function cache for semantic operators: the prompt
+    store (paper semantics), the key-probe fast path and the optional
+    device-resident ``VerdictTable`` — see the module docstring for how
+    the three levels nest."""
+
+    def __init__(self, verdict_table: Optional[VerdictTable] = None):
         self._store: dict[Hashable, object] = {}
         # key-probe fast path: representative key id -> rendered prompt
         # (None = the key's referenced values render to NULL)
         self._key_prompts: dict[Hashable, Optional[str]] = {}
+        self.verdicts = (verdict_table if verdict_table is not None
+                         else VerdictTable())
         self.stats = CacheStats()
 
     def __len__(self) -> int:
         return len(self._store)
 
     def clear(self) -> None:
+        """Empty every level (prompt store, key store, verdict table)
+        — the per-query scope boundary of paper §5."""
         self._store.clear()
         self._key_prompts.clear()
+        self.verdicts.clear()
 
     def probe_keys(self, key_ids: Sequence[Hashable]) -> list[object]:
         """Batch-probe the key fast path. Returns, per key id, the

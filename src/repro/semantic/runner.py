@@ -31,10 +31,23 @@ import re
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
+import numpy as np
+
 from .backend import Backend
-from .cache import KEY_MISS, FunctionCache
+from .cache import (
+    KEY_MISS,
+    VERDICT_FALSE,
+    VERDICT_MISS,
+    VERDICT_NULL,
+    VERDICT_TRUE,
+    FunctionCache,
+)
 
 _TEMPLATE_COL = re.compile(r"\{([A-Za-z_][\w]*\.[A-Za-z_][\w]*)\}")
+
+# placeholder marking a representative the device verdict table already
+# resolved — never rendered, never probed against the prompt store
+_TABLE_HIT = object()
 
 
 def render_prompt(phi: str, ctx: dict[str, dict]) -> Optional[str]:
@@ -125,6 +138,8 @@ class SemanticRunner:
         counts: Optional[Sequence[int]] = None,
         out_dtype: str = "bool",
         key_ids: Optional[Sequence[object]] = None,
+        key_hashes=None,
+        key_fps=None,
     ) -> SemanticResult:
         """Evaluate distinct-key representatives. ``counts[i]`` is the
         number of input rows context i stands for (None = all 1, i.e. the
@@ -137,17 +152,40 @@ class SemanticRunner:
         ``FunctionCache`` key-probe fast path: a representative an
         earlier operator already resolved under the same φ reuses its
         rendered prompt (or NULL verdict) without re-rendering, and
-        ``prompts_rendered`` counts only actual renders. Cache statistics
-        are unchanged by the fast path — a key-hit row still probes (and
-        hits) the prompt store exactly as per-row execution would."""
+        ``prompts_rendered`` counts only actual renders.
+
+        ``key_hashes``/``key_fps`` (optional uint32 arrays, one per
+        representative) additionally feed the device ``VerdictTable``
+        for boolean operators: representatives whose verdict the table
+        already holds resolve in one device gather, skipping the render,
+        the key-probe dict AND the prompt-store lookup; fresh verdicts
+        are bound back after the batch. Cache statistics are unchanged
+        by either fast path — a key- or table-hit row still accounts one
+        probe and one hit per input row, exactly as per-row execution
+        would."""
+        vt = self.cache.verdicts
+        use_table = (vt.enabled and out_dtype == "bool"
+                     and key_hashes is not None and key_fps is not None
+                     and len(contexts) > 0)
+        table_v = vt.probe(phi, key_hashes, key_fps) if use_table else None
         if key_ids is not None:
             known = self.cache.probe_keys([(phi, k) for k in key_ids])
         else:
             known = None
-        prompts: list[Optional[str]] = []
+        prompts: list[object] = []
+        resolved: dict[int, bool] = {}
+        table_null: set[int] = set()
         rendered = 0
         new_bindings: list[tuple[object, Optional[str]]] = []
         for i, ctx in enumerate(contexts):
+            if table_v is not None and table_v[i] != VERDICT_MISS:
+                if table_v[i] == VERDICT_NULL:
+                    table_null.add(i)
+                    prompts.append(None)
+                else:
+                    resolved[i] = bool(table_v[i] == VERDICT_TRUE)
+                    prompts.append(_TABLE_HIT)
+                continue
             if known is not None and known[i] is not KEY_MISS:
                 prompts.append(known[i])
                 continue
@@ -160,12 +198,18 @@ class SemanticRunner:
             self.cache.bind_keys(new_bindings)
         if counts is None:
             counts = [1] * len(prompts)
-        live_idx = [i for i, p in enumerate(prompts) if p is not None]
+        live_idx = [i for i, p in enumerate(prompts)
+                    if p is not None and p is not _TABLE_HIT]
         null_rows = int(sum(counts[i] for i, p in enumerate(prompts)
                             if p is None))
 
         misses_before = self.cache.stats.misses
         hits_before = self.cache.stats.hits
+        # a table-hit representative's rows would each probe (and hit)
+        # the prompt store on the per-row path — account them identically
+        table_rows = int(sum(counts[i] for i in resolved))
+        self.cache.stats.probes += table_rows
+        self.cache.stats.hits += table_rows
 
         def compute(missing_keys):
             key_to_ctx = {}
@@ -186,6 +230,11 @@ class SemanticRunner:
         values: list[object] = [None] * len(prompts)
         for i, r in zip(live_idx, live_results):
             values[i] = r
+        for i, v in resolved.items():
+            values[i] = v
+        if use_table:
+            self._bind_verdicts(vt, phi, key_hashes, key_fps, prompts,
+                                values, resolved.keys() | table_null)
         return SemanticResult(
             values=values,
             distinct_calls=self.cache.stats.misses - misses_before,
@@ -193,3 +242,20 @@ class SemanticRunner:
             null_rows=null_rows,
             prompts_rendered=rendered,
         )
+
+    @staticmethod
+    def _bind_verdicts(vt, phi, key_hashes, key_fps, prompts, values,
+                       already_bound) -> None:
+        """Scatter this batch's fresh boolean verdicts (incl. NULLs)
+        into the device verdict table; table-hit reps (bool AND NULL)
+        are already bound and skip the rebind scatter."""
+        idx = [i for i in range(len(prompts)) if i not in already_bound]
+        if not idx:
+            return
+        verdicts = np.asarray(
+            [VERDICT_NULL if prompts[i] is None
+             else (VERDICT_TRUE if bool(values[i]) else VERDICT_FALSE)
+             for i in idx], dtype=np.int8)
+        sel = np.asarray(idx)
+        vt.bind(phi, np.asarray(key_hashes)[sel], np.asarray(key_fps)[sel],
+                verdicts)

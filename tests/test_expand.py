@@ -1,0 +1,135 @@
+"""Device segment-expansion family (``kernels/expand``): oracle
+equivalence across host / jnp / Pallas-interpret implementations,
+including empty segments, G=1, G=N, offset gathers, the join match
+expansion it backs (string-key fallback included) and the host-sync /
+host-fallback accounting the acceptance gate asserts on."""
+import numpy as np
+import pytest
+
+from repro.kernels.expand.ops import expand_segments
+from repro.kernels.expand.ref import expand_segments_np
+from repro.kernels.segmented_reduce.ops import join_match_lists
+from repro.kernels.sync import HOST_SYNCS
+
+IMPLS = ("host", "ref", "interpret")
+
+
+def _assert_matches_oracle(counts, offsets, impl):
+    seg, pos = expand_segments(counts, offsets, impl=impl)
+    e_seg, e_pos = expand_segments_np(counts, offsets)
+    np.testing.assert_array_equal(seg, e_seg)
+    np.testing.assert_array_equal(pos, e_pos)
+    assert seg.dtype == np.int64 and pos.dtype == np.int64
+    return seg, pos
+
+
+class TestExpandOracle:
+    @pytest.mark.parametrize("impl", IMPLS)
+    @pytest.mark.parametrize("n,hi", [(1, 4), (7, 3), (100, 5), (1024, 2),
+                                      (3000, 4)])
+    def test_random_counts_match_oracle(self, n, hi, impl):
+        rng = np.random.default_rng(n + hi)
+        counts = rng.integers(0, hi, n)
+        offsets = rng.integers(0, 1000, n)
+        _assert_matches_oracle(counts, offsets, impl)
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_no_offsets_gives_within_segment_ranks(self, impl):
+        seg, pos = expand_segments([2, 0, 3], impl=impl)
+        np.testing.assert_array_equal(seg, [0, 0, 2, 2, 2])
+        np.testing.assert_array_equal(pos, [0, 1, 0, 1, 2])
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_empty_segments_everywhere(self, impl):
+        # leading, interleaved and trailing empty segments skip cleanly
+        _assert_matches_oracle([0, 0, 2, 0, 1, 0, 0], [5, 5, 9, 9, 0, 1, 2],
+                               impl)
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_all_empty_returns_nothing(self, impl):
+        seg, pos = expand_segments([0, 0, 0], impl=impl)
+        assert len(seg) == 0 and len(pos) == 0
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_single_segment_g1(self, impl):
+        # G=1: one segment carries every output row
+        seg, pos = _assert_matches_oracle([257], [3], impl)
+        assert (seg == 0).all()
+        np.testing.assert_array_equal(pos, 3 + np.arange(257))
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_all_singletons_gn(self, impl):
+        # G=N: counts of one reproduce the identity expansion
+        n = 300
+        seg, pos = _assert_matches_oracle(np.ones(n, np.int64),
+                                          np.arange(n)[::-1].copy(), impl)
+        np.testing.assert_array_equal(seg, np.arange(n))
+
+    def test_empty_input(self):
+        for impl in IMPLS:
+            seg, pos = expand_segments(np.zeros(0, np.int64), impl=impl)
+            assert len(seg) == 0 and len(pos) == 0
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_cross_join_enumeration(self, impl):
+        # the executor's cross join: n2 rows per left segment, no offsets
+        seg, pos = expand_segments(np.full(5, 3, np.int64), impl=impl)
+        np.testing.assert_array_equal(seg, np.repeat(np.arange(5), 3))
+        np.testing.assert_array_equal(pos, np.tile(np.arange(3), 5))
+
+    def test_offsets_length_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            expand_segments([1, 2], [0], impl="ref")
+
+
+class TestExpandSyncAccounting:
+    def test_device_impl_one_sync_no_fallback(self):
+        HOST_SYNCS.reset()
+        expand_segments([3, 0, 2], [0, 0, 3], impl="ref")
+        assert HOST_SYNCS.syncs == 1
+        assert HOST_SYNCS.by_site == {"expand": 1}
+        assert HOST_SYNCS.host_fallbacks == {}
+
+    def test_host_impl_zero_syncs_one_fallback(self):
+        HOST_SYNCS.reset()
+        expand_segments([3, 0, 2], impl="host")
+        assert HOST_SYNCS.syncs == 0
+        assert HOST_SYNCS.host_fallbacks == {"expand": 1}
+
+
+class TestJoinMatchExpansion:
+    """The join-level consumers of the expand op."""
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_integer_keys_match_reference_order(self, impl):
+        rng = np.random.default_rng(5)
+        pk = rng.integers(0, 40, 500).astype(np.int32)
+        bk = rng.integers(0, 40, 300).astype(np.int32)
+        out_p, out_b = join_match_lists(pk, bk, impl=impl)
+        # searchsorted reference (the vectorized=False executor path)
+        order = np.argsort(bk, kind="stable")
+        bs = bk[order]
+        lo = np.searchsorted(bs, pk, "left")
+        hi = np.searchsorted(bs, pk, "right")
+        cnt = hi - lo
+        e_p = np.repeat(np.arange(len(pk)), cnt)
+        starts = np.repeat(lo, cnt)
+        within = np.arange(int(cnt.sum())) - np.repeat(
+            np.cumsum(cnt) - cnt, cnt)
+        e_b = order[starts + within]
+        np.testing.assert_array_equal(out_p, e_p)
+        np.testing.assert_array_equal(out_b, e_b)
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_string_keys_fall_back_but_expand_on_device(self, impl):
+        # strings use the host code-space encode, yet the expansion
+        # itself still routes through the expand op at the given impl
+        pk = np.asarray(["a", "c", "b", "a", "z"])
+        bk = np.asarray(["b", "a", "a", "x"])
+        HOST_SYNCS.reset()
+        out_p, out_b = join_match_lists(pk, bk, impl=impl)
+        np.testing.assert_array_equal(out_p, [0, 0, 2, 3, 3])
+        np.testing.assert_array_equal(out_b, [1, 2, 0, 1, 2])
+        if impl != "host":
+            assert "expand" not in HOST_SYNCS.host_fallbacks
+            assert HOST_SYNCS.by_site.get("expand", 0) >= 1

@@ -1,20 +1,29 @@
 """Device group-build subsystem: ``group_build`` against the exact
 numpy oracle (G=1, G=N, empty input, non-pow2 sizes, Pallas interpret
 path), the 32-bit hash-collision repair, the ``dedup_representatives``
-rewiring on top of it, and the ``SegmentPlan`` adoption used by the
-vectorized aggregate path."""
+rewiring on top of it, the fused ``group_build_columns`` code
+assignment (device rank codes vs. the per-column ``np.unique`` oracle,
+NaN/signed-zero/extreme keys, string fallback) and the ``SegmentPlan``
+adoption used by the vectorized aggregate path."""
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.kernels.hash_dedup.ops import (
     dedup_representatives,
     group_build,
+    group_build_columns,
 )
-from repro.kernels.hash_dedup.ref import group_build_np, hash_rows_np
+from repro.kernels.hash_dedup.ref import (
+    column_codes_np,
+    group_build_np,
+    hash_rows_np,
+)
 from repro.kernels.segmented_reduce.ops import (
     segment_plan_from_group_build,
     segmented_aggregate,
 )
+from repro.kernels.sync import HOST_SYNCS
 
 # two distinct (C=2) key rows with identical FNV-1a hashes, found by
 # deterministic search (rng seed 7 over 200k random rows)
@@ -163,6 +172,85 @@ class TestDedupRepresentatives:
         out = dedup_representatives(np.zeros((0, 2), np.int32),
                                     return_hashes=True)
         assert all(len(a) == 0 for a in out)
+
+
+class TestGroupBuildColumns:
+    """Fused device code assignment: codes must equal the per-column
+    ``np.unique`` oracle exactly, and the group build over them must
+    match the host build field for field."""
+
+    def _check(self, cols, impls=("ref", "interpret")):
+        exp_codes = column_codes_np(cols)
+        codes_h, gb_h = group_build_columns(cols, impl="host")
+        np.testing.assert_array_equal(codes_h, exp_codes)
+        for impl in impls:
+            codes_d, gb_d = group_build_columns(cols, impl=impl)
+            np.testing.assert_array_equal(codes_d, exp_codes, err_msg=impl)
+            assert gb_d.num_groups == gb_h.num_groups
+            for f in ("group_ids", "reps", "counts", "starts", "order"):
+                np.testing.assert_array_equal(
+                    getattr(gb_d, f), getattr(gb_h, f), err_msg=f"{impl}.{f}")
+        return codes_h, gb_h
+
+    @pytest.mark.parametrize("n,c", [(1, 1), (100, 2), (1024, 1), (3000, 3)])
+    def test_random_int_columns(self, n, c):
+        rng = np.random.default_rng(n + c)
+        self._check([rng.integers(-50, 50, n).astype(np.int32)
+                     for _ in range(c)])
+
+    def test_device_jnp_columns(self):
+        rng = np.random.default_rng(1)
+        self._check([jnp.asarray(rng.integers(-9, 9, 2000).astype(np.int32)),
+                     jnp.asarray(rng.normal(size=2000).astype(np.float32))])
+
+    def test_nan_keys_stay_distinct_in_row_order(self):
+        f = np.asarray([1.5, np.nan, 0.5, np.nan, 1.5], np.float32)
+        codes, gb = self._check([f])
+        # NaN codes sort after every real value, ascending in row order
+        np.testing.assert_array_equal(codes[:, 0], [1, 2, 0, 3, 1])
+        assert gb.num_groups == 4
+
+    def test_signed_zero_collapses(self):
+        codes, _ = self._check(
+            [np.asarray([0.0, -0.0, 1.0, -1.0], np.float32)])
+        assert codes[0, 0] == codes[1, 0]
+
+    def test_int_extremes_and_bool(self):
+        self._check([np.asarray([2**31 - 1, 3, 2**31 - 1, -2**31], np.int32)])
+        self._check([np.asarray([True, False, True, True])])
+
+    def test_g1_and_gn(self):
+        self._check([np.full(257, 9, np.int32)])
+        self._check([np.arange(300, dtype=np.int32)])
+
+    def test_string_columns_use_host_oracle(self):
+        s = np.asarray(["b", "a", "b", "c"])
+        HOST_SYNCS.reset()
+        codes, gb = group_build_columns([s], impl="ref")
+        np.testing.assert_array_equal(codes, column_codes_np([s]))
+        assert gb.num_groups == 3
+        # non-device dtype: served by the host oracle even at impl="ref"
+        assert HOST_SYNCS.host_fallbacks == {"group_key_codes": 1}
+        assert HOST_SYNCS.syncs == 0
+
+    def test_int64_columns_use_host_oracle(self):
+        wide = np.asarray([2**40, 1, 2**40])
+        codes, _ = group_build_columns([wide], impl="ref")
+        np.testing.assert_array_equal(codes, column_codes_np([wide]))
+
+    def test_empty_input(self):
+        codes, gb = group_build_columns([np.zeros(0, np.int32)] * 2)
+        assert codes.shape == (0, 2) and gb.num_groups == 0
+
+    def test_device_impl_one_sync_no_unique_fallback(self):
+        rng = np.random.default_rng(7)
+        cols = [rng.integers(0, 9, 500).astype(np.int32),
+                rng.normal(size=500).astype(np.float32)]
+        HOST_SYNCS.reset()
+        group_build_columns(cols, impl="ref")
+        assert HOST_SYNCS.syncs == 1
+        assert HOST_SYNCS.by_site == {"group_build_columns": 1}
+        assert HOST_SYNCS.host_fallbacks == {}
 
 
 class TestSegmentPlanAdoption:

@@ -395,3 +395,121 @@ class TestVectorizedFlagCoverage:
         cnt = np.asarray(t.col("agg.cnt"))
         assert cnt.sum() == 40
         assert stats.rel_rows > 0
+
+
+class TestCrossEquiExpandDrift:
+    """Cross and equi joins share the ``kernels/expand`` row-pair
+    construction on the vectorized path — regression against row-order
+    drift between them and against ``vectorized=False`` on empty,
+    one-row and string-key inputs."""
+
+    def _both_cross(self, db, out_cols):
+        plan = Q.scan("events").cross(Q.scan("cats")).build()
+        return _both(db, plan, out_cols)
+
+    def test_cross_join_empty_sides(self):
+        db = _db_events(0, 3)
+        vec, ref = self._both_cross(db, ["cats.cat_id"])
+        assert vec == ref == []
+        db = _db_events(4, 0)
+        vec, ref = self._both_cross(db, ["events.event_id"])
+        assert vec == ref == []
+
+    def test_cross_join_one_row_each(self):
+        db = _db_events(1, 1)
+        vec, ref = self._both_cross(db, ["events.event_id", "cats.cat_id"])
+        assert vec == ref == [{"events.event_id": 0, "cats.cat_id": 0}]
+
+    def test_cross_join_row_order_matches_reference(self):
+        # LIMIT above the cross join observes row order exactly
+        db = _db_events(7, 3)
+        plan = (Q.scan("events").cross(Q.scan("cats")).limit(11).build())
+        vec, ref = _both(db, plan, ["events.event_id", "cats.cat_id"])
+        assert vec == ref and len(vec) == 11
+
+    def test_equi_join_one_row_inputs(self):
+        db = _db_events(1, 1, cat_of=np.zeros(1, int))
+        plan = _join_plan()
+        vec, ref = _both(db, plan, ["events.event_id", "cats.cat_id"])
+        assert vec == ref == [{"events.event_id": 0, "cats.cat_id": 0}]
+
+    def test_string_key_join_order_matches_reference(self):
+        # string keys take the host code-space fallback, but the match
+        # expansion still routes through the expand op at kernel_impl —
+        # row order must match the searchsorted reference exactly
+        lt = Table(columns={"l.k": np.asarray(["b", "a", "b", "z", "a"]),
+                            "l.x": jnp.arange(5, dtype=jnp.int32)},
+                   valid=jnp.ones(5, dtype=bool))
+        rt = Table(columns={"r.k": np.asarray(["a", "b", "a"]),
+                            "r.y": jnp.arange(3, dtype=jnp.int32)},
+                   valid=jnp.ones(3, dtype=bool))
+        db = Database()
+        outs = {}
+        for vectorized in (True, False):
+            ex = Executor(db, SemanticRunner(OracleBackend(truths={})),
+                          vectorized=vectorized, kernel_impl="ref")
+            out = ex._equi_join(lt, rt, "l.k", "r.k")
+            outs[vectorized] = {k: np.asarray(v).tolist()
+                                for k, v in out.columns.items()}
+        assert outs[True] == outs[False]
+        assert outs[True]["l.x"] == [0, 1, 1, 2, 4, 4]
+        assert outs[True]["r.y"] == [1, 0, 2, 1, 0, 2]
+
+
+class TestAcceleratedPathNoHostNumpy:
+    """Acceptance gate: with the kernel impl forced to the device path
+    ("ref" — jnp on CPU, identical routing to TPU), the join probe
+    expansion and the aggregate key-code assignment must perform ZERO
+    host-side ``np.repeat``/``np.unique`` — asserted through the
+    ``kernels/sync`` fallback accounting — while staying equivalent to
+    the reference executor."""
+
+    def _run_accel(self, db, plan, out_cols):
+        from repro.kernels.sync import HOST_SYNCS
+        ex = Executor(db, SemanticRunner(OracleBackend(truths={})),
+                      vectorized=True, kernel_impl="ref")
+        HOST_SYNCS.reset()
+        table, _ = ex.execute(plan)
+        snap = HOST_SYNCS.snapshot()
+        ref_table, _ = _executor(db, False).execute(plan)
+        assert db.materialize(table, out_cols) == \
+            db.materialize(ref_table, out_cols)
+        return snap
+
+    def test_aggregate_key_codes_stay_on_device(self):
+        db = _db_events(400, 13)
+        plan = (Q.scan("events")
+                .group_by(["events.cat_id"],
+                          [("count", "*", "cnt"), ("sum", "events.event_id",
+                                                   "s")])
+                .build())
+        snap = self._run_accel(db, plan, ["events.cat_id", "agg.cnt",
+                                          "agg.s"])
+        assert "group_key_codes" not in snap["host_fallbacks"]
+        assert snap["by_site"].get("group_build_columns", 0) >= 1
+
+    def test_join_probe_expansion_stays_on_device(self):
+        db = _db_events(300, 11)
+        snap = self._run_accel(db, _join_plan(),
+                               ["events.event_id", "cats.cat_id"])
+        assert "expand" not in snap["host_fallbacks"]
+        assert "group_build" not in snap["host_fallbacks"]
+        assert snap["by_site"].get("expand", 0) >= 1
+
+    def test_cross_join_expansion_stays_on_device(self):
+        db = _db_events(25, 8)
+        plan = Q.scan("events").cross(Q.scan("cats")).build()
+        snap = self._run_accel(db, plan, ["events.event_id", "cats.cat_id"])
+        assert "expand" not in snap["host_fallbacks"]
+        assert snap["by_site"].get("expand", 0) >= 1
+
+    def test_full_pipeline_zero_repeat_unique_fallbacks(self):
+        db = _db_events(500, 17)
+        plan = (Q.scan("events")
+                .join(Q.scan("cats"), "events.cat_id", "cats.cat_id")
+                .group_by(["cats.cat_id"], [("count", "*", "cnt"),
+                                            ("max", "cats.w", "w")])
+                .build())
+        snap = self._run_accel(db, plan, ["cats.cat_id", "agg.cnt", "agg.w"])
+        for site in ("expand", "group_key_codes"):
+            assert site not in snap["host_fallbacks"], snap

@@ -1,0 +1,207 @@
+"""Device-resident verdict table: bind/probe semantics (first-write-
+wins slots, φ salting, NULL verdicts, query-scope clear), the runner
+integration that resolves repeat-operator filter verdicts without the
+host dict, and end-to-end equivalence — results AND row-weighted cache
+statistics identical to the exact host path and to per-row execution."""
+import numpy as np
+
+from repro.core import Q
+from repro.engine import Database, Executor, result_f1
+from repro.semantic import (
+    FunctionCache,
+    OracleBackend,
+    SemanticRunner,
+    VerdictTable,
+)
+from repro.semantic.cache import (
+    VERDICT_FALSE,
+    VERDICT_MISS,
+    VERDICT_NULL,
+    VERDICT_TRUE,
+)
+
+
+def _tbl():
+    return VerdictTable(capacity=1 << 10, impl="on")
+
+
+class TestVerdictTableUnit:
+    def test_probe_unbound_misses(self):
+        vt = _tbl()
+        out = vt.probe("phi", np.arange(5, dtype=np.uint32),
+                       np.arange(5, dtype=np.uint32))
+        assert (out == VERDICT_MISS).all()
+
+    def test_bind_probe_roundtrip(self):
+        vt = _tbl()
+        h = np.asarray([1, 2, 3, 4], dtype=np.uint32)
+        f = np.asarray([9, 8, 7, 6], dtype=np.uint32)
+        v = np.asarray([VERDICT_TRUE, VERDICT_FALSE, VERDICT_NULL,
+                        VERDICT_TRUE], dtype=np.int8)
+        vt.bind("phi", h, f, v)
+        np.testing.assert_array_equal(vt.probe("phi", h, f), v)
+
+    def test_wrong_fingerprint_misses(self):
+        vt = _tbl()
+        h = np.asarray([11], dtype=np.uint32)
+        vt.bind("phi", h, np.asarray([5], np.uint32),
+                np.asarray([VERDICT_TRUE], np.int8))
+        out = vt.probe("phi", h, np.asarray([6], np.uint32))
+        assert out[0] == VERDICT_MISS
+
+    def test_phi_salting_separates_templates(self):
+        vt = _tbl()
+        h = np.asarray([42], dtype=np.uint32)
+        f = np.asarray([7], dtype=np.uint32)
+        vt.bind("phi-a", h, f, np.asarray([VERDICT_TRUE], np.int8))
+        assert vt.probe("phi-b", h, f)[0] == VERDICT_MISS
+        assert vt.probe("phi-a", h, f)[0] == VERDICT_TRUE
+
+    def test_first_write_wins_on_slot_collision(self):
+        vt = VerdictTable(capacity=4, impl="on")
+        # same slot (tag & 3), different tags: second binding is dropped
+        vt.bind("p", np.asarray([4], np.uint32), np.asarray([1], np.uint32),
+                np.asarray([VERDICT_TRUE], np.int8))
+        vt.bind("p", np.asarray([8], np.uint32), np.asarray([2], np.uint32),
+                np.asarray([VERDICT_FALSE], np.int8))
+        assert vt.probe("p", np.asarray([4], np.uint32),
+                        np.asarray([1], np.uint32))[0] == VERDICT_TRUE
+        # the dropped key misses and falls back to the host path
+        assert vt.probe("p", np.asarray([8], np.uint32),
+                        np.asarray([2], np.uint32))[0] == VERDICT_MISS
+
+    def test_in_batch_slot_duplicates_stay_self_consistent(self):
+        # two keys colliding on a slot WITHIN one bind batch: the entry
+        # must belong wholly to one key (the first), never a tag/fp from
+        # one and a verdict from the other
+        vt = VerdictTable(capacity=4, impl="on")
+        vt.bind("p", np.asarray([4, 8], np.uint32),
+                np.asarray([1, 2], np.uint32),
+                np.asarray([VERDICT_TRUE, VERDICT_FALSE], np.int8))
+        assert vt.probe("p", np.asarray([4], np.uint32),
+                        np.asarray([1], np.uint32))[0] == VERDICT_TRUE
+        assert vt.probe("p", np.asarray([8], np.uint32),
+                        np.asarray([2], np.uint32))[0] == VERDICT_MISS
+
+    def test_probe_before_any_bind_is_host_side(self):
+        from repro.kernels.sync import HOST_SYNCS
+        vt = _tbl()
+        HOST_SYNCS.reset()
+        out = vt.probe("p", np.asarray([1], np.uint32),
+                       np.asarray([2], np.uint32))
+        assert out[0] == VERDICT_MISS
+        # an unbound table answers without a device round-trip
+        assert HOST_SYNCS.syncs == 0
+
+    def test_clear_resets_scope(self):
+        vt = _tbl()
+        h = np.asarray([3], np.uint32)
+        f = np.asarray([4], np.uint32)
+        vt.bind("p", h, f, np.asarray([VERDICT_TRUE], np.int8))
+        vt.clear()
+        assert vt.probe("p", h, f)[0] == VERDICT_MISS
+
+    def test_disabled_table_never_hits(self):
+        vt = VerdictTable(impl="off")
+        h = np.asarray([3], np.uint32)
+        vt.bind("p", h, h, np.asarray([VERDICT_TRUE], np.int8))
+        assert vt.probe("p", h, h)[0] == VERDICT_MISS
+
+
+# --------------------------------------------------------------- end to end
+
+def _db(n_cats=9, n_events=300, null_cat=None):
+    db = Database()
+    cats = [{"cat_id": i, "name": f"category number {i}"}
+            for i in range(n_cats)]
+    if null_cat is not None:
+        cats[null_cat]["name"] = None
+    rng = np.random.default_rng(3)
+    events = [{"event_id": j, "cat_id": int(rng.integers(0, n_cats))}
+              for j in range(n_events)]
+    db.add_table("cats", cats, text_columns={"name"})
+    db.add_table("events", events)
+    phi = "SEMANTIC: does {cats.name} sound odd?"
+    db.truths = {phi: lambda ctx: ctx["cats"]["cat_id"] % 2 == 1}
+    return db, phi
+
+
+def _stacked_plan(phi):
+    return (Q.scan("events")
+            .join(Q.scan("cats"), "events.cat_id", "cats.cat_id")
+            .sem_filter(phi)
+            .sem_filter(phi)
+            .build())
+
+
+def _run(db, plan, out_cols, *, vectorized=True, table_impl="off"):
+    runner = SemanticRunner(
+        OracleBackend(truths=db.truths),
+        cache=FunctionCache(VerdictTable(impl=table_impl)))
+    ex = Executor(db, runner, vectorized=vectorized, kernel_impl="ref")
+    table, stats = ex.execute(plan)
+    return db.materialize(table, out_cols), stats, runner
+
+
+STAT_FIELDS = ("llm_calls", "cache_hits", "null_skipped", "probe_rows",
+               "sem_rows", "prompts_rendered")
+
+
+class TestVerdictTableEndToEnd:
+    def test_stacked_filters_identical_to_host_path_and_per_row(self):
+        db, phi = _db()
+        plan = _stacked_plan(phi)
+        out = ["events.event_id"]
+        recs_t, st, _ = _run(db, plan, out, table_impl="on")
+        recs_h, sh, _ = _run(db, plan, out, table_impl="off")
+        recs_p, sp, _ = _run(db, plan, out, vectorized=False)
+        assert result_f1(recs_h, recs_t) == 1.0
+        assert result_f1(recs_p, recs_t) == 1.0
+        for f in STAT_FIELDS:
+            assert getattr(st, f) == getattr(sh, f), f
+        for f in ("llm_calls", "cache_hits", "null_skipped", "probe_rows"):
+            assert getattr(st, f) == getattr(sp, f), f
+
+    def test_second_operator_resolves_from_device_table(self):
+        db, phi = _db()
+        plan = _stacked_plan(phi)
+        _, _, runner = _run(db, plan, ["events.event_id"], table_impl="on")
+        vt = runner.cache.verdicts
+        # every distinct key's verdict is device-resident after the run
+        from repro.kernels.hash_dedup.ref import hash_rows_np
+        from repro.semantic.cache import FP_BASIS
+        keys = np.asarray(sorted({e["cat_id"] for e in db.payloads["events"]}),
+                          dtype=np.int32)[:, None]
+        # C == 1 keys: the kernel's sort key is the raw value
+        hashes = keys[:, 0].astype(np.uint32)
+        fps = hash_rows_np(keys, basis=FP_BASIS)
+        verdicts = vt.probe(phi, hashes, fps)
+        assert (verdicts != VERDICT_MISS).all()
+        expect = np.where(keys[:, 0] % 2 == 1, VERDICT_TRUE, VERDICT_FALSE)
+        np.testing.assert_array_equal(verdicts, expect.astype(np.int8))
+
+    def test_null_verdicts_cached_and_accounted(self):
+        db, phi = _db(n_cats=5, n_events=60, null_cat=2)
+        plan = _stacked_plan(phi)
+        out = ["events.event_id"]
+        recs_t, st, _ = _run(db, plan, out, table_impl="on")
+        recs_p, sp, _ = _run(db, plan, out, vectorized=False)
+        assert result_f1(recs_p, recs_t) == 1.0
+        assert st.null_skipped == sp.null_skipped > 0
+        assert st.llm_calls == sp.llm_calls
+        assert st.cache_hits == sp.cache_hits
+
+    def test_semantic_project_bool_shares_table_with_filter(self):
+        db, phi = _db(n_cats=6, n_events=0)
+        plan = (Q.scan("cats")
+                .sem_project(phi, "odd", dtype="bool")
+                .sem_filter(phi)
+                .build())
+        out = ["cats.cat_id"]
+        recs_t, st, _ = _run(db, plan, out, table_impl="on")
+        recs_p, sp, _ = _run(db, plan, out, vectorized=False)
+        assert result_f1(recs_p, recs_t) == 1.0
+        for f in ("llm_calls", "cache_hits", "null_skipped"):
+            assert getattr(st, f) == getattr(sp, f), f
+        # the SF re-used the SP's device-bound verdicts: no new renders
+        assert st.prompts_rendered == 6

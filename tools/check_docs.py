@@ -1,0 +1,105 @@
+"""Docs-consistency gate: every repo path and runnable command that
+README.md / docs/*.md reference must actually exist.
+
+    python tools/check_docs.py
+
+Checks, per markdown file:
+
+* path-like tokens (``src/...``, ``docs/...``, ``benchmarks/...``,
+  ``examples/...``, ``tests/...``, ``tools/...``, ``.github/...`` and
+  the well-known root files) resolve against the repo root — trailing
+  ``:line`` references and punctuation are stripped; tokens containing
+  globs/placeholders (``*``, ``<``) are skipped;
+* ``python <script.py>`` lines inside fenced code blocks point at real
+  scripts;
+* README.md carries the CI badge, and the two docs pages exist.
+
+Exit code 0 when everything resolves; 1 with a per-file report
+otherwise. Stdlib only — CI's docs job runs it with no deps installed.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+PATH_TOKEN = re.compile(
+    r"\b((?:src|docs|benchmarks|examples|tests|tools|\.github)/"
+    r"[A-Za-z0-9_.*<>/-]+|"
+    r"(?:README|ROADMAP|CHANGES|PAPER|PAPERS|SNIPPETS)\.md|"
+    r"ruff\.toml|requirements(?:-dev)?\.txt)")
+FENCE = re.compile(r"```.*?```", re.DOTALL)
+PY_CMD = re.compile(r"^\s*(?:[A-Z_]+=\S+\s+)*python\s+([A-Za-z0-9_./-]+\.py)",
+                    re.MULTILINE)
+
+REQUIRED = [
+    "README.md",
+    "docs/kernels.md",
+    "docs/cost_model.md",
+]
+README_MUST_CONTAIN = [
+    "actions/workflows/ci.yml/badge.svg",   # the CI badge
+    "examples/quickstart.py",               # the quickstart pointer
+]
+
+
+def _check_token(tok: str) -> str | None:
+    """Return an error string if ``tok`` should resolve but doesn't."""
+    if "*" in tok or "<" in tok:
+        return None  # glob / placeholder, not a concrete path
+    tok = tok.split(":")[0].rstrip(".,;)")
+    target = ROOT / tok
+    if tok.endswith("/"):
+        return None if target.is_dir() else f"missing directory: {tok}"
+    if target.exists():
+        return None
+    return f"missing path: {tok}"
+
+
+def check_file(md: Path) -> list[str]:
+    """All dangling references in one markdown file."""
+    text = md.read_text()
+    errors = []
+    for m in PATH_TOKEN.finditer(text):
+        err = _check_token(m.group(1))
+        if err:
+            errors.append(err)
+    for block in FENCE.findall(text):
+        for m in PY_CMD.finditer(block):
+            script = m.group(1)
+            if not (ROOT / script).exists():
+                errors.append(f"command references missing script: {script}")
+    return sorted(set(errors))
+
+
+def main() -> int:
+    """Run every check; print a report and return a process exit code."""
+    failed = False
+    for req in REQUIRED:
+        if not (ROOT / req).exists():
+            print(f"FAIL: required file missing: {req}")
+            failed = True
+    readme = ROOT / "README.md"
+    if readme.exists():
+        text = readme.read_text()
+        for needle in README_MUST_CONTAIN:
+            if needle not in text:
+                print(f"FAIL: README.md lacks required reference: {needle}")
+                failed = True
+    docs = [p for p in [readme, *sorted((ROOT / "docs").glob("*.md"))]
+            if p.exists()]
+    for md in docs:
+        errors = check_file(md)
+        for err in errors:
+            print(f"FAIL: {md.relative_to(ROOT)}: {err}")
+        failed = failed or bool(errors)
+    if failed:
+        return 1
+    print(f"docs check OK ({len(docs)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
