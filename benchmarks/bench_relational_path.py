@@ -10,10 +10,16 @@ The join side measures a fan-out probe over a hash-grouped build side.
     PYTHONPATH=src python benchmarks/bench_relational_path.py \
         [--rows 120000] [--groups 12000] [--repeats 3] [--smoke] [--json P]
 
-Acceptance gate: >= 5x on the grouped-aggregate path at >= 100k rows and
->= 10k groups. ``--smoke`` shrinks the workload for CI and only fails on
-crash or result mismatch, never on timing; both modes write a
-``BENCH_relational_path.json`` artifact.
+Acceptance gates: >= 5x on the grouped-aggregate path at >= 100k rows
+and >= 10k groups, and — deterministic, so checked in smoke mode too —
+the device-resident pipeline (``kernel_impl="ref"``: the exact TPU
+routing, on CPU) stays within the ``pipeline_syncs`` budget with zero
+host ``np.nonzero``/searchsorted/``np.repeat``/``np.unique`` fallbacks.
+``--smoke`` shrinks the workload for CI and only fails on crash, result
+mismatch or the sync gate, never on timing; both modes write a
+``BENCH_relational_path.json`` artifact, and full-size runs additionally
+record the repo-root ``BENCH_relational.json`` perf-trajectory snapshot
+that ``tools/check_docs.py`` verifies.
 """
 from __future__ import annotations
 
@@ -31,6 +37,8 @@ from repro.core import Q  # noqa: E402
 from repro.engine import Database, Executor, result_f1  # noqa: E402
 from repro.kernels.sync import HOST_SYNCS  # noqa: E402
 from repro.semantic import OracleBackend, SemanticRunner  # noqa: E402
+
+from pipeline_gate import PIPELINE_SYNCS_MAX, gate_result  # noqa: E402
 
 AGG_SPEEDUP_GATE = 5.0
 
@@ -76,6 +84,24 @@ def run_once(db, plan, vectorized: bool):
     return table, stats, HOST_SYNCS.snapshot()
 
 
+def pipeline_pass(db, plan, out_cols, ref_rows) -> dict:
+    """One run with the device-resident pipeline forced on
+    (``kernel_impl="ref"`` — the exact accelerator routing, on CPU):
+    counts the device→host syncs the whole plan performs, checks result
+    equivalence against the reference rows and gates on the budget plus
+    zero host-numpy fallbacks. Deterministic — runs in smoke mode too."""
+    ex = Executor(db, SemanticRunner(OracleBackend(truths={})),
+                  vectorized=True, kernel_impl="ref")
+    HOST_SYNCS.reset()
+    table, stats = ex.execute(plan)
+    snap = HOST_SYNCS.snapshot()
+    rows = db.materialize(table, out_cols)
+    f1 = result_f1(ref_rows, rows)
+    if f1 != 1.0:
+        raise AssertionError(f"device-pipeline result mismatch (f1={f1})")
+    return gate_result(stats, snap)
+
+
 def bench(db, plan, out_cols, repeats: int) -> dict:
     walls = {}
     tables = {}
@@ -96,7 +122,8 @@ def bench(db, plan, out_cols, repeats: int) -> dict:
             "speedup": walls[False] / max(walls[True], 1e-12),
             "out_rows": len(tables[True]),
             "host_syncs": {"vectorized": syncs[True],
-                           "reference": syncs[False]}}
+                           "reference": syncs[False]},
+            "_ref_rows": tables[False]}
 
 
 def main(argv=None) -> int:
@@ -133,27 +160,61 @@ def main(argv=None) -> int:
         print(f"{name} host syncs (vectorized): {hs['syncs']} "
               f"by_site={hs['by_site']} host_fallbacks={hs['host_fallbacks']}")
 
+    # device-resident pipeline sync gate (deterministic — smoke included)
+    pipe = {
+        "aggregate": pipeline_pass(
+            db, agg_plan(),
+            ["facts.g", "agg.cnt", "agg.s", "agg.m", "agg.lo", "agg.hi"],
+            agg.pop("_ref_rows")),
+        "join": pipeline_pass(db, join_plan(),
+                              ["probes.probe_id", "facts.fact_id"],
+                              join.pop("_ref_rows")),
+    }
+    pipe_ok = all(p["pass"] for p in pipe.values())
+    for name, p in pipe.items():
+        print(f"{name} device pipeline: pipeline_syncs="
+              f"{p['pipeline_syncs']} (max {PIPELINE_SYNCS_MAX})  "
+              f"by_site={p['host_syncs']['by_site']}  "
+              f"fallback_violations={p['fallback_violations']}")
+
     gated = not args.smoke
-    ok = not gated or agg["speedup"] >= AGG_SPEEDUP_GATE
+    ok = (not gated or agg["speedup"] >= AGG_SPEEDUP_GATE) and pipe_ok
     out = {
         "name": "relational_path",
+        "command": "python benchmarks/bench_relational_path.py",
         "config": {"rows": args.rows, "groups": args.groups,
                    "fanout_rows": args.fanout_rows,
                    "repeats": args.repeats, "smoke": args.smoke},
         "aggregate": agg,
         "join": join,
+        "pipeline": pipe,
         "gate": {"aggregate_speedup_min": AGG_SPEEDUP_GATE if gated else None,
+                 "pipeline_syncs_max": PIPELINE_SYNCS_MAX,
                  "pass": ok},
     }
     args.json.parent.mkdir(parents=True, exist_ok=True)
     args.json.write_text(json.dumps(out, indent=2) + "\n")
     print(f"wrote {args.json}")
+    if not args.smoke:
+        # repo-root perf-trajectory snapshot (tools/check_docs.py gates
+        # on its presence, producing command and a passing gate)
+        root_json = Path(__file__).resolve().parent.parent \
+            / "BENCH_relational.json"
+        root_json.write_text(json.dumps(out, indent=2) + "\n")
+        print(f"wrote {root_json}")
 
     if not ok:
-        print(f"FAIL: aggregate speedup {agg['speedup']:.2f}x < "
-              f"{AGG_SPEEDUP_GATE}x", file=sys.stderr)
+        if gated and agg["speedup"] < AGG_SPEEDUP_GATE:
+            print(f"FAIL: aggregate speedup {agg['speedup']:.2f}x < "
+                  f"{AGG_SPEEDUP_GATE}x", file=sys.stderr)
+        if not pipe_ok:
+            detail = {k: (p["pipeline_syncs"], p["fallback_violations"])
+                      for k, p in pipe.items()}
+            print(f"FAIL: device pipeline sync gate: {detail}",
+                  file=sys.stderr)
         return 1
-    print("PASS" + ("" if gated else " (smoke: crash/equivalence only)"))
+    print("PASS" + ("" if gated else
+                    " (smoke: crash/equivalence/sync gates only)"))
     return 0
 
 

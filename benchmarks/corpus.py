@@ -214,7 +214,8 @@ HYBRID.append(_q("Q21", "tpch", ["lineitem.l_linenumber"], 1,
 
 HYBRID.append(_q("Q22", "tpch", ["orders.o_orderkey"], 2,
     lambda: (Q.scan("orders")
-             .join(Q.scan("customer"), "orders.o_custkey", "customer.c_custkey")
+             .join(Q.scan("customer"), "orders.o_custkey",
+                    "customer.c_custkey")
              .where(col("orders.o_totalprice") > 20000)
              .sem_filter(S.ORDER_URGENT_TONE)
              .sem_filter(S.CUSTOMER_RISK)
@@ -232,7 +233,8 @@ HYBRID.append(_q("Q23", "tpch", ["part.p_partkey", "supplier.s_suppkey"], 2,
 
 HYBRID.append(_q("Q24", "tpch", ["lineitem.l_linenumber"], 2,
     lambda: (Q.scan("lineitem")
-             .join(Q.scan("orders"), "lineitem.l_orderkey", "orders.o_orderkey")
+             .join(Q.scan("orders"), "lineitem.l_orderkey",
+                    "orders.o_orderkey")
              .where(col("orders.o_orderdate").between(1994, 1998))
              .sem_filter(S.LINEITEM_PROBLEM)
              .sem_filter(S.ORDER_URGENT_TONE)
@@ -245,8 +247,10 @@ HYBRID.append(_q("Q25", "tpch", ["supplier.s_suppkey", "nation.n_name"], 1,
 
 HYBRID.append(_q("Q26", "tpch", ["lineitem.l_linenumber"], 3,
     lambda: (Q.scan("lineitem")
-             .join(Q.scan("orders"), "lineitem.l_orderkey", "orders.o_orderkey")
-             .join(Q.scan("customer"), "orders.o_custkey", "customer.c_custkey")
+             .join(Q.scan("orders"), "lineitem.l_orderkey",
+                    "orders.o_orderkey")
+             .join(Q.scan("customer"), "orders.o_custkey",
+                    "customer.c_custkey")
              .join(Q.scan("part"), "lineitem.l_partkey", "part.p_partkey")
              .where(col("orders.o_totalprice") > 20000)
              .where(col("lineitem.l_quantity").between(3, 38))
@@ -287,7 +291,8 @@ HYBRID.append(_q("Q28", "tpch", ["supplier.s_suppkey",
 
 HYBRID.append(_q("Q29", "tpch", ["orders.o_orderkey"], 3,
     lambda: (Q.scan("orders")
-             .join(Q.scan("customer"), "orders.o_custkey", "customer.c_custkey")
+             .join(Q.scan("customer"), "orders.o_custkey",
+                    "customer.c_custkey")
              .join(Q.scan("nation"), "customer.c_nationkey",
                    "nation.n_nationkey")
              .join(Q.scan("region"), "nation.n_regionkey",
@@ -302,8 +307,10 @@ HYBRID.append(_q("Q29", "tpch", ["orders.o_orderkey"], 3,
 
 HYBRID.append(_q("Q30", "tpch", ["lineitem.l_linenumber"], 4,
     lambda: (Q.scan("lineitem")
-             .join(Q.scan("orders"), "lineitem.l_orderkey", "orders.o_orderkey")
-             .join(Q.scan("customer"), "orders.o_custkey", "customer.c_custkey")
+             .join(Q.scan("orders"), "lineitem.l_orderkey",
+                    "orders.o_orderkey")
+             .join(Q.scan("customer"), "orders.o_custkey",
+                    "customer.c_custkey")
              .join(Q.scan("part"), "lineitem.l_partkey", "part.p_partkey")
              .join(Q.scan("partsupp"), "part.p_partkey", "partsupp.ps_partkey")
              .join(Q.scan("supplier"), "partsupp.ps_suppkey",

@@ -1,0 +1,31 @@
+"""Shared device-pipeline sync gate for the microbenchmarks.
+
+Both benches run one pass with the device-resident pipeline forced on
+(``Executor(kernel_impl="ref")`` — the exact accelerator routing, on
+CPU) and gate it on (a) the ``pipeline_syncs`` budget and (b) zero
+host-numpy fallbacks at the device sites. The budget and site list live
+here so the two gates cannot drift apart.
+"""
+from __future__ import annotations
+
+# device-pipeline budget: one group_build(+codes) fetch per grouped
+# operator, one probe-total scalar per join, one segment_reduce per
+# device-reducible aggregate column, one num_valid per stats bump —
+# measured 5 (aggregate) / 3 (join) / 5 (dedup) at 120k rows; small
+# headroom for workload growth, not slack for regressions
+PIPELINE_SYNCS_MAX = 10
+
+# host-numpy fallback sites that must stay silent on the device pipeline
+DEVICE_SITES = ("compact", "join_probe", "expand", "group_key_codes",
+                "group_build")
+
+
+def gate_result(stats, snap: dict) -> dict:
+    """Assemble the JSON-ready gate record for one device-pipeline run:
+    the query's sync count, the full snapshot, any device-site fallback
+    violations and the combined pass verdict."""
+    bad = [s for s in DEVICE_SITES if s in snap["host_fallbacks"]]
+    return {"pipeline_syncs": stats.pipeline_syncs,
+            "host_syncs": snap,
+            "fallback_violations": bad,
+            "pass": stats.pipeline_syncs <= PIPELINE_SYNCS_MAX and not bad}

@@ -30,7 +30,8 @@ from repro.training.data import HashTokenizer
 
 import sys
 sys.path.insert(0, "examples")
-from train_backend import backend_config, main as train_backend_main  # noqa: E402
+from train_backend import backend_config  # noqa: E402
+from train_backend import main as train_backend_main  # noqa: E402
 
 
 def get_backend_params():
@@ -82,7 +83,8 @@ def main():
                                       "previews.review_id"])
         f1 = result_f1(ref, recs)
         print(f"\n=== strategy={strategy} (real model serving) ===")
-        print(f"rows={len(recs)} (oracle says {len(ref)})  F1 vs oracle={f1:.3f}")
+        print(f"rows={len(recs)} (oracle says {len(ref)})  "
+              f"F1 vs oracle={f1:.3f}")
         print(f"distinct model calls={stats.llm_calls}  "
               f"cache hits={stats.cache_hits}  wall={wall:.1f}s")
         print(f"serving: {engine.stats.batches} batches, "

@@ -117,7 +117,8 @@ def load_all(art_dir: str = "artifacts/dryrun", mesh: str = "single"
 
 def table(rows: list[RooflineRow]) -> str:
     hdr = (f"{'arch':<18} {'shape':<12} {'compute':>10} {'memory':>10} "
-           f"{'collect':>10} {'bound':>10} {'MODEL/HLO':>10} {'roofline%':>10}")
+           f"{'collect':>10} {'bound':>10} {'MODEL/HLO':>10} "
+           f"{'roofline%':>10}")
     lines = [hdr, "-" * len(hdr)]
     for r in rows:
         ratio = r.model_flops / r.hlo_flops if r.hlo_flops else 0.0

@@ -95,7 +95,7 @@ def not_(a: Expr) -> Expr:
     return BoolOp("not", (a,))
 
 
-# -- builder -------------------------------------------------------------------
+# -- builder -----------------------------------------------------------------
 
 
 class Q:
@@ -113,7 +113,8 @@ class Q:
 
         node = self.node
         for p in split_conjuncts(pred):
-            node = Filter(children=[node], pred=p, selectivity_hint=selectivity)
+            node = Filter(children=[node], pred=p,
+                          selectivity_hint=selectivity)
         return Q(node)
 
     def join(self, other: "Q", left_key: str, right_key: str) -> "Q":
@@ -126,7 +127,8 @@ class Q:
     def select(self, *cols: str) -> "Q":
         return Q(Project(children=[self.node], cols=list(cols)))
 
-    def group_by(self, keys: Iterable[str], aggs: Iterable[tuple[str, str, str]]) -> "Q":
+    def group_by(self, keys: Iterable[str],
+                 aggs: Iterable[tuple[str, str, str]]) -> "Q":
         return Q(Aggregate(children=[self.node], group_by=list(keys),
                            aggs=list(aggs)))
 

@@ -127,7 +127,8 @@ class Estimator:
         return ins + self.card(node)
 
     # -- N_{u,SF}: distinct rows of ref tables visible at u -------------------
-    def distinct_at(self, root_of_subtree: Node, ref_tables: frozenset[str]) -> float:
+    def distinct_at(self, root_of_subtree: Node,
+                    ref_tables: frozenset[str]) -> float:
         """N_{u,SF_i}: for each referenced base table, base size reduced by
         s_⋈ per join on the path from the table's Scan up to u; referenced
         tables multiply together (SJ-decomposed filters see pairs)."""
@@ -137,7 +138,7 @@ class Estimator:
             if path is None:
                 return float("inf")  # table not visible at this node
             n = float(self.catalog.size(t))
-            for anc in path:  # nodes strictly above the Scan, up to u inclusive
+            for anc in path:  # nodes strictly above the Scan, up to u
                 if isinstance(anc, Join):
                     n *= self.params.s_join
                 # CrossJoin: selectivity 1 (paper §5) — no reduction

@@ -152,7 +152,7 @@ def dp_place(
             m |= avail[c.nid]
         avail[u.nid] = m
 
-    # -- selectivity helpers ----------------------------------------------------
+    # -- selectivity helpers --------------------------------------------------
     s_of = {
         l.idx: params.s_of(l.sf.sf_id, l.sf.selectivity_hint) for l in lifted
     }
@@ -188,7 +188,7 @@ def dp_place(
             n_states += 1
             best = INF
             bc: tuple = ("none",)
-            # ---- Step 1: distribute to children -------------------------------
+            # ---- Step 1: distribute to children -----------------------------
             if len(u.children) == 2:
                 m1, m2 = child_masks
                 S_down = S & (m1 | m2)
@@ -217,10 +217,11 @@ def dp_place(
                 if S == 0:
                     best = 0.0
                     bc = ("leaf",)
-            # ---- Step 2: relational cost at u ---------------------------------
+            # ---- Step 2: relational cost at u -------------------------------
             if best < INF:
-                best = best + params.alpha * c_u[u.nid] * sel(tab_cache[u.nid], S)
-            # ---- Step 3: place each i in S at u --------------------------------
+                best = best + params.alpha * c_u[u.nid] * sel(
+                    tab_cache[u.nid], S)
+            # ---- Step 3: place each i in S at u -----------------------------
             for i in range(n):
                 if not (S >> i & 1):
                     continue
@@ -249,7 +250,7 @@ def dp_place(
     if root_cost >= INF:
         raise RuntimeError("DP found no feasible placement (blocking bug?)")
 
-    # ---- traceback ------------------------------------------------------------
+    # ---- traceback ----------------------------------------------------------
     placement: dict[int, int] = {}
 
     def trace(u: Node, S: int) -> None:

@@ -95,5 +95,6 @@ def optimize(
     )
 
 
-def report(plan: Node, catalog: Catalog, params: CostParams | None = None) -> dict:
+def report(plan: Node, catalog: Catalog,
+           params: CostParams | None = None) -> dict:
     return plan_cost_report(plan, catalog, params or CostParams())

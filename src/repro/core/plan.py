@@ -119,7 +119,8 @@ class Node:
     # -- classification -----------------------------------------------------
     @property
     def is_semantic(self) -> bool:
-        return isinstance(self, (SemanticFilter, SemanticJoin, SemanticProject))
+        return isinstance(
+            self, (SemanticFilter, SemanticJoin, SemanticProject))
 
     @property
     def is_blocking(self) -> bool:
@@ -248,7 +249,8 @@ class Aggregate(Node):
     # each agg: (func, qualified_col_or_'*', out_name)
 
     def output_columns(self, catalog):
-        return list(self.group_by) + [f"agg.{name}" for _, _, name in self.aggs]
+        return list(self.group_by) + [f"agg.{name}"
+                                      for _, _, name in self.aggs]
 
     def label(self):
         return f"γ[{self.group_by}; {[a[2] for a in self.aggs]}]"
@@ -299,7 +301,7 @@ class SemanticFilter(Node):
     """SF_φ(R) = {r ∈ R | M(r, φ) = true}. One LLM call per *distinct*
     non-null projection onto ``ref_cols`` under function caching."""
 
-    phi: str = ""  # natural-language template, e.g. "{books.description} is about AI?"
+    phi: str = ""  # NL template, e.g. "{books.description} is about AI?"
     ref_cols: list[str] = field(default_factory=list)
     sf_id: int = -1  # filled by the optimizer pipeline
     selectivity_hint: Optional[float] = None

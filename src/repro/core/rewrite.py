@@ -138,7 +138,8 @@ def _bundle_top(root: Node, sp: SemanticProject) -> Node:
             return top
 
 
-def pull_up_semantic_projections(root: Node, catalog: Catalog) -> tuple[Node, bool]:
+def pull_up_semantic_projections(root: Node, catalog: Catalog
+                                 ) -> tuple[Node, bool]:
     """One convergence loop of SP pull-up. Returns (root, changed_any)."""
     changed_any = False
     progress = True
@@ -207,6 +208,7 @@ def simplify(root: Node, catalog: Catalog) -> Node:
         if not (ch1 or ch2):
             break
     # assign stable sf_ids in plan order
-    for i, sf in enumerate(n for n in root.walk() if isinstance(n, SemanticFilter)):
+    for i, sf in enumerate(n for n in root.walk()
+                           if isinstance(n, SemanticFilter)):
         sf.sf_id = i
     return root

@@ -73,7 +73,8 @@ def _mk_review(rng, i, n_books, noun="book"):
     rating = int(np.clip(sent + 3 + rng.integers(-1, 2), 1, 5))
     w = _SENT_WORDS[sent][rng.integers(2)]
     shipping = bool(rng.random() < 0.15)
-    extra = " The box arrived damaged and shipping took weeks." if shipping else ""
+    extra = (" The box arrived damaged and shipping took weeks."
+             if shipping else "")
     return {
         "review_id": i,
         "book_id": book,
@@ -89,7 +90,8 @@ def _mk_review(rng, i, n_books, noun="book"):
 
 def make_bookreview(seed: int = 0, scale: float = 1.0) -> Database:
     rng = np.random.default_rng(seed)
-    n_books, n_reviews, n_users = int(400 * scale), int(1200 * scale), int(450 * scale)
+    n_books, n_reviews = int(400 * scale), int(1200 * scale)
+    n_users = int(450 * scale)
     books = [_mk_book(rng, i) for i in range(n_books)]
     reviews = [_mk_review(rng, i, n_books) for i in range(n_reviews)]
     users = []
@@ -108,11 +110,13 @@ def make_bookreview(seed: int = 0, scale: float = 1.0) -> Database:
     db.add_table("reviews", reviews, text_columns={"text"})
     db.add_table("users", users, text_columns={"bio"})
     db.truths.update({
-        BOOKS_ABOUT_AI: lambda c: c["books"]["_topic"] == "artificial intelligence",
+        BOOKS_ABOUT_AI:
+            lambda c: c["books"]["_topic"] == "artificial intelligence",
         REVIEW_POSITIVE: lambda c: c["reviews"]["_sentiment"] > 0,
         REVIEW_SENTIMENT: lambda c: c["reviews"]["_sentiment"] + 3,
         BOOK_SECOND_EDITION: lambda c: c["books"]["_second_edition"],
-        REVIEW_MENTIONS_SHIPPING: lambda c: c["reviews"]["_shipping_complaint"],
+        REVIEW_MENTIONS_SHIPPING:
+            lambda c: c["reviews"]["_shipping_complaint"],
         USER_IS_EXPERT: lambda c: c["users"]["_critic"],
         REVIEW_MATCHES_BOOK: lambda c: (
             c["reviews"]["_sentiment"] != 0
@@ -142,7 +146,8 @@ _CUISINES = ["mexican", "italian", "sushi", "bbq", "vegan", "diner", "thai"]
 
 def make_yelp(seed: int = 1, scale: float = 1.0) -> Database:
     rng = np.random.default_rng(seed)
-    n_biz, n_rev, n_users = int(800 * scale), int(3200 * scale), int(800 * scale)
+    n_biz, n_rev = int(800 * scale), int(3200 * scale)
+    n_users = int(800 * scale)
     businesses = []
     for i in range(n_biz):
         fam = bool(rng.random() < 0.3)
@@ -150,7 +155,8 @@ def make_yelp(seed: int = 1, scale: float = 1.0) -> Database:
         cuisine = _CUISINES[rng.integers(len(_CUISINES))]
         desc = (f"{cuisine.title()} spot #{i}."
                 + (" Kids menu and playground available." if fam else "")
-                + (" White-tablecloth fine dining experience." if upscale else ""))
+                + (" White-tablecloth fine dining experience."
+                   if upscale else ""))
         businesses.append({
             "biz_id": i, "name": f"Biz {i}", "city": f"city{i % 12}",
             "stars": float(np.round(rng.uniform(1, 5), 1)),
@@ -164,7 +170,8 @@ def make_yelp(seed: int = 1, scale: float = 1.0) -> Database:
         service = bool(rng.random() < 0.25)
         w = _SENT_WORDS[sent][rng.integers(2)]
         yreviews.append({
-            "review_id": i, "biz_id": biz, "user_id": int(rng.integers(n_users)),
+            "review_id": i, "biz_id": biz,
+            "user_id": int(rng.integers(n_users)),
             "text": (f"The food was {w}, visit {i}."
                      + (" Staff went above and beyond!" if service else "")),
             "stars": int(np.clip(sent + 3, 1, 5)),
@@ -225,11 +232,14 @@ def make_googlelocal(seed: int = 2, scale: float = 1.0) -> Database:
         access = bool(rng.random() < 0.5)
         places.append({
             "place_id": i, "name": f"Place {i}",
-            "category": ["cafe", "museum", "park", "store"][int(rng.integers(4))],
+            "category": ["cafe", "museum", "park",
+                         "store"][int(rng.integers(4))],
             "rating": float(np.round(rng.uniform(1, 5), 1)),
             "description": (f"Venue {i}."
-                            + (" Lovely patio with outdoor tables." if outdoor else "")
-                            + (" Step-free entrance and ramps." if access else "")),
+                            + (" Lovely patio with outdoor tables."
+                               if outdoor else "")
+                            + (" Step-free entrance and ramps."
+                               if access else "")),
             "_outdoor": outdoor, "_accessible": access,
         })
     greviews = []
@@ -240,7 +250,8 @@ def make_googlelocal(seed: int = 2, scale: float = 1.0) -> Database:
         greviews.append({
             "review_id": i, "place_id": int(rng.integers(n_places)),
             "text": (f"Visit {i} was {w}."
-                     + (" Could not find parking anywhere." if parking else "")),
+                     + (" Could not find parking anywhere."
+                        if parking else "")),
             "rating": int(np.clip(sent + 3, 1, 5)),
             "time": int(rng.integers(2018, 2024)),
             "_sentiment": sent, "_parking": parking,
@@ -292,9 +303,11 @@ def make_tpch(seed: int = 3, scale: float = 1.0) -> Database:
     rng = np.random.default_rng(seed)
     n_region, n_nation, n_supp = 5, 25, int(40 * scale)
     n_cust, n_part = int(450 * scale), int(600 * scale)
-    n_psupp, n_orders, n_line = int(2400 * scale), int(3000 * scale), int(12000 * scale)
+    n_psupp, n_orders = int(2400 * scale), int(3000 * scale)
+    n_line = int(12000 * scale)
 
-    region = [{"r_regionkey": i, "r_name": f"REGION{i}"} for i in range(n_region)]
+    region = [{"r_regionkey": i, "r_name": f"REGION{i}"}
+              for i in range(n_region)]
     nation = [{"n_nationkey": i, "n_name": f"NATION{i}",
                "n_regionkey": i % n_region} for i in range(n_nation)]
     supplier = []
@@ -337,7 +350,8 @@ def make_tpch(seed: int = 3, scale: float = 1.0) -> Database:
     for i in range(n_orders):
         urgent = bool(rng.random() < 0.2)
         orders.append({
-            "o_orderkey": i, "o_custkey": int(rng.integers(int(n_cust * 1.15))),
+            "o_orderkey": i,
+            "o_custkey": int(rng.integers(int(n_cust * 1.15))),
             "o_orderstatus": ["O", "F", "P"][int(rng.integers(3))],
             "o_totalprice": float(np.round(rng.uniform(1000, 300000), 2)),
             "o_orderdate": int(rng.integers(1992, 1999)),
@@ -431,7 +445,8 @@ def make_ecommerce(seed: int = 4, scale: float = 1.0) -> Database:
         previews.append({
             "review_id": i, "product_id": int(rng.integers(int(n_prod * 1.2))),
             "text": (f"Purchase {i} felt {w}."
-                     + (" It broke after two days, clearly defective." if defect else "")),
+                     + (" It broke after two days, clearly defective."
+                        if defect else "")),
             "rating": int(np.clip(sent + 3, 1, 5)),
             "_sentiment": sent, "_defect": defect,
         })
@@ -440,7 +455,8 @@ def make_ecommerce(seed: int = 4, scale: float = 1.0) -> Database:
                  text_columns={"title", "category", "brand", "description"})
     db.add_table("previews", previews, text_columns={"text"})
     db.truths.update({
-        PRODUCT_IS_ELECTRONICS: lambda c: c["products"]["_cat"] == "electronics",
+        PRODUCT_IS_ELECTRONICS:
+            lambda c: c["products"]["_cat"] == "electronics",
         PRODUCT_ECO: lambda c: c["products"]["_eco"],
         PRODUCT_FOR_KIDS: lambda c: c["products"]["_kids"],
         ECOM_REVIEW_POSITIVE: lambda c: c["previews"]["_sentiment"] > 0,

@@ -3,7 +3,12 @@
 Vectorised, mask-based execution (DuckDB-pipeline analogue, DESIGN.md §4.2):
 
 * σ / SF update validity masks (no materialisation);
-* ⋈ / × / γ / sort / limit materialise compacted outputs;
+* ⋈ / × / γ / sort / limit materialise compacted outputs — on device
+  impls through the ``kernels/compact`` stream-compaction op plus one
+  fused device gather per operator, so device columns never bounce
+  through the host between operators (host-side string/64-bit columns
+  densify lazily, on first host access) and every remaining fetch is
+  ticked into ``ExecStats.pipeline_syncs``;
 * γ, ⋈ and semantic dedup all sit on the device ``group_build`` op
   (``kernels/hash_dedup``): one sort-by-key + boundary-scan pass that
   returns representatives, inverse scatter map, group counts and
@@ -12,12 +17,13 @@ Vectorised, mask-based execution (DuckDB-pipeline analogue, DESIGN.md §4.2):
   ``SegmentPlan`` straight from the kernel and reduces every aggregate
   column in ONE segmented pass (``segmented_reduce`` ops);
 * ⋈ groups its build side with the same op (integer keys group by raw
-  value — exact, no host re-encode), probes via a representative
-  searchsorted over the kernel's segment offsets and expands the match
-  lists through the ``kernels/expand`` op (device scatter+scan on
-  accelerated impls — no ``np.repeat``), sharing its compact/gather
-  output path with × (which enumerates its row pairs through the same
-  op, so cross and equi joins cannot drift in row order);
+  value — exact, no host re-encode) and probes it ON DEVICE: the
+  representative searchsorted, count/offset lookup and match expansion
+  run inside the device jit (one scalar fetch for the output total — no
+  N_probe host op, no ``np.repeat``), sharing its compact/gather output
+  path with × (which enumerates its row pairs through the
+  ``kernels/expand`` op in device-output mode, so cross and equi joins
+  cannot drift in row order);
 * γ's key columns become per-column rank codes inside the same device
   pass as the group build (``group_build_columns`` — no per-column host
   ``np.unique``);
@@ -77,9 +83,10 @@ from ..kernels.segmented_reduce.ops import (
     segment_plan_from_group_build,
     segmented_aggregate,
 )
+from ..kernels.sync import HOST_SYNCS
 from ..semantic.cache import FP_BASIS
 from ..semantic.runner import SemanticResult, SemanticRunner
-from .table import Database, Table, as_column
+from .table import Database, Table, as_column, fetch, is_device
 
 MAX_CROSS_ROWS = 30_000_000
 
@@ -89,8 +96,11 @@ class ExecStats:
     """Per-query execution counters mirroring the cost model's terms:
     ``llm_calls`` (distinct backend invocations = C_LLM), ``rel_rows``
     (rows through relational operators = C_rel), ``probe_rows`` (cache
-    lookups triggered by pulled-up filters), plus wall-clock splits and
-    per-operator breakdowns."""
+    lookups triggered by pulled-up filters), plus wall-clock splits,
+    per-operator breakdowns and ``pipeline_syncs`` — the device→host
+    fetches ``kernels.sync.HOST_SYNCS`` recorded while the plan ran
+    (every remaining fetch in the device-resident pipeline is ticked,
+    so the benchmarks can gate on the count)."""
 
     llm_calls: int = 0
     cache_hits: int = 0
@@ -103,7 +113,8 @@ class ExecStats:
     sem_wall_s: float = 0.0
     per_op: dict = field(default_factory=dict)
     prompt_chars: int = 0
-    prompts_rendered: int = 0  # host-side renders (== distinct keys when vectorized)
+    prompts_rendered: int = 0  # host renders (distinct keys, vectorized)
+    pipeline_syncs: int = 0  # device→host fetches during execute()
 
     def bump(self, op: str, key: str, v: float) -> None:
         """Accumulate ``v`` under ``per_op[op][key]``."""
@@ -152,8 +163,10 @@ class Executor:
             self.runner.reset_query_scope()
         stats = ExecStats()
         t0 = time.perf_counter()
+        syncs0 = HOST_SYNCS.syncs
         table = self._run(plan, stats)
         stats.wall_s = time.perf_counter() - t0
+        stats.pipeline_syncs = HOST_SYNCS.syncs - syncs0
         return table, stats
 
     # ------------------------------------------------------------ dispatch
@@ -197,16 +210,16 @@ class Executor:
         if isinstance(node, Aggregate):
             return self._aggregate(node, ch[0])
         if isinstance(node, Limit):
-            t = ch[0].compact()
+            t = ch[0].compact(self.kernel_impl)
             idx = np.arange(min(node.n, t.capacity))
-            return t.gather(idx)
+            return t.gather(idx, self.kernel_impl)
         if isinstance(node, Sort):
-            t = ch[0].compact()
+            t = ch[0].compact(self.kernel_impl)
             if t.capacity == 0:
                 return t
             keys = []
             for colname, desc in reversed(node.keys):
-                v = np.asarray(t.col(colname))
+                v = fetch(t.col(colname), "sort_keys")
                 if not desc:
                     keys.append(v)
                 elif v.dtype.kind == "f":
@@ -220,16 +233,20 @@ class Executor:
                     ranks = np.unique(v, return_inverse=True)[1]
                     keys.append(-ranks)
             order = np.lexsort(keys)
-            return t.gather(order)
+            return t.gather(order, self.kernel_impl)
         if isinstance(node, Union):
-            parts = [c.compact() for c in ch]
-            cols = {
-                k: as_column(np.concatenate(
-                    [np.asarray(p.col(k)) for p in parts]))
-                for k in parts[0].columns
-            }
+            parts = [c.compact(self.kernel_impl) for c in ch]
+            cols = {}
+            for k in parts[0].columns:
+                vs = [p.col(k) for p in parts]
+                if all(is_device(v) for v in vs):
+                    cols[k] = jnp.concatenate(vs)  # stays on device
+                else:
+                    cols[k] = as_column(
+                        np.concatenate([np.asarray(v) for v in vs]))
             n = sum(p.capacity for p in parts)
-            return Table(columns=cols, valid=jnp.ones(n, dtype=bool))
+            return Table(columns=cols, valid=jnp.ones(n, dtype=bool),
+                         _num_valid=n)
         raise ExecutionError(f"unsupported relational node {type(node)}")
 
     def _resolve_cols(self, cols: list[str], t: Table) -> list[str]:
@@ -267,7 +284,7 @@ class Executor:
             if e.op == "between":
                 lo, hi = e.right
                 if self._on_host(lhs, lo) or self._on_host(lhs, hi):
-                    v = np.asarray(lhs)
+                    v = fetch(lhs, "predicate")
                     return jnp.asarray((v >= lo) & (v <= hi))
                 return (lhs >= lo) & (lhs <= hi)
             rhs = (
@@ -284,7 +301,7 @@ class Executor:
                 ">=": lambda a, b: a >= b,
             }
             if self._on_host(lhs, rhs):
-                out = np.asarray(ops[e.op](np.asarray(lhs), rhs))
+                out = np.asarray(ops[e.op](fetch(lhs, "predicate"), rhs))
                 if out.ndim == 0:  # incomparable types collapse to a scalar
                     out = np.full(np.shape(lhs)[0], bool(out))
                 return jnp.asarray(out)
@@ -293,11 +310,12 @@ class Executor:
 
     @staticmethod
     def _on_host(lhs, rhs) -> bool:
-        """Host-side numpy columns (strings, 64-bit numerics kept exact
-        by ``as_column``) and constants outside int32 range must compare
-        in numpy: jnp would reject strings outright and silently wrap
+        """Host-side columns (strings, 64-bit numerics kept exact by
+        ``as_column`` — numpy arrays or their deferred ``LazyColumn``
+        gathers) and constants outside int32 range must compare in
+        numpy: jnp would reject strings outright and silently wrap
         64-bit values through 32-bit mode."""
-        if isinstance(lhs, np.ndarray) or isinstance(rhs, np.ndarray):
+        if not is_device(lhs) or isinstance(rhs, np.ndarray):
             return True
         if isinstance(rhs, str):
             return True
@@ -313,13 +331,13 @@ class Executor:
         OR unsigned lists). Float lists compare at the column's device
         precision, matching scalar ``==`` semantics."""
         vals = np.asarray(list(values))
-        if isinstance(lhs, jnp.ndarray) and vals.dtype.kind in "iufb":
+        if is_device(lhs) and vals.dtype.kind in "iufb":
             in_range = vals.dtype.kind not in "iu" or (
                 len(vals) == 0
                 or (-2**31 <= int(vals.min()) and int(vals.max()) < 2**31))
             if in_range:
                 return jnp.isin(lhs, jnp.asarray(vals))
-        return jnp.asarray(np.isin(np.asarray(lhs), vals))
+        return jnp.asarray(np.isin(fetch(lhs, "predicate"), vals))
 
     def _eval_value(self, e: Expr, t: Table):
         if isinstance(e, Col):
@@ -333,18 +351,22 @@ class Executor:
 
     def _equi_join(self, left: Table, right: Table, lk: str, rk: str) -> Table:
         """Equi join. Vectorized: device-grouped build side + device
-        match expansion (``join_match_lists``); reference: stable
-        argsort + searchsorted + ``np.repeat``. Identical output rows in
-        identical order either way."""
-        lt = left.compact()
-        rt = right.compact()
-        lkv = np.asarray(lt.col(lk))
-        rkv = np.asarray(rt.col(rk))
+        probe/match expansion (``join_match_lists`` — key columns go in
+        as-is: probe keys stay on device; the build side is fetched
+        once for the host-padded group build, ticked as
+        ``join_build_keys``); reference: stable argsort + searchsorted
+        + ``np.repeat``. Identical output rows in identical order
+        either way."""
+        lt = left.compact(self.kernel_impl)
+        rt = right.compact(self.kernel_impl)
         if self.vectorized:
-            # hash-grouped build side + segment offsets; identical output
+            # hash-grouped build side + device probe; identical output
             # rows in identical order to the reference below
-            out_l, out_r = join_match_lists(lkv, rkv, impl=self.kernel_impl)
+            out_l, out_r = join_match_lists(lt.col(lk), rt.col(rk),
+                                            impl=self.kernel_impl)
         else:
+            lkv = np.asarray(lt.col(lk))
+            rkv = np.asarray(rt.col(rk))
             order = np.argsort(rkv, kind="stable")
             rk_sorted = rkv[order]
             lo = np.searchsorted(rk_sorted, lkv, "left")
@@ -359,33 +381,45 @@ class Executor:
         return self._gather_joined(lt, rt, out_l, out_r)
 
     @staticmethod
-    def _gather_joined(lt: Table, rt: Table, out_l: np.ndarray,
-                       out_r: np.ndarray) -> Table:
+    def _gather_joined(lt: Table, rt: Table, out_l, out_r) -> Table:
         """Materialise join output columns with ONE gather per column.
-        Shared by ⋈ and ×; host-side (string/64-bit) columns pass through
-        ``as_column`` exactly once instead of being densified into two
-        intermediate tables."""
-        cols = {k: as_column(np.asarray(v)[out_l])
+        Shared by ⋈ and ×. Device index lists (the device probe / device
+        cross enumeration) keep device columns on device via the fused
+        ``take_rows`` gather and defer host-side columns lazily; host
+        index lists densify through ``as_column`` exactly once, as the
+        reference always did."""
+        if is_device(out_l):
+            tl = lt.take_rows(out_l)
+            tr = rt.take_rows(out_r)
+            return Table(columns={**tl.columns, **tr.columns},
+                         valid=tl.valid, _num_valid=tl.capacity)
+        # host index lists (reference path, string-fallback probe):
+        # densifying a device column here is a real device→host fetch
+        # and is ticked so pipeline_syncs stays honest
+        cols = {k: as_column(fetch(v, "join_gather")[out_l])
                 for k, v in lt.columns.items()}
         for k, v in rt.columns.items():
-            cols[k] = as_column(np.asarray(v)[out_r])
-        return Table(columns=cols, valid=jnp.ones(len(out_l), dtype=bool))
+            cols[k] = as_column(fetch(v, "join_gather")[out_r])
+        return Table(columns=cols, valid=jnp.ones(len(out_l), dtype=bool),
+                     _num_valid=len(out_l))
 
     def _cross_join(self, left: Table, right: Table) -> Table:
         """Cross join. Vectorized: the row-pair enumeration is the same
-        ``kernels/expand`` op the equi join expands matches with (n2
-        rows per left segment, zero offsets → tiled right indices), so
-        × and ⋈ cannot drift in row order; reference: host
+        ``kernels/expand`` op the equi join's string fallback expands
+        matches with (n2 rows per left segment, zero offsets → tiled
+        right indices) — handed over as device arrays (``as_device``,
+        zero fetches) on device impls; reference: host
         ``np.repeat``/``np.tile``."""
-        lt = left.compact()
-        rt = right.compact()
+        lt = left.compact(self.kernel_impl)
+        rt = right.compact(self.kernel_impl)
         n1, n2 = lt.capacity, rt.capacity
         if n1 * n2 > MAX_CROSS_ROWS:
             raise ExecutionError(
                 f"cross join of {n1}x{n2} exceeds MAX_CROSS_ROWS")
         if self.vectorized:
             out_l, out_r = expand_segments(
-                np.full(n1, n2, dtype=np.int64), impl=self.kernel_impl)
+                np.full(n1, n2, dtype=np.int64), impl=self.kernel_impl,
+                as_device=True)
         else:
             out_l = np.repeat(np.arange(n1), n2)
             out_r = np.tile(np.arange(n2), n1)
@@ -395,7 +429,7 @@ class Executor:
         """Dispatch grouped/global aggregation to the vectorized or
         per-group reference implementation (the reference also defines
         the n == 0 empty-column dtypes)."""
-        t = child.compact()
+        t = child.compact(self.kernel_impl)
         n = t.capacity
         if not node.group_by:
             cols = {}
@@ -411,12 +445,13 @@ class Executor:
         """Per-group reference path: O(G*N) ``np.nonzero`` scan per group
         and aggregate column. Kept for equivalence testing (and the n == 0
         case, whose empty-column dtypes it defines)."""
-        keys = np.stack([np.asarray(t.col(k)) for k in node.group_by], axis=1)
+        keys = np.stack([fetch(t.col(k), "agg_keys")
+                         for k in node.group_by], axis=1)
         uniq, inverse = np.unique(keys, axis=0, return_inverse=True)
         g = uniq.shape[0]
         cols = {}
         for i, k in enumerate(node.group_by):
-            dt = np.asarray(t.col(k)).dtype
+            dt = np.dtype(t.col(k).dtype)  # dtype only — no column fetch
             # as_column: a 64-bit key column (e.g. an exact int64 sum from
             # an upstream aggregate) must not wrap through jnp's 32-bit mode
             cols[k] = as_column(uniq[:, i].astype(dt))
@@ -448,7 +483,6 @@ class Executor:
         """
         key_cols = [t.col(k) for k in node.group_by]
         codes, gb = group_build_columns(key_cols, impl=self.kernel_impl)
-        key_vals = [np.asarray(c) for c in key_cols]
         g = gb.num_groups
         plan = segment_plan_from_group_build(gb)
         # codes are order-isomorphic to key values, so lexsorting the G
@@ -460,13 +494,20 @@ class Executor:
         reps_sorted = gb.reps[grp_order]
         cols = {}
         for i, k in enumerate(node.group_by):
-            cols[k] = as_column(key_vals[i][reps_sorted])
+            # device key columns gather their G representatives on
+            # device (no N-sized host fetch); host columns gather in np
+            if is_device(key_cols[i]):
+                cols[k] = key_cols[i][jnp.asarray(reps_sorted,
+                                                  dtype=jnp.int32)]
+            else:
+                cols[k] = as_column(np.asarray(key_cols[i])[reps_sorted])
         for func, c, name in node.aggs:
-            values = None if func == "count" else np.asarray(t.col(c))
+            values = None if func == "count" else t.col(c)
             cols[f"agg.{name}"] = as_column(
                 segmented_aggregate(plan, values, func,
                                     impl=self.kernel_impl)[grp_order])
-        return Table(columns=cols, valid=jnp.ones(g, dtype=bool))
+        return Table(columns=cols, valid=jnp.ones(g, dtype=bool),
+                     _num_valid=g)
 
     @staticmethod
     def _agg_value(func: str, t: Table, c: str, idx: np.ndarray):
@@ -478,7 +519,7 @@ class Executor:
         while count is 0 and sum keeps the 0/0.0 identity."""
         if func == "count":
             return np.int64(len(idx))
-        v = np.asarray(t.col(c))[idx]
+        v = fetch(t.col(c), "agg_values")[idx]
         if len(v) == 0:
             if func != "sum":
                 return np.float64(np.nan)
@@ -503,7 +544,7 @@ class Executor:
             if col not in tc.columns:
                 raise ExecutionError(
                     f"semantic operator references {rt} but {col} missing")
-            id_cols.append(np.asarray(tc.col(col), dtype=np.int32))
+            id_cols.append(fetch(tc.col(col), "sem_keys").astype(np.int32))
         return rts, id_cols
 
     def _context_at(self, rts: list[str], id_cols: list[np.ndarray],
@@ -517,7 +558,7 @@ class Executor:
     def _contexts_for(self, t: Table, ref_tables: frozenset[str]
                       ) -> tuple[list[dict], Table]:
         """Per-row reference path: one context dict per valid row."""
-        tc = t.compact()
+        tc = t.compact(self.kernel_impl)
         rts, id_cols = self._ref_id_columns(tc, ref_tables)
         ctxs = [self._context_at(rts, id_cols, i)
                 for i in range(tc.capacity)]
@@ -555,7 +596,7 @@ class Executor:
     def _evaluate_vectorized(self, node: Node, child: Table,
                              stats: ExecStats, out_dtype: str
                              ) -> tuple[Table, SemanticResult, np.ndarray]:
-        tc = child.compact()
+        tc = child.compact(self.kernel_impl)
         n = tc.capacity
         rts, id_cols = self._ref_id_columns(tc, node.ref_tables)
         stats.sem_rows += n
@@ -620,6 +661,7 @@ class Executor:
                 np.zeros(0, np.float32)
             cols = dict(tc.columns)
             cols[node.out_col] = jnp.asarray(vals)
-            return Table(columns=cols, valid=tc.valid)
+            return Table(columns=cols, valid=tc.valid,
+                         _num_valid=tc._num_valid)
 
         raise ExecutionError(f"unsupported semantic node {type(node)}")

@@ -9,6 +9,17 @@ String data lives in a host-side ``TextStore``; columns hold int32 handles
 Every base table carries a hidden ``<table>.row_id`` column (int32 index
 into the generator's row payload) used by semantic operators to render
 prompts and by function caching to key distinct inputs.
+
+Compaction is device-resident on accelerated impls: ``Table.compact()``
+builds its dense gather index with the ``kernels/compact`` op and
+gathers every device-width column in one fused device pass, so
+filter→join→aggregate chains keep device columns on device end to end.
+Host-side (string / 64-bit) columns become ``LazyColumn``s — the host
+gather is deferred until something actually reads the column on the
+host, and the device gather index is fetched at most once per operator
+output (shared ``HostIndex``), counted by ``kernels/sync.py``. The
+cached ``num_valid`` row count makes executor stats bumps cost one
+device→host sync per operator output instead of one per access.
 """
 from __future__ import annotations
 
@@ -17,6 +28,11 @@ from typing import Iterable, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
+
+from ..kernels.compact.ops import compact_index, device_gather
+from ..kernels.sync import HOST_SYNCS
+from ..kernels.util import is_device_array as is_device
+from ..kernels.util import resolve_impl
 
 NULL_HANDLE = -1
 
@@ -29,6 +45,92 @@ def as_column(values) -> "np.ndarray | jnp.ndarray":
     if arr.dtype.kind in "iufb" and arr.dtype.itemsize <= 4:
         return jnp.asarray(arr)
     return arr
+
+
+def fetch(arr, site: str) -> np.ndarray:
+    """``np.asarray`` with sync accounting: materialising a device array
+    on the host ticks ``HOST_SYNCS`` under ``site``; host arrays (numpy,
+    lazy columns) are free. Every remaining engine-level device→host
+    fetch routes through here so the bench ``pipeline_syncs`` counts
+    stay honest."""
+    if is_device(arr):
+        HOST_SYNCS.tick(site=site)
+    return np.asarray(arr)
+
+
+class HostIndex:
+    """A gather index shared by every host-side column of one operator
+    output, fetched to the host AT MOST once — and not at all when no
+    host column is ever read. The device buffer is released after the
+    fetch (the host copy answers every later ``get``)."""
+
+    __slots__ = ("_idx", "_np", "_len")
+
+    def __init__(self, idx):
+        self._len = int(np.shape(idx)[0])
+        if isinstance(idx, np.ndarray):
+            self._idx, self._np = None, idx
+        else:
+            self._idx, self._np = idx, None
+
+    def __len__(self) -> int:
+        return self._len
+
+    def get(self) -> np.ndarray:
+        if self._np is None:
+            self._np = np.asarray(self._idx)
+            self._idx = None  # release the device buffer
+            HOST_SYNCS.tick(site="compact_host_cols")
+        return self._np
+
+
+class LazyColumn:
+    """Host-side (string / 64-bit) column whose gather is deferred.
+
+    Wraps the source column plus a shared ``HostIndex``; the dense copy
+    materialises on first host access (``np.asarray`` / ``__array__``)
+    and is cached, releasing the source reference so chained operator
+    outputs do not pin every upstream full-size column. Chained
+    operators may wrap a ``LazyColumn`` in another ``LazyColumn`` —
+    materialisation composes the gathers."""
+
+    __slots__ = ("_base", "_index", "_dense", "_len")
+
+    def __init__(self, base, index: HostIndex):
+        self._base = base
+        self._index = index
+        self._dense = None
+        self._len = len(index)
+
+    @property
+    def dtype(self) -> np.dtype:
+        if self._dense is not None:
+            return self._dense.dtype
+        if isinstance(self._base, LazyColumn):
+            return self._base.dtype
+        return np.asarray(self._base).dtype
+
+    @property
+    def shape(self) -> tuple:
+        return (self._len,)
+
+    def __len__(self) -> int:
+        return self._len
+
+    def _materialize(self) -> np.ndarray:
+        if self._dense is None:
+            self._dense = np.asarray(self._base)[self._index.get()]
+            self._base = self._index = None  # release upstream buffers
+        return self._dense
+
+    def __array__(self, dtype=None, copy=None):
+        arr = self._materialize()
+        if dtype is not None and arr.dtype != dtype:
+            return arr.astype(dtype)
+        return arr
+
+    def __getitem__(self, key):
+        return self._materialize()[key]
 
 
 class TextStore:
@@ -60,10 +162,13 @@ class TextStore:
 @dataclass
 class Table:
     """Fixed-capacity columnar relation. ``columns`` maps qualified names
-    ("table.col") to 1-D arrays of equal length; ``valid`` masks live rows."""
+    ("table.col") to 1-D arrays of equal length; ``valid`` masks live
+    rows. ``_num_valid`` caches the live-row count so executor stats and
+    compaction share one device→host sync per operator output."""
 
     columns: dict[str, jnp.ndarray]
     valid: jnp.ndarray  # bool[capacity]
+    _num_valid: Optional[int] = None
 
     @property
     def capacity(self) -> int:
@@ -71,7 +176,12 @@ class Table:
 
     @property
     def num_valid(self) -> int:
-        return int(jnp.sum(self.valid))
+        if self._num_valid is None:
+            # device reduction + scalar fetch — 4 bytes over the wire,
+            # not the whole bool[capacity] mask
+            self._num_valid = int(jnp.sum(self.valid))
+            HOST_SYNCS.tick(site="num_valid")
+        return self._num_valid
 
     def col(self, name: str) -> jnp.ndarray:
         return self.columns[name]
@@ -79,15 +189,60 @@ class Table:
     def with_mask(self, mask: jnp.ndarray) -> "Table":
         return Table(columns=self.columns, valid=self.valid & mask)
 
-    def compact(self) -> "Table":
-        """Materialise only valid rows (host-side gather)."""
-        idx = np.nonzero(np.asarray(self.valid))[0]
-        cols = {k: as_column(np.asarray(v)[idx]) for k, v in self.columns.items()}
-        return Table(columns=cols, valid=jnp.ones(len(idx), dtype=bool))
+    def compact(self, impl: str = "auto") -> "Table":
+        """Materialise only valid rows.
 
-    def gather(self, idx: np.ndarray) -> "Table":
-        cols = {k: as_column(np.asarray(v)[idx]) for k, v in self.columns.items()}
-        return Table(columns=cols, valid=jnp.ones(len(idx), dtype=bool))
+        Device impls ("kernel"/"interpret"/"ref", or "auto" on TPU)
+        build the gather index with the ``kernels/compact`` prefix-sum
+        op and gather device columns in one fused device pass — the
+        index fetch is skipped entirely because ``num_valid`` is cached
+        per operator output — while host-side (string/64-bit) columns
+        densify lazily on first host access. ``"host"`` (and "auto"
+        off-TPU) is the exact ``np.nonzero`` oracle: everything
+        materialises host-side immediately, as the pre-device table
+        layer did. A fully-valid table returns itself unchanged."""
+        if self._num_valid == self.capacity:
+            return self
+        impl = resolve_impl(impl, "host")
+        if impl == "host":
+            idx, count = compact_index(self.valid, impl="host")
+            self._num_valid = count
+            if count == self.capacity:
+                return self
+            cols = {k: as_column(np.asarray(v)[idx])
+                    for k, v in self.columns.items()}
+            return Table(columns=cols, valid=jnp.ones(count, dtype=bool),
+                         _num_valid=count)
+        count = self.num_valid  # one scalar sync, cached (stats reuse it)
+        if count == self.capacity:
+            return self
+        idx, _ = compact_index(self.valid, count=count, impl=impl)
+        return self.take_rows(idx)
+
+    def take_rows(self, idx) -> "Table":
+        """Device-mode row gather: device columns go through ONE fused
+        device gather (no host round-trip), host columns defer their
+        densification behind a shared lazily-fetched ``HostIndex``."""
+        n_out = int(np.shape(idx)[0])
+        dev = {k: v for k, v in self.columns.items() if is_device(v)}
+        gathered = iter(device_gather(list(dev.values()), idx))
+        src = HostIndex(idx) if len(dev) < len(self.columns) else None
+        cols = {k: next(gathered) if k in dev else LazyColumn(v, src)
+                for k, v in self.columns.items()}
+        return Table(columns=cols, valid=jnp.ones(n_out, dtype=bool),
+                     _num_valid=n_out)
+
+    def gather(self, idx: np.ndarray, impl: str = "auto") -> "Table":
+        """Materialise the rows selected by ``idx`` (in ``idx`` order).
+        Device impls keep device columns on device (``take_rows``); the
+        host path gathers everything through numpy immediately."""
+        impl = resolve_impl(impl, "host")
+        if impl != "host":
+            return self.take_rows(idx)
+        cols = {k: as_column(np.asarray(v)[idx])
+                for k, v in self.columns.items()}
+        return Table(columns=cols, valid=jnp.ones(len(idx), dtype=bool),
+                     _num_valid=len(idx))
 
     def select(self, names: Sequence[str]) -> "Table":
         keep = {}
@@ -100,7 +255,8 @@ class Table:
                 n.split(".")[0] for n in names
             }:
                 keep.setdefault(k, self.columns[k])
-        return Table(columns=keep, valid=self.valid)
+        return Table(columns=keep, valid=self.valid,
+                     _num_valid=self._num_valid)
 
 
 
@@ -151,7 +307,7 @@ class Database:
         columns (payload-only) are reconstructed through ``<t>.row_id``."""
         t = table.compact()
         n = t.capacity
-        np_cols = {k: np.asarray(v) for k, v in t.columns.items()}
+        np_cols = {k: fetch(v, "materialize") for k, v in t.columns.items()}
         want = list(cols) if cols else None
         out = []
         for i in range(n):

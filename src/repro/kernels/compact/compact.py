@@ -1,0 +1,58 @@
+"""Stream-compaction prefix count — Pallas kernel (the mask side of
+``Table.compact``).
+
+``compact_index`` (ops.py) turns a validity mask into the dense gather
+index of its live rows: the device analogue of ``np.nonzero``. The
+device formulation is prefix sum + scatter:
+
+1. a running prefix count over the 0/1 validity flags assigns every
+   live row its output position (``cumsum(flags) - 1``);
+2. one scatter writes each live row's index into that position — dead
+   rows target index N and are dropped (ops.py);
+3. the trailing prefix-count element IS the live-row total, fetched as
+   a single scalar (or skipped entirely when the caller already knows
+   ``num_valid``).
+
+This module holds step 1. The TPU grid iterates row tiles sequentially,
+so the kernel carries the running count in SMEM scratch — the same
+accumulate-across-the-grid pattern as ``expand``'s running-sum scan and
+``group_build``'s boundary scan. Steps 2–3 are scatter/slice and fuse
+into the same device pass in ops.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _prefix_count_kernel(flag_ref, psum_ref, carry):
+    r = pl.program_id(0)
+
+    @pl.when(r == 0)
+    def _():
+        carry[0] = 0
+
+    flags = flag_ref[...]               # (block_rows,) int32 0/1 flags
+    csum = jnp.cumsum(flags)
+    psum_ref[...] = carry[0] + csum
+    carry[0] = carry[0] + csum[-1]
+
+
+def prefix_count_kernel(flags, *, block_rows: int = 1024,
+                        interpret: bool = False):
+    """flags: (N,) int32 0/1 with N % block_rows == 0 (ops.py pads) ->
+    (N,) int32 inclusive running count of set flags (``cumsum(flags)``);
+    the last element is the total."""
+    n = flags.shape[0]
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        _prefix_count_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(flags)

@@ -1,0 +1,117 @@
+"""jit'd wrappers: device stream compaction and the fused column gather.
+
+``compact_index`` is the device replacement for the table layer's last
+per-operator host op: the ``np.nonzero`` gather-index build inside
+``Table.compact()``. Three implementations, following the
+``expand``/``hash_dedup`` contract:
+
+* ``impl="kernel"``/``"interpret"`` — Pallas prefix-count scan over the
+  validity flags, scatter of live-row indices into their dense output
+  positions;
+* ``impl="ref"`` — the same formulation with a jnp ``cumsum`` scan;
+* ``impl="host"`` — the exact ``np.nonzero`` oracle (zero device work);
+* ``impl="auto"`` — the kernel on TPU, the host oracle elsewhere (the
+  ``segment_count`` convention).
+
+Device impls return the gather index as a DEVICE array: when the caller
+already knows the live-row count (``Table`` caches ``num_valid`` per
+operator output) the wrapper performs ZERO device→host syncs, otherwise
+it fetches the single trailing prefix-count scalar — one sync, ticked
+against ``kernels.sync.HOST_SYNCS`` under site ``"compact"``. The host
+oracle records a ``host_fallbacks["compact"]`` serving instead, so
+tests can assert the accelerated path never re-enters ``np.nonzero``.
+
+``device_gather`` finishes the compaction: ONE jit gathers every
+device-resident column of a table through the same index without any
+host round-trip (host-side string/64-bit columns are densified lazily
+by the table layer, on first host access).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sync import HOST_SYNCS
+from ..util import pow2_bucket, resolve_impl
+from .compact import prefix_count_kernel
+from .ref import compact_index_np, prefix_count_jnp
+
+_EMPTY = np.zeros(0, dtype=np.int64)
+
+
+@partial(jax.jit, static_argnames=("impl", "block_rows"))
+def _compact_index_device(mask, *, impl: str, block_rows: int = 1024):
+    """Prefix count + scatter over a pow2-padded (N,) bool mask (the
+    wrapper pads with False, so N % block_rows == 0 and the heavy jit
+    compiles once per size bucket). Returns the (N,) int32 dense gather
+    index (positions >= <live total> hold garbage — the host wrapper
+    slices them off) and the live total itself."""
+    n = mask.shape[0]
+    flags = mask.astype(jnp.int32)
+    if impl == "ref":
+        psum = prefix_count_jnp(flags)
+    else:
+        psum = prefix_count_kernel(flags, block_rows=block_rows,
+                                   interpret=(impl == "interpret"))
+    iota = jnp.arange(n, dtype=jnp.int32)
+    # dead rows target index n and are dropped by the scatter
+    dest = jnp.where(mask, psum - 1, n)
+    idx = jnp.zeros(n, jnp.int32).at[dest].set(iota, mode="drop")
+    return idx, psum[-1]
+
+
+def compact_index(valid, *, count: int | None = None, impl: str = "auto"):
+    """Dense gather index of the True positions of ``valid`` (N,) bool.
+
+    Returns ``(idx, count)``: ``idx[j]`` is the row index of the j-th
+    live row (ascending), ``count`` the number of live rows. Device
+    impls keep ``idx`` ON DEVICE (int32, sliced to ``count``); passing
+    a known ``count`` (the table layer's cached ``num_valid``) makes
+    the call sync-free, otherwise the live total is fetched as one
+    scalar sync. ``impl="host"`` (and ``"auto"`` off-TPU) is the exact
+    ``np.nonzero`` oracle — int64 host indices, zero device work,
+    recorded as a ``host_fallbacks["compact"]`` serving.
+    """
+    n = int(np.shape(valid)[0])
+    impl = resolve_impl(impl, "host")
+    if n == 0:
+        return _EMPTY, 0
+    if impl == "host":
+        HOST_SYNCS.fallback("compact")
+        idx = compact_index_np(valid)
+        return idx, len(idx)
+    # pad the mask to its pow2 bucket BEFORE the heavy jit: the pad op
+    # itself is a trivial per-shape compile, and the prefix-count /
+    # scatter pass then reuses one compile per size bucket (the
+    # convention every host-facing wrapper follows); False padding
+    # cannot open an output slot
+    bucket = pow2_bucket(n)
+    mask = jnp.asarray(valid)
+    if bucket != n:
+        mask = jnp.pad(mask, (0, bucket - n))
+    idx, count_dev = _compact_index_device(mask, impl=impl)
+    if count is None:
+        count = int(jax.device_get(count_dev))
+        HOST_SYNCS.tick(site="compact")
+    return idx[:count], count
+
+
+@jax.jit
+def _gather_device(cols, idx):
+    return tuple(c[idx] for c in cols)
+
+
+def device_gather(cols, idx) -> list:
+    """Fused multi-column device gather: every column in ``cols`` (1-D
+    device arrays of equal length) gathered through ``idx`` in ONE jit,
+    with no device→host sync. ``idx`` may be a device array (straight
+    from ``compact_index`` or the device join probe) or a host index
+    (uploaded — host→device transfers are free of sync accounting)."""
+    if not cols:
+        return []
+    if isinstance(idx, np.ndarray) or not isinstance(idx, jnp.ndarray):
+        idx = jnp.asarray(np.asarray(idx), dtype=jnp.int32)
+    return list(_gather_device(tuple(cols), idx))

@@ -1,0 +1,18 @@
+"""jnp fallback scan + exact numpy oracle for ``compact_index``."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def prefix_count_jnp(flags):
+    """jnp fallback for the Pallas prefix-count kernel: (N,) int32 0/1
+    flags -> (N,) int32 inclusive running count (``cumsum(flags)``)."""
+    return jnp.cumsum(flags)
+
+
+def compact_index_np(valid) -> np.ndarray:
+    """Exact numpy oracle for ``ops.compact_index`` (the host gather the
+    pre-device ``Table.compact`` performed): validity mask -> ascending
+    int64 indices of the True positions (``np.nonzero``)."""
+    return np.nonzero(np.asarray(valid))[0].astype(np.int64)

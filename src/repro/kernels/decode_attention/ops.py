@@ -6,6 +6,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from ..util import resolve_impl
 from .decode_attention import decode_attention_kernel
 from .ref import decode_attention_ref
 
@@ -17,8 +18,7 @@ def decode_attention(q, k, v, lengths, *, block_k: int = 512,
     ``lengths`` mask the live cache prefix. ``impl``: "kernel" |
     "interpret" (Pallas) | "ref" (jnp) | "auto" (kernel on TPU, ref
     elsewhere); the cache length is padded to ``block_k`` multiples."""
-    if impl == "auto":
-        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    impl = resolve_impl(impl, "ref")
     if impl == "ref":
         return decode_attention_ref(q, k, v, lengths)
     T = k.shape[2]

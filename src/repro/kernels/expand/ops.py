@@ -16,9 +16,11 @@ following the ``hash_dedup``/``segmented_reduce`` contract:
   and costs zero device→host syncs).
 
 Device impls fetch the (seg_ids, positions) pair in ONE device→host
-sync, ticked against ``kernels.sync.HOST_SYNCS``; the host oracle
-records a ``host_fallbacks["expand"]`` serving instead, so tests can
-assert the accelerated path never re-enters ``np.repeat``.
+sync, ticked against ``kernels.sync.HOST_SYNCS`` — or in ZERO syncs
+with ``as_device=True``, which hands the device arrays straight to the
+fused table gather; the host oracle records a
+``host_fallbacks["expand"]`` serving instead, so tests can assert the
+accelerated path never re-enters ``np.repeat``.
 """
 from __future__ import annotations
 
@@ -29,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..sync import HOST_SYNCS
-from ..util import pow2_bucket
+from ..util import pow2_bucket, resolve_impl
 from .expand import running_segment_ids_kernel
 from .ref import expand_segments_np, running_segment_ids_jnp
 
@@ -56,7 +58,8 @@ def _expand_device(starts, offsets, *, total: int, impl: str,
     return seg, within + offsets[seg]
 
 
-def expand_segments(counts, offsets=None, *, impl: str = "auto"
+def expand_segments(counts, offsets=None, *, impl: str = "auto",
+                    as_device: bool = False
                     ) -> tuple[np.ndarray, np.ndarray]:
     """Expand per-segment ``counts`` (N,) into ``(seg_ids, positions)``
     gather indices over T = sum(counts) output rows.
@@ -67,13 +70,19 @@ def expand_segments(counts, offsets=None, *, impl: str = "auto"
     t's rank within its segment (``offsets=None`` = all-zero offsets).
     Empty segments contribute no rows; int64 outputs either way.
 
-    The equi-join probe uses ``offsets = build-segment starts`` and
-    gathers the build order through ``positions``; the cross join uses
-    ``counts = full(n_left, n_right)`` with no offsets, making
-    ``positions`` the tiled right-row enumeration. N and T are bucketed
-    to powers of two before the jit boundary (bounded compiles across
-    varying table sizes); padding segments scatter out of bounds and
-    cannot perturb any real row.
+    The equi-join's string-key fallback uses ``offsets = build-segment
+    starts`` and gathers the build order through ``positions``; the
+    cross join uses ``counts = full(n_left, n_right)`` with no offsets,
+    making ``positions`` the tiled right-row enumeration. N and T are
+    bucketed to powers of two before the jit boundary (bounded compiles
+    across varying table sizes); padding segments scatter out of bounds
+    and cannot perturb any real row.
+
+    ``as_device=True`` (honoured on device impls only — the host oracle
+    still returns numpy) keeps the sliced (seg_ids, positions) pair ON
+    DEVICE as int32 and skips the device→host fetch entirely — ZERO
+    syncs, since T is already host-known from ``counts``. This is the
+    sync-free feed for the device table gather (``Table.take_rows``).
     """
     counts = np.ascontiguousarray(counts, dtype=np.int64)
     n = len(counts)
@@ -84,8 +93,7 @@ def expand_segments(counts, offsets=None, *, impl: str = "auto"
     total = int(counts.sum())
     if n == 0 or total == 0:
         return _EMPTY, _EMPTY.copy()
-    if impl == "auto":
-        impl = "kernel" if jax.default_backend() == "tpu" else "host"
+    impl = resolve_impl(impl, "host")
     t_bucket = pow2_bucket(total)
     if impl == "host" or t_bucket > 2**31 - 1:
         # int32 device indices cannot address >= 2^31 output rows: a
@@ -105,6 +113,9 @@ def expand_segments(counts, offsets=None, *, impl: str = "auto"
     out = _expand_device(jnp.asarray(starts, jnp.int32),
                          jnp.asarray(offs, jnp.int32),
                          total=t_bucket, impl=impl)
+    if as_device:
+        seg, pos = out
+        return seg[:total], pos[:total]
     seg, pos = jax.device_get(out)
     HOST_SYNCS.tick(site="expand")
     return (seg[:total].astype(np.int64), pos[:total].astype(np.int64))

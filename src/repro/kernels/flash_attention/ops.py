@@ -8,6 +8,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from ..util import resolve_impl
 from .flash_attention import flash_attention_kernel
 from .ref import attention_ref
 
@@ -29,8 +30,7 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
     lengths are padded to ``block_q``/``block_k`` multiples and sliced
     back. ``impl``: "kernel" | "interpret" (Pallas) | "ref" (jnp
     oracle) | "auto" (kernel on TPU, ref elsewhere)."""
-    if impl == "auto":
-        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    impl = resolve_impl(impl, "ref")
     if impl == "ref":
         return attention_ref(q, k, v, causal=causal)
     qp, sq = _pad_to(q, 2, block_q)

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..sync import HOST_SYNCS
-from ..util import pow2_bucket
+from ..util import pow2_bucket, resolve_impl
 from .group_build import group_boundaries_kernel
 from .hash_dedup import hash_rows_kernel
 from .ref import (
@@ -48,8 +48,7 @@ def hash_rows(keys, *, block_rows: int = 1024, impl: str = "auto"):
     ``impl``: "kernel" | "interpret" (Pallas) | "ref" (jnp) | "auto"
     (kernel on TPU, jnp elsewhere); N is padded to ``block_rows``
     multiples internally."""
-    if impl == "auto":
-        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    impl = resolve_impl(impl, "ref")
     if impl == "ref":
         return hash_rows_ref(keys)
     n = keys.shape[0]
@@ -203,8 +202,7 @@ def group_build(keys, *, impl: str = "auto") -> GroupBuild:
         empty = np.zeros(0, dtype=np.int64)
         return GroupBuild(0, empty, empty, empty, empty, empty,
                           np.zeros(0, dtype=np.uint32))
-    if impl == "auto":
-        impl = "kernel" if jax.default_backend() == "tpu" else "host"
+    impl = resolve_impl(impl, "host")
     if impl == "host":
         HOST_SYNCS.fallback("group_build")
         return _group_build_host(keys_np)
@@ -328,8 +326,7 @@ def group_build_columns(key_columns, *, impl: str = "auto"
         return (np.zeros((0, c), dtype=np.int32),
                 GroupBuild(0, empty, empty, empty, empty, empty,
                            np.zeros(0, dtype=np.uint32)))
-    if impl == "auto":
-        impl = "kernel" if jax.default_backend() == "tpu" else "host"
+    impl = resolve_impl(impl, "host")
     if impl != "host" and not all(_device_width(k) for k in key_columns):
         impl = "host"
     if impl == "host":

@@ -30,11 +30,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..expand.expand import running_segment_ids_kernel
 from ..expand.ops import expand_segments
+from ..expand.ref import running_segment_ids_jnp
 from ..hash_dedup.ops import group_build
 from ..hash_dedup.ref import column_codes_np
 from ..sync import HOST_SYNCS
-from ..util import pow2_bucket
+from ..util import is_device_array, pow2_bucket, resolve_impl
 from .ref import segment_reduce_jnp
 from .segmented_reduce import OPS, reduce_identity, segment_reduce_kernel
 
@@ -46,8 +48,7 @@ def segment_reduce(values, segment_ids, *, num_segments: int,
                    block_segments: int = 512, impl: str = "auto"):
     """(N,) values + (N,) int32 segment ids -> (num_segments,) reduction.
     Empty segments yield the op's identity."""
-    if impl == "auto":
-        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    impl = resolve_impl(impl, "ref")
     if impl == "ref":
         return segment_reduce_jnp(values, segment_ids, num_segments, op)
     n = values.shape[0]
@@ -75,21 +76,25 @@ def segment_reduce_host(values, segment_ids, num_segments: int,
     slices the real segments back out."""
     if op not in OPS:
         raise ValueError(f"op must be one of {OPS}, got {op!r}")
-    v = np.ascontiguousarray(values)
+    on_device = is_device_array(values)
+    v = values if on_device else np.ascontiguousarray(values)
+    dt = np.dtype(v.dtype)
     seg = np.ascontiguousarray(segment_ids, dtype=np.int32)
     if num_segments == 0:
-        return np.empty(0, dtype=v.dtype)
-    if len(v) == 0:
-        return np.full(num_segments, reduce_identity(op, v.dtype),
-                       dtype=v.dtype)
-    n_bucket = pow2_bucket(len(v), 1024)
+        return np.empty(0, dtype=dt)
+    n = int(v.shape[0])
+    if n == 0:
+        return np.full(num_segments, reduce_identity(op, dt), dtype=dt)
+    n_bucket = pow2_bucket(n, 1024)
     g_bucket = pow2_bucket(num_segments, 512)
-    if n_bucket != len(v):
-        ident = reduce_identity(op, v.dtype)
-        v = np.concatenate([v, np.full(n_bucket - len(v), ident,
-                                       dtype=v.dtype)])
-        seg = np.concatenate([seg, np.zeros(n_bucket - len(seg),
-                                            dtype=np.int32)])
+    if n_bucket != n:
+        ident = reduce_identity(op, dt)
+        if on_device:
+            v = jnp.concatenate(
+                [v, jnp.full((n_bucket - n,), ident, dtype=v.dtype)])
+        else:
+            v = np.concatenate([v, np.full(n_bucket - n, ident, dtype=dt)])
+        seg = np.concatenate([seg, np.zeros(n_bucket - n, dtype=np.int32)])
     out = segment_reduce(jnp.asarray(v), jnp.asarray(seg),
                          num_segments=g_bucket, op=op, impl=impl)
     out = np.asarray(out)[:num_segments]
@@ -103,8 +108,7 @@ def segment_count(segment_ids, num_segments: int, *,
     ``impl`` is "host" (``np.bincount``) or any ``segment_reduce`` token
     ("ref"/"kernel"/"interpret"); "auto" picks host off-TPU, the kernel
     on TPU."""
-    if impl == "auto":
-        impl = "kernel" if jax.default_backend() == "tpu" else "host"
+    impl = resolve_impl(impl, "host")
     if impl == "host":
         return np.bincount(np.asarray(segment_ids),
                            minlength=num_segments).astype(np.int64)
@@ -179,13 +183,22 @@ def segmented_aggregate(plan: SegmentPlan, values, func: str, *,
     accumulate in float64; min/max preserve the column dtype (strings
     included) and propagate NaN like ``np.min``/``np.max``. min/max over
     int32/float32 columns run through the device ``segment_reduce``
-    (unless ``impl="host"`` forces the numpy reduction); everything
-    needing 64-bit accumulation (or a non-device dtype) stays
-    host-side. Every group must be non-empty (true by construction when
-    groups come from observed key rows).
+    (unless ``impl="host"`` forces the numpy reduction) — a device
+    ``values`` column stays on device for them, no host round-trip;
+    everything needing 64-bit accumulation (or a non-device dtype)
+    fetches the column host-side (ticked under ``"agg_values"`` when it
+    started on device). Every group must be non-empty (true by
+    construction when groups come from observed key rows).
     """
     if func == "count":
         return plan.counts
+    if func in ("min", "max") and impl != "host" \
+            and np.dtype(values.dtype) in _DEVICE_DTYPES \
+            and plan.num_groups > 0:
+        return segment_reduce_host(values, plan.seg, plan.num_groups, func,
+                                   impl=impl)
+    if is_device_array(values):
+        HOST_SYNCS.tick(site="agg_values")
     v = np.asarray(values)
     if plan.num_groups == 0:
         if func in ("min", "max"):
@@ -194,9 +207,6 @@ def segmented_aggregate(plan: SegmentPlan, values, func: str, *,
             return np.zeros(0, dtype=np.int64)
         return np.zeros(0, dtype=np.float64)
     if func in ("min", "max"):
-        if v.dtype in _DEVICE_DTYPES and impl != "host":
-            return segment_reduce_host(v, plan.seg, plan.num_groups, func,
-                                       impl=impl)
         if v.dtype.kind in "biufc":
             ufunc = np.minimum if func == "min" else np.maximum
             return ufunc.reduceat(v[plan.order], plan.starts)
@@ -239,24 +249,46 @@ def join_match_lists(probe_keys, build_keys, *, impl: str = "auto"
     path: ``group_build`` groups the build side by raw key value (exact,
     representatives ascending), and probing is a searchsorted over the G
     representative keys plus a histogram/offset lookup per probe row —
-    no host-side key re-encode and no build-side argsort. Arbitrary
-    dtypes (strings, floats where NaN must match NaN like searchsorted)
-    fall back to the shared host code space. Output ordering is
-    identical to the reference either way: probe-major, and within one
-    probe row the build matches appear in stable build-key sort order.
+    on accelerated impls the lookup AND the match expansion run inside
+    the device jit (``_join_match_device``), returning device index
+    arrays with no N_probe-sized host op; ``impl="host"`` keeps the
+    exact host searchsorted oracle. Arbitrary dtypes (strings, floats
+    where NaN must match NaN like searchsorted) fall back to the shared
+    host code space. Output ordering is identical to the reference
+    either way: probe-major, and within one probe row the build matches
+    appear in stable build-key sort order.
+
+    ``probe_keys``/``build_keys`` may be device (jnp) or host (numpy /
+    lazy) columns; device probe keys stay on device on the device path.
     """
-    n_probe, n_build = len(probe_keys), len(build_keys)
-    empty = np.zeros(0, dtype=np.int64)
+    n_probe, n_build = int(np.shape(probe_keys)[0]), \
+        int(np.shape(build_keys)[0])
     if n_probe == 0 or n_build == 0:
+        if resolve_impl(impl, "host") != "host":
+            # device empties: the joined-gather must stay on its device
+            # path — numpy empties here would send it down the host
+            # branch and densify every device column of the non-empty
+            # side just to gather zero rows
+            dev_empty = jnp.zeros(0, dtype=jnp.int32)
+            return dev_empty, dev_empty
+        empty = np.zeros(0, dtype=np.int64)
         return empty, empty
-    pk = np.asarray(probe_keys)
-    bk = np.asarray(build_keys)
-    if pk.dtype == bk.dtype and pk.dtype.kind in "iub" \
-            and pk.dtype.itemsize <= 4:
+    pk, bk = probe_keys, build_keys
+    pk_dt, bk_dt = np.dtype(pk.dtype), np.dtype(bk.dtype)
+    if pk_dt == bk_dt and pk_dt.kind in "iub" and pk_dt.itemsize <= 4:
         # same-dtype cast to int32 is value-consistent across both sides
-        return _join_match_device(pk.astype(np.int32),
-                                  bk.astype(np.int32), impl=impl)
-    probe_codes, build_codes, num_codes = encode_join_keys(pk, bk)
+        def cast(a):
+            if isinstance(a, jnp.ndarray):
+                return a.astype(jnp.int32)
+            return np.asarray(a).astype(np.int32)
+        return _join_match_device(cast(pk), cast(bk), impl=impl)
+    # host code-space fallback: fetching a device key column (float32
+    # keys — NaN must match NaN like searchsorted) is a real sync
+    for a in (pk, bk):
+        if is_device_array(a):
+            HOST_SYNCS.tick(site="join_keys")
+    probe_codes, build_codes, num_codes = encode_join_keys(
+        np.asarray(pk), np.asarray(bk))
     counts_by_code = segment_count(build_codes, num_codes, impl=impl)
     build_order = np.argsort(build_codes, kind="stable")
     offsets = np.zeros(num_codes, dtype=np.int64)
@@ -265,17 +297,110 @@ def join_match_lists(probe_keys, build_keys, *, impl: str = "auto"
     return _expand_matches(cnt, build_order, offsets[probe_codes], impl=impl)
 
 
-def _join_match_device(pk: np.ndarray, bk: np.ndarray, *, impl: str = "auto"
+@jax.jit
+def _probe_lookup_device(rep_keys, counts, starts, pk, n_valid):
+    """searchsorted over the ascending representative keys, fused with
+    the per-probe count/offset lookup: (cnt, offs) per probe row plus
+    the total match count (int32 — exact below 2^31 — and a float32
+    magnitude estimate guarding the int32 range). Both sides arrive
+    pow2-padded: pad representatives carry ``INT32_MAX`` keys with zero
+    counts (a pad "match" yields no rows; a real ``INT32_MAX`` key
+    still finds its real rep first under searchsorted-left), and probe
+    rows ``>= n_valid`` are masked out of ``matched``."""
+    g = rep_keys.shape[0]
+    pos = jnp.searchsorted(rep_keys, pk)
+    pos_c = jnp.minimum(pos, g - 1)
+    iota = jnp.arange(pk.shape[0], dtype=jnp.int32)
+    matched = (rep_keys[pos_c] == pk) & (iota < n_valid)
+    cnt = jnp.where(matched, counts[pos_c], 0)
+    offs = jnp.where(matched, starts[pos_c], 0)
+    return cnt, offs, jnp.sum(cnt), jnp.sum(cnt.astype(jnp.float32))
+
+
+@partial(jax.jit, static_argnames=("total", "impl", "block_rows"))
+def _probe_expand_device(cnt, offs, order, *, total: int, impl: str,
+                         block_rows: int = 1024):
+    """Match expansion over a padded (T,) output domain, entirely on
+    device: scatter +1 marks at each probe's output start, running-sum
+    scan (the ``kernels/expand`` machinery) for probe ids, gathers for
+    the build rows. Positions ``t >= <real total>`` hold garbage — the
+    host wrapper slices them off before anything reads them."""
+    out_starts = jnp.cumsum(cnt) - cnt
+    marks = jnp.zeros(total, jnp.int32).at[out_starts].add(1, mode="drop")
+    if impl == "ref":
+        seg = running_segment_ids_jnp(marks)
+    else:
+        seg = running_segment_ids_kernel(
+            marks, block_rows=block_rows, interpret=(impl == "interpret"))
+    iota = jnp.arange(total, dtype=jnp.int32)
+    within = iota - out_starts[seg]
+    return seg, order[within + offs[seg]]
+
+
+def _join_match_device(pk, bk, *, impl: str = "auto"
                        ) -> tuple[np.ndarray, np.ndarray]:
-    """Device build table: ``group_build`` on the raw key column (C == 1
-    sorts by value, so grouping is exact and representatives come back
-    ascending by key), then a representative searchsorted per probe row
-    consumes the kernel's counts/starts/order directly."""
-    gb = group_build(bk[:, None], impl=impl)
-    rep_keys = bk[gb.reps]  # ascending by construction
-    pos = np.searchsorted(rep_keys, pk)
+    """Device build table + device probe.
+
+    ``group_build`` on the raw key column (C == 1 sorts by value, so
+    grouping is exact and representatives come back ascending by key);
+    on accelerated impls the representative searchsorted, the
+    count/offset lookup and the match expansion all run on device
+    (``_probe_lookup_device`` + ``_probe_expand_device``) — ONE scalar
+    device→host sync for the output total (site ``"join_probe"``),
+    device int32 index arrays out. ``impl="host"`` keeps the exact host
+    searchsorted + ``np.repeat`` oracle, recorded as a
+    ``host_fallbacks["join_probe"]`` serving."""
+    impl = resolve_impl(impl, "host")
+    if is_device_array(bk):
+        HOST_SYNCS.tick(site="join_build_keys")
+    bk_np = np.ascontiguousarray(np.asarray(bk), dtype=np.int32)
+    gb = group_build(bk_np[:, None], impl=impl)
+    rep_keys = bk_np[gb.reps]  # ascending by construction
+    if impl != "host":
+        # pow2-bucket every data-dependent dim BEFORE the jits (bounded
+        # compiles): G-sized host arrays pad cheaply in numpy (pad reps
+        # carry INT32_MAX keys + zero counts), the probe column pads on
+        # device (rows >= n_probe are masked out of the lookup)
+        n_probe = int(np.shape(pk)[0])
+        g = gb.num_groups
+        g_bucket = pow2_bucket(g, 512)
+        rep_keys_p = np.pad(rep_keys, (0, g_bucket - g),
+                            constant_values=np.int32(2**31 - 1))
+        counts_p = np.pad(gb.counts.astype(np.int32), (0, g_bucket - g))
+        starts_p = np.pad(gb.starts.astype(np.int32), (0, g_bucket - g))
+        p_bucket = pow2_bucket(n_probe)
+        pk_dev = pk if is_device_array(pk) else jnp.asarray(pk)
+        if p_bucket != n_probe:
+            pk_dev = jnp.pad(pk_dev, (0, p_bucket - n_probe))
+        cnt, offs, total, total_f = _probe_lookup_device(
+            jnp.asarray(rep_keys_p), jnp.asarray(counts_p),
+            jnp.asarray(starts_p), pk_dev, n_probe)
+        total, total_f = jax.device_get((total, total_f))
+        HOST_SYNCS.tick(site="join_probe")
+        total = int(total)
+        if float(total_f) <= 2**30:
+            if total == 0:
+                # device empties: the joined-gather must stay on its
+                # device path (no host densification of device columns)
+                empty = jnp.zeros(0, dtype=jnp.int32)
+                return empty, empty
+            n_build = len(bk_np)
+            b_bucket = pow2_bucket(n_build)
+            order_p = np.pad(gb.order.astype(np.int32),
+                             (0, b_bucket - n_build))
+            t_bucket = pow2_bucket(total)
+            seg, out_b = _probe_expand_device(
+                cnt, offs, jnp.asarray(order_p),
+                total=t_bucket, impl=impl)
+            return seg[:total], out_b[:total]
+        # >= 2^30 output rows: int32 device indices (and the int32
+        # match total itself) cannot address the expansion — keep the
+        # exact int64 host oracle for this pathological skew join
+    HOST_SYNCS.fallback("join_probe")
+    pk_np = np.asarray(pk)
+    pos = np.searchsorted(rep_keys, pk_np)
     pos_c = np.minimum(pos, gb.num_groups - 1)
-    matched = rep_keys[pos_c] == pk
+    matched = rep_keys[pos_c] == pk_np
     gid = np.where(matched, pos_c, 0)
     cnt = np.where(matched, gb.counts[gid], 0)
     return _expand_matches(cnt, gb.order, gb.starts[gid], impl=impl)

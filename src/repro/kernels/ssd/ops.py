@@ -6,6 +6,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from ..util import resolve_impl
 from .ssd import ssd_chunk_kernel
 
 
@@ -13,8 +14,7 @@ from .ssd import ssd_chunk_kernel
 def ssd(x, dt, A, B, C, chunk: int = 128, impl: str = "auto"):
     """Full SSD forward. Returns (y, final_state); see layers.ssd_chunked
     for the pure-jnp equivalent used as the model fallback."""
-    if impl == "auto":
-        impl = "kernel" if jax.default_backend() == "tpu" else "jnp"
+    impl = resolve_impl(impl, "jnp")
     if impl == "jnp":
         from ...models.layers import ssd_chunked
 

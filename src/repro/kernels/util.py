@@ -1,6 +1,10 @@
 """Shared helpers for the host-facing kernel wrappers."""
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
+import numpy as np
+
 
 def pow2_bucket(n: int, floor: int = 1024) -> int:
     """Next power of two >= max(n, 1), floored at ``floor`` — the
@@ -8,3 +12,21 @@ def pow2_bucket(n: int, floor: int = 1024) -> int:
     before its jit boundary so varying table sizes reuse a bounded set
     of compiles."""
     return max(floor, 1 << (max(n, 1) - 1).bit_length())
+
+
+def is_device_array(a) -> bool:
+    """True for device-resident (jax) arrays; numpy arrays and
+    host-side column wrappers are not."""
+    return isinstance(a, jnp.ndarray) and not isinstance(a, np.ndarray)
+
+
+def resolve_impl(impl: str, fallback: str) -> str:
+    """Resolve ``impl="auto"`` to the shared routing policy: the Pallas
+    kernel on TPU, the given ``fallback`` elsewhere — ``"host"`` for
+    host-facing wrappers whose numpy oracle beats XLA off-TPU
+    (``group_build``, ``expand_segments``, ``compact_index``, the join
+    probe, table compaction), ``"ref"`` for jit-resident ops. Non-auto
+    tokens pass through unchanged."""
+    if impl != "auto":
+        return impl
+    return "kernel" if jax.default_backend() == "tpu" else fallback

@@ -25,7 +25,11 @@ from ..models import (  # noqa: E402
 )
 from ..models.params import count_params  # noqa: E402
 from ..sharding.policy import ShardingPolicy  # noqa: E402
-from ..training.optimizer import AdamWConfig, abstract_state, state_specs  # noqa: E402
+from ..training.optimizer import (  # noqa: E402
+    AdamWConfig,
+    abstract_state,
+    state_specs,
+)
 from ..training.train_step import build_train_step  # noqa: E402
 from .mesh import make_production_mesh  # noqa: E402
 from .specs import (  # noqa: E402
@@ -37,8 +41,10 @@ from .specs import (  # noqa: E402
 )
 
 _COLL_RE = re.compile(
-    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\b")
-_SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|s8|u8|s32|u32|s64|pred)\[([0-9,]*)\]")
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all"
+    r"|collective-permute)\b")
+_SHAPE_RE = re.compile(
+    r"(bf16|f16|f32|f64|s8|u8|s32|u32|s64|pred)\[([0-9,]*)\]")
 _BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s8": 1, "u8": 1,
           "s32": 4, "u32": 4, "s64": 8, "pred": 1}
 
@@ -162,7 +168,7 @@ def _probe_costs(cfg, shape, prof, mesh, policy, arch, shape_name):
     from ..models import lm as lm_mod
 
     lm_mod.UNROLL_SCANS = True
-    layers_mod.FORCE_LOCAL_MOE = True  # global-shape MoE for whole-cluster FLOPs
+    layers_mod.FORCE_LOCAL_MOE = True  # global-shape MoE (cluster FLOPs)
     try:
         lowered = _lower_cell(cfg, shape, prof, mesh, policy, arch,
                               shape_name, microbatches=1)

@@ -59,14 +59,16 @@ def run(out_dir: str, meshes: list[str], only_arch: str | None = None,
               flush=True)
         if not ok:
             tail = (getattr(r, "stderr", "") or "")[-4000:]
-            cell_path(out, arch, shape, mesh).with_suffix(".FAILED").write_text(
+            cell_path(out, arch, shape,
+                      mesh).with_suffix(".FAILED").write_text(
                 tail)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="artifacts/dryrun")
-    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
     ap.add_argument("--arch", default=None)
     ap.add_argument("--timeout", type=int, default=2400)
     args = ap.parse_args()

@@ -81,14 +81,16 @@ def main(argv=None):
         params, opt_state, metrics = step_fn(params, opt_state, batch)
         if (step + 1) % args.log_every == 0 or step == start_step:
             dt = time.perf_counter() - t0
-            print(f"[train] step {step+1:5d} loss={float(metrics['loss']):.4f} "
+            print(f"[train] step {step+1:5d} "
+                  f"loss={float(metrics['loss']):.4f} "
                   f"gnorm={float(metrics['grad_norm']):.3f} "
                   f"({dt/(step-start_step+1):.3f}s/step)", flush=True)
         if mgr is not None and (step + 1) % args.ckpt_every == 0:
             mgr.save_async(step + 1,
                            {"params": params, "opt": opt_state},
                            extra={"arch": cfg.name})
-        if args.simulate_failure is not None and step + 1 == args.simulate_failure:
+        if args.simulate_failure is not None \
+                and step + 1 == args.simulate_failure:
             print(f"[train] SIMULATED FAILURE at step {step+1}", flush=True)
             if mgr is not None:
                 mgr.wait()

@@ -174,8 +174,9 @@ class ModelConfig:
         n += L * per_layer
         if self.encoder_layers:
             # encoder blocks (self-attn + mlp) + decoder cross-attn
-            enc = self.encoder_layers * (2 * D + 4 * D * self.num_heads * hd
-                                         + (3 if self.gated_mlp else 2) * D * F)
+            enc = self.encoder_layers * (
+                2 * D + 4 * D * self.num_heads * hd
+                + (3 if self.gated_mlp else 2) * D * F)
             cross = L * (D + 4 * D * self.num_heads * hd)
             n += enc + cross
         if self.mtp_depth:
@@ -190,4 +191,5 @@ class ModelConfig:
         fe = self.moe_d_ff or self.d_ff
         m = 3 if self.gated_mlp else 2
         inactive = (self.num_experts - self.experts_per_tok)
-        return self.param_count() - self.num_layers * inactive * m * self.d_model * fe
+        return self.param_count() \
+            - self.num_layers * inactive * m * self.d_model * fe

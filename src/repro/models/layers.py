@@ -489,7 +489,8 @@ def moe_reference(cfg: ModelConfig, p, x):
     if "shared" in p:
         h = jnp.einsum("bsd,df->bsf", x, p["shared"]["w_in"])
         if cfg.gated_mlp:
-            h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["shared"]["w_gate"])) * h
+            h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x,
+                                       p["shared"]["w_gate"])) * h
         else:
             h = jax.nn.gelu(h)
         y = y + jnp.einsum("bsf,fd->bsd", h, p["shared"]["w_out"])

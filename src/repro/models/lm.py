@@ -375,7 +375,8 @@ def prefill(cfg: ModelConfig, policy: ShardingPolicy, params, batch,
     elif cfg.family != "ssm":
         if cfg.use_mla:
             cache["ckv"] = cache["ckv"].at[:, :, :S].set(kv_layers["ckv"])
-            cache["krope"] = cache["krope"].at[:, :, :S].set(kv_layers["krope"])
+            cache["krope"] = cache["krope"].at[:, :, :S].set(
+                kv_layers["krope"])
         else:
             cache["k"] = cache["k"].at[:, :, :S].set(kv_layers["k"])
             cache["v"] = cache["v"].at[:, :, :S].set(kv_layers["v"])

@@ -30,15 +30,21 @@ def _attn_tree(cfg: ModelConfig, L, p, prefix: str):
     D = cfg.d_model
     H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     t = {
-        "wq": p(f"{prefix}/wq", (*L, D, H, hd), ("layers", "embed", "heads", None), D),
-        "wk": p(f"{prefix}/wk", (*L, D, K, hd), ("layers", "embed", "kv_heads", None), D),
-        "wv": p(f"{prefix}/wv", (*L, D, K, hd), ("layers", "embed", "kv_heads", None), D),
-        "wo": p(f"{prefix}/wo", (*L, H, hd, D), ("layers", "heads", None, "embed"), H * hd),
+        "wq": p(f"{prefix}/wq", (*L, D, H, hd),
+                ("layers", "embed", "heads", None), D),
+        "wk": p(f"{prefix}/wk", (*L, D, K, hd),
+                ("layers", "embed", "kv_heads", None), D),
+        "wv": p(f"{prefix}/wv", (*L, D, K, hd),
+                ("layers", "embed", "kv_heads", None), D),
+        "wo": p(f"{prefix}/wo", (*L, H, hd, D),
+                ("layers", "heads", None, "embed"), H * hd),
     }
     if cfg.qkv_bias:
         t["bq"] = p(f"{prefix}/bq", (*L, H, hd), ("layers", "heads", None), 0)
-        t["bk"] = p(f"{prefix}/bk", (*L, K, hd), ("layers", "kv_heads", None), 0)
-        t["bv"] = p(f"{prefix}/bv", (*L, K, hd), ("layers", "kv_heads", None), 0)
+        t["bk"] = p(f"{prefix}/bk", (*L, K, hd),
+                    ("layers", "kv_heads", None), 0)
+        t["bv"] = p(f"{prefix}/bv", (*L, K, hd),
+                    ("layers", "kv_heads", None), 0)
     return t
 
 
@@ -52,11 +58,15 @@ def _mla_tree(cfg: ModelConfig, L, p):
         "q_ln": p("mla/q_ln", (*L, qlr), ("layers", None), -1),
         "wuq": p("mla/wuq", (*L, qlr, H, qk_n + qk_r),
                  ("layers", None, "heads", None), qlr),
-        "wdkv": p("mla/wdkv", (*L, D, kvlr + qk_r), ("layers", "embed", None), D),
+        "wdkv": p("mla/wdkv", (*L, D, kvlr + qk_r),
+                  ("layers", "embed", None), D),
         "kv_ln": p("mla/kv_ln", (*L, kvlr), ("layers", None), -1),
-        "wuk": p("mla/wuk", (*L, kvlr, H, qk_n), ("layers", None, "heads", None), kvlr),
-        "wuv": p("mla/wuv", (*L, kvlr, H, vh), ("layers", None, "heads", None), kvlr),
-        "wo": p("mla/wo", (*L, H, vh, D), ("layers", "heads", None, "embed"), H * vh),
+        "wuk": p("mla/wuk", (*L, kvlr, H, qk_n),
+                 ("layers", None, "heads", None), kvlr),
+        "wuv": p("mla/wuv", (*L, kvlr, H, vh),
+                 ("layers", None, "heads", None), kvlr),
+        "wo": p("mla/wo", (*L, H, vh, D),
+               ("layers", "heads", None, "embed"), H * vh),
     }
 
 
@@ -65,7 +75,8 @@ def _mlp_tree(cfg: ModelConfig, L, p, d_ff=None, prefix="mlp"):
     F = d_ff or cfg.d_ff
     t = {
         "w_in": p(f"{prefix}/w_in", (*L, D, F), ("layers", "embed", "mlp"), D),
-        "w_out": p(f"{prefix}/w_out", (*L, F, D), ("layers", "mlp", "embed"), F),
+        "w_out": p(f"{prefix}/w_out", (*L, F, D),
+                   ("layers", "mlp", "embed"), F),
     }
     if cfg.gated_mlp:
         t["w_gate"] = p(f"{prefix}/w_gate", (*L, D, F),
@@ -78,8 +89,10 @@ def _moe_tree(cfg: ModelConfig, L, p):
     Fe = cfg.moe_d_ff or cfg.d_ff
     t = {
         "router": p("moe/router", (*L, D, E), ("layers", "embed", None), D),
-        "w_in": p("moe/w_in", (*L, E, D, Fe), ("layers", "expert", "embed", None), D),
-        "w_out": p("moe/w_out", (*L, E, Fe, D), ("layers", "expert", None, "embed"), Fe),
+        "w_in": p("moe/w_in", (*L, E, D, Fe),
+                  ("layers", "expert", "embed", None), D),
+        "w_out": p("moe/w_out", (*L, E, Fe, D),
+                   ("layers", "expert", None, "embed"), Fe),
     }
     if cfg.gated_mlp:
         t["w_gate"] = p("moe/w_gate", (*L, E, D, Fe),
@@ -104,7 +117,8 @@ def _ssm_tree(cfg: ModelConfig, L, p):
         # in_proj emits [z, x, B, C, dt]
         "w_in": p("ssm/w_in", (*L, D, 2 * di + 2 * ns + nh),
                   ("layers", "embed", None), D),
-        "conv_w": p("ssm/conv_w", (*L, cw, conv_dim), ("layers", None, None), cw),
+        "conv_w": p("ssm/conv_w", (*L, cw, conv_dim),
+                    ("layers", None, None), cw),
         "conv_b": p("ssm/conv_b", (*L, conv_dim), ("layers", None), 0),
         "A_log": p("ssm/A_log", (*L, nh), ("layers", None), -2),
         "D": p("ssm/D", (*L, nh), ("layers", None), -1),
@@ -125,7 +139,8 @@ def _block_tree(cfg: ModelConfig, p, layers: int, cross_attn: bool = False):
     elif cfg.family == "hybrid":
         t["attn"] = _attn_tree(cfg, L, p, "attn")
         t["ssm"] = _ssm_tree(cfg, L, p)
-        t["attn_norm"] = p("attn_norm", (*L, cfg.d_model), ("layers", None), -1)
+        t["attn_norm"] = p("attn_norm", (*L, cfg.d_model),
+                           ("layers", None), -1)
         t["ssm_norm"] = p("ssm_norm", (*L, cfg.d_model), ("layers", None), -1)
     elif cfg.use_mla:
         t["mla"] = _mla_tree(cfg, L, p)
@@ -157,7 +172,8 @@ def build_params(cfg: ModelConfig, creator: Creator) -> dict:
         tree["encoder"] = {
             "blocks": _block_tree(enc_cfg, p, cfg.encoder_layers),
             "final_ln": p("enc_final_ln", (D,), (None,), -1),
-            "pos_embed": p("enc_pos", (cfg.encoder_seq, D), (None, "embed"), D),
+            "pos_embed": p("enc_pos", (cfg.encoder_seq, D),
+                           (None, "embed"), D),
         }
         # decoder blocks get cross-attention
         tree["blocks"] = _block_tree(cfg, p, cfg.num_layers, cross_attn=True)

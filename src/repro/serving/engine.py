@@ -69,7 +69,8 @@ class ServingEngine:
         return self.batch_size * 8
 
     # ------------------------------------------------------------------
-    def _encode_batch(self, prompts: Sequence[str]) -> tuple[np.ndarray, np.ndarray]:
+    def _encode_batch(self, prompts: Sequence[str]
+                      ) -> tuple[np.ndarray, np.ndarray]:
         toks = np.zeros((self.batch_size, self.max_seq), dtype=np.int32)
         lens = np.zeros(self.batch_size, dtype=np.int32)
         for i, p in enumerate(prompts):

@@ -1,0 +1,266 @@
+"""Device stream-compaction family (``kernels/compact``) and the
+device-resident ``Table`` pipeline built on it: oracle equivalence
+across host / jnp / Pallas-interpret implementations, compaction edges
+(empty table, all-rows-invalid, compact-of-compact idempotence),
+string/64-bit host-column preservation through ``LazyColumn``, and the
+host-sync / host-fallback accounting the acceptance gate asserts on."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.engine.table import Database, HostIndex, LazyColumn, Table
+from repro.kernels.compact.ops import compact_index, device_gather
+from repro.kernels.compact.ref import compact_index_np
+from repro.kernels.sync import HOST_SYNCS
+
+IMPLS = ("host", "ref", "interpret")
+
+
+def _assert_matches_oracle(mask, impl):
+    m = jnp.asarray(np.asarray(mask, dtype=bool))
+    idx, count = compact_index(m, impl=impl)
+    expected = compact_index_np(np.asarray(mask, dtype=bool))
+    np.testing.assert_array_equal(np.asarray(idx), expected)
+    assert count == len(expected)
+    return idx, count
+
+
+class TestCompactIndexOracle:
+    @pytest.mark.parametrize("impl", IMPLS)
+    @pytest.mark.parametrize("n,p", [(1, 0.5), (7, 0.3), (100, 0.9),
+                                     (1024, 0.5), (3000, 0.05)])
+    def test_random_masks_match_oracle(self, n, p, impl):
+        rng = np.random.default_rng(n)
+        _assert_matches_oracle(rng.random(n) < p, impl)
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_all_true_is_identity(self, impl):
+        idx, count = _assert_matches_oracle(np.ones(130, dtype=bool), impl)
+        assert count == 130
+        np.testing.assert_array_equal(np.asarray(idx), np.arange(130))
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_all_false_is_empty(self, impl):
+        idx, count = _assert_matches_oracle(np.zeros(50, dtype=bool), impl)
+        assert count == 0 and np.asarray(idx).shape == (0,)
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_single_survivor(self, impl):
+        mask = np.zeros(257, dtype=bool)
+        mask[200] = True
+        idx, count = _assert_matches_oracle(mask, impl)
+        assert count == 1 and int(np.asarray(idx)[0]) == 200
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_alternating_mask(self, impl):
+        _assert_matches_oracle(np.arange(1027) % 2 == 0, impl)
+
+    def test_empty_mask(self):
+        for impl in IMPLS:
+            idx, count = compact_index(jnp.zeros(0, dtype=bool), impl=impl)
+            assert count == 0 and np.asarray(idx).shape == (0,)
+
+    @pytest.mark.parametrize("impl", ("ref", "interpret"))
+    def test_known_count_skips_the_fetch(self, impl):
+        # the table layer's cached num_valid makes compaction sync-free
+        mask = jnp.asarray([True, False, True, True])
+        HOST_SYNCS.reset()
+        idx, count = compact_index(mask, count=3, impl=impl)
+        assert HOST_SYNCS.syncs == 0
+        assert HOST_SYNCS.host_fallbacks == {}
+        assert count == 3
+        np.testing.assert_array_equal(np.asarray(idx), [0, 2, 3])
+
+
+class TestCompactSyncAccounting:
+    def test_device_impl_one_sync_no_fallback(self):
+        HOST_SYNCS.reset()
+        compact_index(jnp.asarray([True, False, True]), impl="ref")
+        assert HOST_SYNCS.syncs == 1
+        assert HOST_SYNCS.by_site == {"compact": 1}
+        assert HOST_SYNCS.host_fallbacks == {}
+
+    def test_host_impl_zero_syncs_one_fallback(self):
+        HOST_SYNCS.reset()
+        idx, count = compact_index(np.asarray([True, False, True]),
+                                   impl="host")
+        assert HOST_SYNCS.syncs == 0
+        assert HOST_SYNCS.host_fallbacks == {"compact": 1}
+        assert isinstance(idx, np.ndarray) and count == 2
+
+
+class TestDeviceGather:
+    def test_fused_gather_preserves_dtypes_and_stays_on_device(self):
+        cols = [jnp.asarray([1, 2, 3, 4], dtype=jnp.int32),
+                jnp.asarray([1.5, 2.5, 3.5, 4.5], dtype=jnp.float32),
+                jnp.asarray([True, False, True, False])]
+        out = device_gather(cols, np.asarray([3, 1]))
+        assert [o.dtype for o in out] == [jnp.int32, jnp.float32, jnp.bool_]
+        assert all(isinstance(o, jnp.ndarray) for o in out)
+        np.testing.assert_array_equal(np.asarray(out[0]), [4, 2])
+        np.testing.assert_allclose(np.asarray(out[1]), [4.5, 2.5])
+
+    def test_empty_column_list(self):
+        assert device_gather([], np.asarray([0])) == []
+
+
+def _mixed_table(n=8):
+    valid = np.arange(n) % 3 != 1
+    return Table(
+        columns={
+            "t.i": jnp.arange(n, dtype=jnp.int32),
+            "t.f": jnp.arange(n, dtype=jnp.float32) / 2,
+            "t.b": jnp.asarray(np.arange(n) % 2 == 0),
+            "t.s": np.asarray([f"row{i}" for i in range(n)]),
+            "t.big": np.arange(n, dtype=np.int64) * 2**40,
+        },
+        valid=jnp.asarray(valid),
+    ), valid
+
+
+class TestTableCompact:
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_matches_host_compaction(self, impl):
+        t, valid = _mixed_table()
+        c = t.compact(impl)
+        keep = np.nonzero(valid)[0]
+        assert c.capacity == len(keep) and c.num_valid == len(keep)
+        np.testing.assert_array_equal(np.asarray(c.col("t.i")), keep)
+        np.testing.assert_array_equal(np.asarray(c.col("t.s")),
+                                      np.asarray([f"row{i}" for i in keep]))
+        np.testing.assert_array_equal(np.asarray(c.col("t.big")),
+                                      keep.astype(np.int64) * 2**40)
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_empty_table(self, impl):
+        t = Table(columns={"t.x": jnp.zeros(0, jnp.int32),
+                           "t.s": np.zeros(0, dtype="<U4")},
+                  valid=jnp.zeros(0, dtype=bool))
+        c = t.compact(impl)
+        assert c.capacity == 0 and c.num_valid == 0
+        assert np.asarray(c.col("t.s")).shape == (0,)
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_all_rows_invalid(self, impl):
+        t, _ = _mixed_table()
+        dead = t.with_mask(jnp.zeros(t.capacity, dtype=bool))
+        c = dead.compact(impl)
+        assert c.capacity == 0 and c.num_valid == 0
+        assert np.asarray(c.col("t.i")).shape == (0,)
+        assert np.asarray(c.col("t.s")).shape == (0,)
+        # dtypes survive the empty gather
+        assert np.asarray(c.col("t.big")).dtype == np.int64
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_compact_of_compact_is_identity(self, impl):
+        t, _ = _mixed_table()
+        c = t.compact(impl)
+        assert c.compact(impl) is c
+        # and a fully-valid table never rebuilds either
+        full = Table(columns={"t.x": jnp.arange(4, dtype=jnp.int32)},
+                     valid=jnp.ones(4, dtype=bool))
+        assert full.compact(impl).compact(impl) is full.compact(impl)
+
+    @pytest.mark.parametrize("impl", ("ref", "interpret"))
+    def test_device_columns_stay_on_device(self, impl):
+        t, _ = _mixed_table()
+        c = t.compact(impl)
+        for name in ("t.i", "t.f", "t.b"):
+            assert isinstance(c.columns[name], jnp.ndarray), name
+
+    @pytest.mark.parametrize("impl", ("ref", "interpret"))
+    def test_host_columns_densify_lazily(self, impl):
+        t, valid = _mixed_table()
+        c = t.compact(impl)
+        lazy_s, lazy_big = c.columns["t.s"], c.columns["t.big"]
+        assert isinstance(lazy_s, LazyColumn)
+        assert isinstance(lazy_big, LazyColumn)
+        # dtype/shape/len are visible without materialising
+        assert lazy_s.dtype.kind == "U" and lazy_big.dtype == np.int64
+        assert len(lazy_s) == int(valid.sum())
+        HOST_SYNCS.reset()
+        keep = np.nonzero(valid)[0]
+        np.testing.assert_array_equal(
+            np.asarray(lazy_big), keep.astype(np.int64) * 2**40)
+        np.testing.assert_array_equal(
+            np.asarray(lazy_s), np.asarray([f"row{i}" for i in keep]))
+        # both columns share ONE host fetch of the gather index
+        assert HOST_SYNCS.by_site.get("compact_host_cols", 0) == 1
+
+    @pytest.mark.parametrize("impl", ("ref", "interpret"))
+    def test_cached_count_makes_device_compaction_sync_free(self, impl):
+        t, _ = _mixed_table()
+        t.num_valid  # prime the cache (one sync, outside the window)
+        HOST_SYNCS.reset()
+        c = t.compact(impl)
+        assert HOST_SYNCS.syncs == 0, HOST_SYNCS.snapshot()
+        assert HOST_SYNCS.host_fallbacks == {}
+        assert c.num_valid == t.num_valid  # output count is pre-cached too
+
+    def test_host_impl_records_nonzero_fallback(self):
+        t, _ = _mixed_table()
+        HOST_SYNCS.reset()
+        c = t.compact("host")
+        assert HOST_SYNCS.host_fallbacks == {"compact": 1}
+        assert isinstance(c.columns["t.s"], np.ndarray)  # eager, as before
+
+    @pytest.mark.parametrize("impl", ("ref", "interpret"))
+    def test_lazy_chain_through_two_compactions(self, impl):
+        # compact → mask → compact: the second LazyColumn wraps the
+        # first and composes the gathers on materialisation
+        t, valid = _mixed_table()
+        c1 = t.compact(impl)
+        keep1 = np.nonzero(valid)[0]
+        submask = np.arange(len(keep1)) % 2 == 0
+        c2 = c1.with_mask(jnp.asarray(submask)).compact(impl)
+        assert isinstance(c2.columns["t.s"], LazyColumn)
+        np.testing.assert_array_equal(
+            np.asarray(c2.col("t.s")),
+            np.asarray([f"row{i}" for i in keep1[submask]]))
+
+
+class TestTableGather:
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_gather_matches_host_path(self, impl):
+        t, _ = _mixed_table()
+        c = t.compact(impl)
+        idx = np.asarray([2, 0, 1, 1])
+        g = c.gather(idx, impl)
+        ref = c.gather(idx)  # host path ("auto" off-TPU)
+        for k in g.columns:
+            np.testing.assert_array_equal(np.asarray(g.col(k)),
+                                          np.asarray(ref.col(k)))
+
+    def test_sort_and_limit_preserve_host_columns(self):
+        # end-to-end through the executor's Sort/Limit gather path: the
+        # 64-bit column keeps exact values and the sort sees them
+        from repro.core import Q
+        from repro.engine import Executor
+        from repro.semantic import OracleBackend, SemanticRunner
+        db = Database()
+        db.add_table("t", [{"k": i} for i in range(7)])
+        tbl = db.tables["t"]
+        tbl.columns["t.big"] = np.asarray(
+            [(7 - i) * 2**40 for i in range(7)], dtype=np.int64)
+        plan = Q.scan("t").order_by(("t.big", False)).limit(3).build()
+        ex = Executor(db, SemanticRunner(OracleBackend(truths={})),
+                      kernel_impl="ref")
+        table, _ = ex.execute(plan)
+        recs = db.materialize(table, ["t.k", "t.big"])
+        assert [r["t.k"] for r in recs] == [6, 5, 4]
+        assert [r["t.big"] for r in recs] == [2**40, 2 * 2**40, 3 * 2**40]
+
+
+class TestHostIndex:
+    def test_host_index_on_numpy_never_ticks(self):
+        HOST_SYNCS.reset()
+        src = HostIndex(np.asarray([0, 2]))
+        np.testing.assert_array_equal(src.get(), [0, 2])
+        assert HOST_SYNCS.syncs == 0
+
+    def test_host_index_on_device_ticks_once(self):
+        HOST_SYNCS.reset()
+        src = HostIndex(jnp.asarray([1, 3]))
+        src.get()
+        src.get()
+        assert HOST_SYNCS.by_site == {"compact_host_cols": 1}

@@ -33,9 +33,11 @@ def catalog():
     cat = Catalog()
     cat.add_table("books", ["book_id", "title", "description", "row_id"], 1000,
                   ndv={"book_id": 1000})
-    cat.add_table("reviews", ["review_id", "book_id", "text", "rating", "row_id"],
+    cat.add_table("reviews",
+                  ["review_id", "book_id", "text", "rating", "row_id"],
                   5000, ndv={"book_id": 900})
-    cat.add_table("users", ["user_id", "bio", "row_id"], 800, ndv={"user_id": 800})
+    cat.add_table("users", ["user_id", "bio", "row_id"], 800,
+                  ndv={"user_id": 800})
     return cat
 
 
@@ -120,7 +122,8 @@ class TestSimplify:
     def test_sp_stops_below_aggregate(self, catalog):
         plan = (Q.scan("reviews")
                 .sem_project("Rate {reviews.text} 1-5", "sp.score")
-                .group_by(["reviews.book_id"], [("avg", "sp.score", "avg_score")])
+                .group_by(["reviews.book_id"],
+                          [("avg", "sp.score", "avg_score")])
                 .build())
         plan = simplify(plan, catalog)
         agg = next(n for n in plan.walk() if isinstance(n, Aggregate))
@@ -128,7 +131,8 @@ class TestSimplify:
 
     def test_simplify_assigns_sf_ids(self, catalog):
         plan = simplify(push_down_filters(motivating_plan(), catalog), catalog)
-        ids = sorted(n.sf_id for n in plan.walk() if isinstance(n, SemanticFilter))
+        ids = sorted(n.sf_id for n in plan.walk()
+                     if isinstance(n, SemanticFilter))
         assert ids == [0, 1]
 
 
@@ -218,7 +222,8 @@ def _brute_force_cost(skeleton, lifted, placement, catalog, params):
     """Evaluate the DP objective for an explicit placement, independently
     of the DP code: C_LLM + α·C_rel with probe cost."""
     est = Estimator(catalog, params)
-    s_of = {l.idx: params.s_of(l.sf.sf_id, l.sf.selectivity_hint) for l in lifted}
+    s_of = {l.idx: params.s_of(l.sf.sf_id, l.sf.selectivity_hint)
+            for l in lifted}
     placed_at = {}
     for l, nid in zip(lifted, placement):
         placed_at.setdefault(nid, []).append(l)

@@ -50,4 +50,5 @@ def test_query_truths_registered(spec):
     db = _db(spec.schema)
     for n in spec.build().walk():
         if isinstance(n, (SemanticFilter, SemanticJoin, SemanticProject)):
-            assert n.phi in db.truths, f"{spec.qid}: missing truth for {n.phi!r}"
+            assert n.phi in db.truths, \
+                f"{spec.qid}: missing truth for {n.phi!r}"

@@ -74,7 +74,8 @@ p = jax.tree.map(lambda a: a[0], params["blocks"]["moe"])
 x = jax.random.normal(jax.random.PRNGKey(3), (4, 8, cfg.d_model))
 mesh = make_mesh(dp=2, tp=4)
 policy = ShardingPolicy.for_mesh(mesh)
-with jax.sharding.use_mesh(mesh) if hasattr(jax.sharding, "use_mesh") else mesh:
+with (jax.sharding.use_mesh(mesh)
+      if hasattr(jax.sharding, "use_mesh") else mesh):
     y = jax.jit(lambda p_, x_: moe_block(cfg, policy, p_, x_))(p, x)
 y_ref = moe_reference(cfg, p, x)
 np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-4,

@@ -80,14 +80,16 @@ class TestExecutorBasics:
     def test_aggregate_group_by(self, db):
         plan = (Q.scan("reviews")
                 .group_by(["reviews.rating"],
-                          [("count", "*", "cnt"), ("avg", "reviews.helpful_vote", "hv")])
+                          [("count", "*", "cnt"),
+                           ("avg", "reviews.helpful_vote", "hv")])
                 .build())
         table, _ = run_plan(db, plan, "none")
         t = table.compact()
         ratings = np.asarray(t.col("reviews.rating"))
         counts = np.asarray(t.col("agg.cnt"))
         for r, c in zip(ratings, counts):
-            assert c == sum(1 for x in db.payloads["reviews"] if x["rating"] == r)
+            assert c == sum(1 for x in db.payloads["reviews"]
+                            if x["rating"] == r)
 
     def test_sort_limit(self, db):
         plan = (Q.scan("reviews")
@@ -132,7 +134,8 @@ class TestExecutorBasics:
                 .build())
         table, stats = run_plan(small, plan, "none")
         expected = sum(
-            1 for b in small.payloads["books"] for r in small.payloads["reviews"]
+            1 for b in small.payloads["books"]
+            for r in small.payloads["reviews"]
             if r["_sentiment"] != 0 and r["book_id"] == b["book_id"])
         assert table.num_valid == expected
 

@@ -17,7 +17,12 @@ from repro.models import (
     init_params,
     prefill,
 )
-from repro.models.layers import moe_block, moe_reference, ssd_chunked, ssd_reference
+from repro.models.layers import (
+    moe_block,
+    moe_reference,
+    ssd_chunked,
+    ssd_reference,
+)
 from repro.sharding import ShardingPolicy
 
 POLICY = ShardingPolicy.single()

@@ -458,11 +458,12 @@ class TestCrossEquiExpandDrift:
 
 class TestAcceleratedPathNoHostNumpy:
     """Acceptance gate: with the kernel impl forced to the device path
-    ("ref" — jnp on CPU, identical routing to TPU), the join probe
-    expansion and the aggregate key-code assignment must perform ZERO
-    host-side ``np.repeat``/``np.unique`` — asserted through the
-    ``kernels/sync`` fallback accounting — while staying equivalent to
-    the reference executor."""
+    ("ref" — jnp on CPU, identical routing to TPU), the table
+    compaction, the join probe + expansion and the aggregate key-code
+    assignment must perform ZERO host-side
+    ``np.nonzero``/``np.searchsorted``/``np.repeat``/``np.unique`` —
+    asserted through the ``kernels/sync`` fallback accounting — while
+    staying equivalent to the reference executor."""
 
     def _run_accel(self, db, plan, out_cols):
         from repro.kernels.sync import HOST_SYNCS
@@ -488,28 +489,58 @@ class TestAcceleratedPathNoHostNumpy:
         assert "group_key_codes" not in snap["host_fallbacks"]
         assert snap["by_site"].get("group_build_columns", 0) >= 1
 
-    def test_join_probe_expansion_stays_on_device(self):
+    def test_join_probe_and_expansion_stay_on_device(self):
+        # the probe-side searchsorted + match expansion run inside the
+        # device jit: one "join_probe" fetch (the output total), no host
+        # searchsorted fallback and no np.repeat expansion
         db = _db_events(300, 11)
         snap = self._run_accel(db, _join_plan(),
                                ["events.event_id", "cats.cat_id"])
-        assert "expand" not in snap["host_fallbacks"]
-        assert "group_build" not in snap["host_fallbacks"]
-        assert snap["by_site"].get("expand", 0) >= 1
+        for site in ("join_probe", "expand", "group_build", "compact"):
+            assert site not in snap["host_fallbacks"], snap
+        assert snap["by_site"].get("join_probe", 0) >= 1
+
+    def test_empty_build_side_join_stays_on_device(self):
+        # a filter that kills the whole build side must not densify the
+        # probe side's device columns just to gather zero rows
+        from repro.core import col
+        from repro.kernels.sync import HOST_SYNCS
+        db = _db_events(1000, 5)
+        plan = (Q.scan("events")
+                .join(Q.scan("cats").where(col("cats.cat_id") < 0),
+                      "events.cat_id", "cats.cat_id")
+                .build())
+        ex = Executor(db, SemanticRunner(OracleBackend(truths={})),
+                      vectorized=True, kernel_impl="ref")
+        HOST_SYNCS.reset()
+        table, _ = ex.execute(plan)
+        snap = HOST_SYNCS.snapshot()
+        assert table.num_valid == 0
+        assert snap["by_site"].get("join_gather", 0) == 0, snap
 
     def test_cross_join_expansion_stays_on_device(self):
+        # device-output expansion: the row-pair enumeration costs zero
+        # device→host fetches AND zero np.repeat fallbacks
         db = _db_events(25, 8)
         plan = Q.scan("events").cross(Q.scan("cats")).build()
         snap = self._run_accel(db, plan, ["events.event_id", "cats.cat_id"])
-        assert "expand" not in snap["host_fallbacks"]
-        assert snap["by_site"].get("expand", 0) >= 1
+        for site in ("expand", "compact"):
+            assert site not in snap["host_fallbacks"], snap
+        assert snap["by_site"].get("expand", 0) == 0
 
-    def test_full_pipeline_zero_repeat_unique_fallbacks(self):
+    def test_full_pipeline_zero_host_numpy_fallbacks(self):
+        # σ → ⋈ → γ: the filter forces a real (non-trivial) compaction
+        # before the join, so the device stream-compaction path is
+        # exercised alongside the probe and the key codes
+        from repro.core import col
         db = _db_events(500, 17)
         plan = (Q.scan("events")
+                .where(col("events.cat_id") < 12)
                 .join(Q.scan("cats"), "events.cat_id", "cats.cat_id")
                 .group_by(["cats.cat_id"], [("count", "*", "cnt"),
                                             ("max", "cats.w", "w")])
                 .build())
         snap = self._run_accel(db, plan, ["cats.cat_id", "agg.cnt", "agg.w"])
-        for site in ("expand", "group_key_codes"):
+        for site in ("expand", "group_key_codes", "compact", "join_probe",
+                     "group_build"):
             assert site not in snap["host_fallbacks"], snap

@@ -6,7 +6,11 @@ import pytest
 from repro.core import Q, col, count_ops, optimize
 from repro.core.sql import SQLError, parse_sql
 from repro.data import make_bookreview
-from repro.data.schemas import BOOKS_ABOUT_AI, REVIEW_POSITIVE, REVIEW_SENTIMENT
+from repro.data.schemas import (
+    BOOKS_ABOUT_AI,
+    REVIEW_POSITIVE,
+    REVIEW_SENTIMENT,
+)
 from repro.engine import Executor, result_f1
 from repro.semantic import OracleBackend, SemanticRunner
 
@@ -23,16 +27,21 @@ def run(db, plan, strategy="cost"):
     return table, stats
 
 
+_AI_ALIASED = BOOKS_ABOUT_AI.replace("books.", "b.").replace(
+    "reviews.", "r.")
+_POSITIVE_ALIASED = REVIEW_POSITIVE.replace("reviews.", "r.")
+_SENTIMENT_ALIASED = REVIEW_SENTIMENT.replace("reviews.", "r.")
+
 LISTING1 = f"""
 SELECT b.title, r.text
 FROM books b JOIN reviews r ON b.book_id = r.book_id
-WHERE SEMANTIC('{BOOKS_ABOUT_AI.replace("books.", "b.").replace("reviews.", "r.")}')
-  AND SEMANTIC('{REVIEW_POSITIVE.replace("reviews.", "r.")}')
+WHERE SEMANTIC('{_AI_ALIASED}')
+  AND SEMANTIC('{_POSITIVE_ALIASED}')
   AND r.rating >= 3;
 """
 
 LISTING2 = f"""
-SELECT b.title, SEMANTIC_INT('{REVIEW_SENTIMENT.replace("reviews.", "r.")}') AS score
+SELECT b.title, SEMANTIC_INT('{_SENTIMENT_ALIASED}') AS score
 FROM books b JOIN reviews r ON b.book_id = r.book_id
 WHERE score >= 4;
 """

@@ -12,14 +12,20 @@ Checks, per markdown file:
   globs/placeholders (``*``, ``<``) are skipped;
 * ``python <script.py>`` lines inside fenced code blocks point at real
   scripts;
-* README.md carries the CI badge, and the two docs pages exist.
+* README.md carries the CI badge, and the two docs pages exist;
+* the repo-root perf-trajectory snapshots (``BENCH_dedup.json`` /
+  ``BENCH_relational.json``, written by full-size benchmark runs) are
+  present, parse as JSON, name the existing benchmark command that
+  produced them and record a passing gate.
 
 Exit code 0 when everything resolves; 1 with a per-file report
 otherwise. Stdlib only — CI's docs job runs it with no deps installed.
 """
 from __future__ import annotations
 
+import json
 import re
+import shlex
 import sys
 from pathlib import Path
 
@@ -29,6 +35,7 @@ PATH_TOKEN = re.compile(
     r"\b((?:src|docs|benchmarks|examples|tests|tools|\.github)/"
     r"[A-Za-z0-9_.*<>/-]+|"
     r"(?:README|ROADMAP|CHANGES|PAPER|PAPERS|SNIPPETS)\.md|"
+    r"BENCH_[A-Za-z0-9_]+\.json|"
     r"ruff\.toml|requirements(?:-dev)?\.txt)")
 FENCE = re.compile(r"```.*?```", re.DOTALL)
 PY_CMD = re.compile(r"^\s*(?:[A-Z_]+=\S+\s+)*python\s+([A-Za-z0-9_./-]+\.py)",
@@ -43,6 +50,39 @@ README_MUST_CONTAIN = [
     "actions/workflows/ci.yml/badge.svg",   # the CI badge
     "examples/quickstart.py",               # the quickstart pointer
 ]
+# repo-root perf-trajectory snapshots written by full-size bench runs
+BENCH_ARTIFACTS = ["BENCH_dedup.json", "BENCH_relational.json"]
+
+
+def check_bench_artifacts() -> list[str]:
+    """The perf trajectory must exist and stay reproducible: each
+    repo-root snapshot parses, names its producing benchmark command
+    (whose script must exist), comes from a full-size (non-smoke) run
+    and records a passing gate."""
+    errors = []
+    for name in BENCH_ARTIFACTS:
+        path = ROOT / name
+        if not path.exists():
+            errors.append(f"{name}: missing (run the full-size benchmarks "
+                          f"to regenerate the perf trajectory)")
+            continue
+        try:
+            data = json.loads(path.read_text())
+        except ValueError as e:
+            errors.append(f"{name}: invalid JSON ({e})")
+            continue
+        cmd = data.get("command", "")
+        parts = shlex.split(cmd)
+        script = next((p for p in parts if p.endswith(".py")), None)
+        if script is None or not (ROOT / script).exists():
+            errors.append(f"{name}: command {cmd!r} does not name an "
+                          f"existing benchmark script")
+        if data.get("config", {}).get("smoke"):
+            errors.append(f"{name}: recorded from a --smoke run; the "
+                          f"trajectory wants full-size results")
+        if not data.get("gate", {}).get("pass"):
+            errors.append(f"{name}: recorded gate did not pass")
+    return errors
 
 
 def _check_token(tok: str) -> str | None:
@@ -95,9 +135,14 @@ def main() -> int:
         for err in errors:
             print(f"FAIL: {md.relative_to(ROOT)}: {err}")
         failed = failed or bool(errors)
+    bench_errors = check_bench_artifacts()
+    for err in bench_errors:
+        print(f"FAIL: {err}")
+    failed = failed or bool(bench_errors)
     if failed:
         return 1
-    print(f"docs check OK ({len(docs)} files)")
+    print(f"docs check OK ({len(docs)} files, "
+          f"{len(BENCH_ARTIFACTS)} bench artifacts)")
     return 0
 
 

@@ -1,0 +1,79 @@
+"""Blocking formatting gate: the objective layout invariants every
+Python file in the repo must hold, enforced with stdlib only.
+
+    python tools/check_format.py
+
+Checks, per ``*.py`` file under the repo's own source trees (``src``,
+``tests``, ``benchmarks``, ``examples``, ``tools`` — dot-directories,
+virtualenvs and ``__pycache__`` are never walked):
+
+* no line longer than 79 columns (``ruff.toml``'s ``line-length``);
+* no tab characters and no trailing whitespace;
+* LF line endings and exactly one trailing newline;
+* space-only indentation.
+
+This is CI's *blocking* format step. ``ruff format --check`` stays a
+separate advisory step: its byte-exact Black-style output can only be
+produced by running ruff itself, which the offline dev container cannot
+install — so the repo pins down the invariants it can verify
+everywhere, and the advisory diff tracks the rest. Exit code 0 when
+clean; 1 with a per-violation report otherwise.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+MAX_COLS = 79
+# the repo's own source trees: a stray .venv/ or vendored checkout in
+# the repo root must not fail the gate
+SOURCE_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
+
+
+def check_file(path: Path) -> list[str]:
+    """All formatting violations in one file, as report strings."""
+    rel = path.relative_to(ROOT)
+    data = path.read_bytes()
+    errors = []
+    if b"\r" in data:
+        errors.append(f"{rel}: CRLF/CR line endings")
+    if data and not data.endswith(b"\n"):
+        errors.append(f"{rel}: missing trailing newline")
+    if data.endswith(b"\n\n"):
+        errors.append(f"{rel}: multiple trailing newlines")
+    try:
+        text = data.decode("utf-8")
+    except UnicodeDecodeError as e:
+        errors.append(f"{rel}: not valid UTF-8 ({e})")
+        return errors
+    for i, line in enumerate(text.splitlines(), 1):
+        if len(line) > MAX_COLS:
+            errors.append(f"{rel}:{i}: line too long ({len(line)} > "
+                          f"{MAX_COLS})")
+        if line != line.rstrip():
+            errors.append(f"{rel}:{i}: trailing whitespace")
+        if "\t" in line:
+            errors.append(f"{rel}:{i}: tab character")
+    return errors
+
+
+def main() -> int:
+    """Run every check; print a report and return a process exit code."""
+    errors = []
+    for d in SOURCE_DIRS:
+        for path in sorted((ROOT / d).rglob("*.py")):
+            if "__pycache__" in path.parts:
+                continue
+            errors.extend(check_file(path))
+    for err in errors:
+        print(f"FAIL: {err}")
+    if errors:
+        print(f"{len(errors)} formatting violations")
+        return 1
+    print("format check OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
