@@ -242,8 +242,8 @@ class Executor:
                 if all(is_device(v) for v in vs):
                     cols[k] = jnp.concatenate(vs)  # stays on device
                 else:
-                    cols[k] = as_column(
-                        np.concatenate([np.asarray(v) for v in vs]))
+                    cols[k] = as_column(np.concatenate(
+                        [fetch(v, "union_concat") for v in vs]))
             n = sum(p.capacity for p in parts)
             return Table(columns=cols, valid=jnp.ones(n, dtype=bool),
                          _num_valid=n)
@@ -301,6 +301,7 @@ class Executor:
                 ">=": lambda a, b: a >= b,
             }
             if self._on_host(lhs, rhs):
+                # sal: ok[SYNC] guarded by _on_host: operands are host
                 out = np.asarray(ops[e.op](fetch(lhs, "predicate"), rhs))
                 if out.ndim == 0:  # incomparable types collapse to a scalar
                     out = np.full(np.shape(lhs)[0], bool(out))
@@ -365,8 +366,8 @@ class Executor:
             out_l, out_r = join_match_lists(lt.col(lk), rt.col(rk),
                                             impl=self.kernel_impl)
         else:
-            lkv = np.asarray(lt.col(lk))
-            rkv = np.asarray(rt.col(rk))
+            lkv = fetch(lt.col(lk), "join_keys")
+            rkv = fetch(rt.col(rk), "join_keys")
             order = np.argsort(rkv, kind="stable")
             rk_sorted = rkv[order]
             lo = np.searchsorted(rk_sorted, lkv, "left")
@@ -500,7 +501,8 @@ class Executor:
                 cols[k] = key_cols[i][jnp.asarray(reps_sorted,
                                                   dtype=jnp.int32)]
             else:
-                cols[k] = as_column(np.asarray(key_cols[i])[reps_sorted])
+                cols[k] = as_column(
+                    fetch(key_cols[i], "agg_keys")[reps_sorted])
         for func, c, name in node.aggs:
             values = None if func == "count" else t.col(c)
             cols[f"agg.{name}"] = as_column(

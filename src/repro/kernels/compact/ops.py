@@ -113,5 +113,6 @@ def device_gather(cols, idx) -> list:
     if not cols:
         return []
     if isinstance(idx, np.ndarray) or not isinstance(idx, jnp.ndarray):
+        # sal: ok[SYNC] guarded: idx is a host index in this branch
         idx = jnp.asarray(np.asarray(idx), dtype=jnp.int32)
     return list(_gather_device(tuple(cols), idx))

@@ -1,3 +1,4 @@
+# sal: ok[KERNEL] serving family: the jnp reference is the oracle
 """Pure-jnp oracle for flash attention (fp32 softmax, GQA)."""
 from __future__ import annotations
 

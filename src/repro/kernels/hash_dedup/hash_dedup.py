@@ -16,7 +16,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 
 # Python-int constants: Pallas kernels may not capture traced jnp consts.
@@ -25,10 +24,12 @@ FNV_PRIME = 16777619
 
 
 def _fnv1a_mix(h, word_u32):
-    """Mix one uint32 word into the running FNV-1a hash, byte by byte."""
+    """Mix one uint32 word into the running FNV-1a hash, byte by byte.
+    Python-int shift/mask/prime operands keep the uint32 lane dtype via
+    weak typing (no numpy in this file by the kernel contract)."""
     for shift in (0, 8, 16, 24):
-        byte = (word_u32 >> np.uint32(shift)) & np.uint32(0xFF)
-        h = (h ^ byte) * np.uint32(FNV_PRIME)
+        byte = (word_u32 >> shift) & 0xFF
+        h = (h ^ byte) * FNV_PRIME
     return h
 
 

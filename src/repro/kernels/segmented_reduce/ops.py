@@ -37,8 +37,8 @@ from ..hash_dedup.ops import group_build
 from ..hash_dedup.ref import column_codes_np
 from ..sync import HOST_SYNCS
 from ..util import is_device_array, pow2_bucket, resolve_impl
-from .ref import segment_reduce_jnp
-from .segmented_reduce import OPS, reduce_identity, segment_reduce_kernel
+from .ref import reduce_identity, segment_reduce_jnp
+from .segmented_reduce import OPS, segment_reduce_kernel
 
 
 @partial(jax.jit, static_argnames=("num_segments", "op", "block_rows",

@@ -6,6 +6,19 @@ import numpy as np
 from jax import ops as jax_ops
 
 
+def reduce_identity(op: str, dtype):
+    """Neutral element for ``op`` at ``dtype`` (padding rows and empty
+    segments yield it, matching jnp ``segment_*``: ±inf for floats,
+    iinfo extremes for ints)."""
+    if op == "sum":
+        return np.zeros((), dtype=dtype)[()]
+    if np.issubdtype(dtype, np.floating):
+        sign = 1.0 if op == "min" else -1.0
+        return np.asarray(sign * np.inf, dtype=dtype)[()]
+    info = np.iinfo(dtype)
+    return info.max if op == "min" else info.min
+
+
 def segment_reduce_jnp(values, segment_ids, num_segments: int, op: str):
     """(N,) values, (N,) int segment ids -> (num_segments,) reduction.
     Empty segments yield the op's identity (jnp ``segment_*`` semantics)."""
@@ -19,8 +32,6 @@ def segment_reduce_np(values, segment_ids, num_segments: int, op: str):
     identity fill of empty segments)."""
     values = np.asarray(values)
     seg = np.asarray(segment_ids)
-    from .segmented_reduce import reduce_identity
-
     out = np.full(num_segments, reduce_identity(op, values.dtype),
                   dtype=values.dtype)
     if len(values) == 0 or num_segments == 0:
@@ -39,8 +50,6 @@ def segment_reduce_brute(values, segment_ids, num_segments: int, op: str):
     as the simplest possible cross-check for property tests."""
     values = np.asarray(values)
     seg = np.asarray(segment_ids)
-    from .segmented_reduce import reduce_identity
-
     red = {"sum": np.sum, "min": np.min, "max": np.max}[op]
     out = np.full(num_segments, reduce_identity(op, values.dtype),
                   dtype=values.dtype)

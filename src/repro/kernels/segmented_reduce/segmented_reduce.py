@@ -20,23 +20,14 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 
+# the identity helper is numpy (host) code and lives with the numpy
+# oracle: this file stays numpy-free so kernel bodies cannot pick up
+# untraceable host calls
+from .ref import reduce_identity  # noqa: F401  (re-exported)
+
 OPS = ("sum", "min", "max")
-
-
-def reduce_identity(op: str, dtype):
-    """Neutral element for ``op`` at ``dtype`` (padding rows and empty
-    segments yield it, matching jnp ``segment_*``: ±inf for floats,
-    iinfo extremes for ints)."""
-    if op == "sum":
-        return np.zeros((), dtype=dtype)[()]
-    if np.issubdtype(dtype, np.floating):
-        sign = 1.0 if op == "min" else -1.0
-        return np.asarray(sign * np.inf, dtype=dtype)[()]
-    info = np.iinfo(dtype)
-    return info.max if op == "min" else info.min
 
 
 def _seg_reduce_kernel(vals_ref, seg_ref, out_ref, *, op: str,

@@ -1,3 +1,4 @@
+# sal: ok[KERNEL] serving family: the jnp reference is the oracle
 """Sequential-scan oracle for the SSD kernel (identical to
 models.layers.ssd_reference, re-exported here so the kernel package is
 self-contained)."""

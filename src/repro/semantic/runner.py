@@ -257,5 +257,6 @@ class SemanticRunner:
              else (VERDICT_TRUE if bool(values[i]) else VERDICT_FALSE)
              for i in idx], dtype=np.int8)
         sel = np.asarray(idx)
+        # sal: ok[SYNC] rep hashes are host uint32 from dedup_representatives
         vt.bind(phi, np.asarray(key_hashes)[sel], np.asarray(key_fps)[sel],
                 verdicts)

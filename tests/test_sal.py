@@ -1,0 +1,421 @@
+"""SAL (``tools/sal``): per-rule positive/negative fixtures, pragma
+handling, the JSON reporter, the CLI, and the tier-1 self-scan that
+keeps the live repo clean."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))
+
+from tools.sal import (  # noqa: E402
+    analyze_project,
+    analyze_source,
+    render_json,
+    render_text,
+)
+
+ENGINE = "src/repro/engine/fixture.py"
+
+
+def rules_of(violations, rule=None):
+    out = [v.rule for v in violations]
+    return [r for r in out if r == rule] if rule else out
+
+
+# ----------------------------------------------------------------- SYNC
+def test_sync_flags_materializer_on_device_value():
+    src = (
+        "import numpy as np\n"
+        "import jax.numpy as jnp\n"
+        "\n"
+        "\n"
+        "def leak(t):\n"
+        "    col = jnp.asarray(t)\n"
+        "    return np.asarray(col)\n"
+    )
+    got = analyze_source(ENGINE, src)
+    assert rules_of(got, "SYNC"), got
+    assert any(v.line == 7 for v in got if v.rule == "SYNC")
+
+
+def test_sync_allows_materializer_on_host_value():
+    src = (
+        "import numpy as np\n"
+        "\n"
+        "\n"
+        "def pack():\n"
+        "    rows = [1, 2, 3]\n"
+        "    return np.asarray(rows)\n"
+    )
+    assert not rules_of(analyze_source(ENGINE, src), "SYNC")
+
+
+def test_sync_flags_item_and_coercion_and_iteration():
+    src = (
+        "import jax.numpy as jnp\n"
+        "\n"
+        "\n"
+        "def drain(t):\n"
+        "    col = jnp.asarray(t)\n"
+        "    a = col.item()\n"
+        "    b = int(col)\n"
+        "    out = []\n"
+        "    for v in col:\n"
+        "        out.append(v)\n"
+        "    return a, b, out\n"
+    )
+    got = [v.line for v in analyze_source(ENGINE, src)
+           if v.rule == "SYNC"]
+    assert got == [6, 7, 9], got
+
+
+def test_sync_sanctions_np_suffix_and_ticking_scopes():
+    src = (
+        "import numpy as np\n"
+        "import jax.numpy as jnp\n"
+        "from repro.kernels.sync import HOST_SYNCS\n"
+        "\n"
+        "\n"
+        "def leak_np(t):\n"
+        "    return np.asarray(jnp.asarray(t))\n"
+        "\n"
+        "\n"
+        "def wrapped(t):\n"
+        "    out = np.asarray(jnp.asarray(t))\n"
+        "    HOST_SYNCS.tick(1, site='compact')\n"
+        "    return out\n"
+    )
+    assert not rules_of(analyze_source(ENGINE, src), "SYNC")
+
+
+def test_sync_ignores_files_outside_accounted_layers():
+    src = (
+        "import numpy as np\n"
+        "import jax.numpy as jnp\n"
+        "\n"
+        "\n"
+        "def leak(t):\n"
+        "    return np.asarray(jnp.asarray(t))\n"
+    )
+    got = analyze_source("src/repro/launch/fixture.py", src)
+    assert not rules_of(got, "SYNC")
+
+
+# --------------------------------------------------------------- PRAGMA
+def test_pragma_suppresses_with_reason():
+    src = (
+        "import numpy as np\n"
+        "import jax.numpy as jnp\n"
+        "\n"
+        "\n"
+        "def leak(t):\n"
+        "    col = jnp.asarray(t)\n"
+        "    return np.asarray(col)  # sal: ok[SYNC] host by contract\n"
+    )
+    assert analyze_source(ENGINE, src) == []
+
+
+def test_pragma_on_comment_line_covers_next_line():
+    src = (
+        "import numpy as np\n"
+        "import jax.numpy as jnp\n"
+        "\n"
+        "\n"
+        "def leak(t):\n"
+        "    col = jnp.asarray(t)\n"
+        "    # sal: ok[SYNC] host by contract\n"
+        "    return np.asarray(col)\n"
+    )
+    assert analyze_source(ENGINE, src) == []
+
+
+def test_pragma_without_reason_is_a_violation():
+    src = (
+        "import numpy as np\n"
+        "import jax.numpy as jnp\n"
+        "\n"
+        "\n"
+        "def leak(t):\n"
+        "    col = jnp.asarray(t)\n"
+        "    return np.asarray(col)  # sal: ok[SYNC]\n"
+    )
+    got = analyze_source(ENGINE, src)
+    assert rules_of(got, "PRAGMA"), got
+    assert rules_of(got, "SYNC"), "reasonless pragma must not suppress"
+
+
+def test_pragma_with_unknown_rule_is_a_violation():
+    src = "x = 1  # sal: ok[NOPE] whatever\n"
+    got = analyze_source(ENGINE, src)
+    assert rules_of(got, "PRAGMA"), got
+
+
+# ----------------------------------------------------------------- SITE
+def test_site_flags_unregistered_literal():
+    src = (
+        "from repro.engine.table import fetch\n"
+        "\n"
+        "\n"
+        "def pull(col):\n"
+        "    return fetch(col, 'not_a_site')\n"
+    )
+    got = analyze_source(ENGINE, src)
+    assert rules_of(got, "SITE"), got
+
+
+def test_site_accepts_registered_literal_and_variables():
+    src = (
+        "from repro.engine.table import fetch\n"
+        "\n"
+        "\n"
+        "def pull(col, where):\n"
+        "    a = fetch(col, 'compact')\n"
+        "    b = fetch(col, site='join_keys')\n"
+        "    return a, b, fetch(col, where)\n"
+    )
+    assert not rules_of(analyze_source(ENGINE, src), "SITE")
+
+
+# ------------------------------------------------------------------ JIT
+def test_jit_flags_host_numpy_in_jitted_fn():
+    src = (
+        "import jax\n"
+        "import numpy as np\n"
+        "\n"
+        "\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    return np.asarray(x)\n"
+    )
+    got = analyze_source(ENGINE, src)
+    assert rules_of(got, "JIT"), got
+
+
+def test_jit_allows_static_dtype_machinery():
+    src = (
+        "import jax\n"
+        "import numpy as np\n"
+        "\n"
+        "\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    return x.astype(np.dtype('int32'))\n"
+    )
+    assert not rules_of(analyze_source(ENGINE, src), "JIT")
+
+
+def test_jit_flags_print_in_pallas_kernel_body():
+    src = (
+        "from jax.experimental import pallas as pl\n"
+        "\n"
+        "\n"
+        "def _kern(x_ref, o_ref):\n"
+        "    print('traced')\n"
+        "    o_ref[...] = x_ref[...]\n"
+        "\n"
+        "\n"
+        "def run(x, shape):\n"
+        "    return pl.pallas_call(_kern, out_shape=shape)(x)\n"
+    )
+    got = analyze_source("src/repro/kernels/foo/foo.py", src)
+    assert any(v.rule == "JIT" and v.line == 5 for v in got), got
+
+
+# ---------------------------------------------------------------- WIDTH
+def test_width_flags_64bit_device_upload():
+    src = (
+        "import jax.numpy as jnp\n"
+        "\n"
+        "\n"
+        "def up(xs):\n"
+        "    return jnp.asarray(xs, dtype=jnp.int64)\n"
+    )
+    got = analyze_source(ENGINE, src)
+    assert rules_of(got, "WIDTH"), got
+
+
+def test_width_flags_list_literal_upload_but_not_narrow():
+    src = (
+        "import jax.numpy as jnp\n"
+        "\n"
+        "\n"
+        "def up(xs):\n"
+        "    bad = jnp.asarray([1, 2, 3])\n"
+        "    good = jnp.asarray(xs, dtype=jnp.int32)\n"
+        "    return bad, good\n"
+    )
+    got = [v.line for v in analyze_source(ENGINE, src)
+           if v.rule == "WIDTH"]
+    assert got == [5], got
+
+
+def test_width_flags_wide_keys_into_int32_kernel_entry():
+    src = (
+        "import numpy as np\n"
+        "from repro.kernels.hash_dedup.ops import hash_rows\n"
+        "\n"
+        "\n"
+        "def code(keys):\n"
+        "    return hash_rows(keys.astype(np.int64))\n"
+    )
+    got = analyze_source(ENGINE, src)
+    assert rules_of(got, "WIDTH"), got
+
+
+# --------------------------------------------------- KERNEL (tmp trees)
+GOOD_OPS = (
+    "def foo(x, *, impl='auto'):\n"
+    "    return x\n"
+)
+GOOD_REF = (
+    "def foo_np(x):\n"
+    "    return x\n"
+)
+GOOD_PALLAS = (
+    "import jax.numpy as jnp\n"
+    "\n"
+    "\n"
+    "def foo_kernel(x):\n"
+    "    return jnp.asarray(x, dtype=jnp.int32)\n"
+)
+
+
+def _tree(tmp_path, files):
+    for rel, text in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(text)
+    return tmp_path
+
+
+def _kernel_violations(tmp_path, files):
+    root = _tree(tmp_path, files)
+    return [v for v in analyze_project(root) if v.rule == "KERNEL"]
+
+
+def test_kernel_complete_trio_is_clean(tmp_path):
+    got = _kernel_violations(tmp_path, {
+        "src/repro/kernels/foo/ops.py": GOOD_OPS,
+        "src/repro/kernels/foo/ref.py": GOOD_REF,
+        "src/repro/kernels/foo/foo.py": GOOD_PALLAS,
+    })
+    assert got == []
+
+
+def test_kernel_missing_ref_is_flagged(tmp_path):
+    got = _kernel_violations(tmp_path, {
+        "src/repro/kernels/foo/ops.py": GOOD_OPS,
+        "src/repro/kernels/foo/foo.py": GOOD_PALLAS,
+    })
+    assert any("missing ref.py" in v.message for v in got), got
+
+
+def test_kernel_ops_without_impl_is_flagged(tmp_path):
+    got = _kernel_violations(tmp_path, {
+        "src/repro/kernels/foo/ops.py": "def foo(x):\n    return x\n",
+        "src/repro/kernels/foo/ref.py": GOOD_REF,
+        "src/repro/kernels/foo/foo.py": GOOD_PALLAS,
+    })
+    assert any("impl=" in v.message for v in got), got
+
+
+def test_kernel_ref_without_np_oracle_is_flagged(tmp_path):
+    got = _kernel_violations(tmp_path, {
+        "src/repro/kernels/foo/ops.py": GOOD_OPS,
+        "src/repro/kernels/foo/ref.py": "def foo_jnp(x):\n"
+                                        "    return x\n",
+        "src/repro/kernels/foo/foo.py": GOOD_PALLAS,
+    })
+    assert any("*_np oracle" in v.message for v in got), got
+
+
+def test_kernel_numpy_in_pallas_file_is_flagged(tmp_path):
+    got = _kernel_violations(tmp_path, {
+        "src/repro/kernels/foo/ops.py": GOOD_OPS,
+        "src/repro/kernels/foo/ref.py": GOOD_REF,
+        "src/repro/kernels/foo/foo.py": "import numpy as np\n",
+    })
+    assert any("must not import numpy" in v.message for v in got), got
+
+
+def test_kernel_import_of_deleted_oracle_is_flagged(tmp_path):
+    got = _kernel_violations(tmp_path, {
+        "src/repro/kernels/foo/ops.py": GOOD_OPS,
+        "src/repro/kernels/foo/ref.py": GOOD_REF,
+        "src/repro/kernels/foo/foo.py": GOOD_PALLAS,
+        "src/repro/engine/use.py":
+            "from repro.kernels.foo.ref import gone_np\n",
+    })
+    assert any("no such symbol" in v.message for v in got), got
+
+
+# -------------------------------------------------------- CLI/reporters
+BAD_TREE = {
+    # one violation per rule family, in one tree
+    "src/repro/kernels/foo/ops.py": GOOD_OPS,   # missing ref.py+foo.py
+    "src/repro/engine/leaky.py": (
+        "import jax\n"
+        "import numpy as np\n"
+        "import jax.numpy as jnp\n"
+        "from repro.engine.table import fetch\n"
+        "\n"
+        "\n"
+        "def leak(t):\n"
+        "    col = jnp.asarray(t)\n"
+        "    host = np.asarray(col)\n"
+        "    wide = jnp.asarray(host, dtype=jnp.int64)\n"
+        "    return fetch(wide, 'not_a_site')\n"
+        "\n"
+        "\n"
+        "@jax.jit\n"
+        "def traced(x):\n"
+        "    return np.nonzero(x)\n"
+    ),
+}
+
+
+def test_cli_red_on_seeded_tree_and_json_report(tmp_path):
+    root = _tree(tmp_path / "bad", BAD_TREE)
+    report = tmp_path / "sal-report.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.sal", "--root", str(root),
+         "--json", str(report)],
+        cwd=REPO, capture_output=True, text=True)
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    data = json.loads(report.read_text())
+    assert data["ok"] is False
+    for rule in ("SYNC", "KERNEL", "SITE", "JIT", "WIDTH"):
+        assert data["counts"].get(rule), (rule, data["counts"])
+    assert all(set(v) == {"path", "line", "rule", "message"}
+               for v in data["violations"])
+
+
+def test_cli_green_on_clean_tree(tmp_path):
+    root = _tree(tmp_path / "good", {
+        "src/repro/kernels/foo/ops.py": GOOD_OPS,
+        "src/repro/kernels/foo/ref.py": GOOD_REF,
+        "src/repro/kernels/foo/foo.py": GOOD_PALLAS,
+    })
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.sal", "--root", str(root)],
+        cwd=REPO, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "SAL OK" in proc.stdout
+
+
+def test_reporters_round_trip():
+    got = analyze_source(ENGINE, "def f(x):\n    return int(x)\n")
+    assert got == []  # int() of an unknown (not device) value is fine
+    text = render_text(got, 1)
+    assert "SAL OK" in text
+    data = json.loads(render_json(got, 1))
+    assert data == {"ok": True, "files": 1, "counts": {},
+                    "violations": []}
+
+
+# -------------------------------------------------------- the live repo
+def test_live_repo_is_sal_clean():
+    got = analyze_project(REPO)
+    assert got == [], "\n".join(v.report() for v in got)

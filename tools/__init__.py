@@ -1,0 +1,7 @@
+"""Repo tooling: stdlib-only gates runnable with zero dependencies.
+
+``tools.check_format`` / ``tools.check_docs`` are script-style gates;
+``tools.sal`` is the static-analysis package (``python -m tools.sal``).
+This marker file makes ``tools`` importable as a package so the SAL
+entry point resolves from the repo root.
+"""

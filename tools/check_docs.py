@@ -13,6 +13,10 @@ Checks, per markdown file:
 * ``python <script.py>`` lines inside fenced code blocks point at real
   scripts;
 * README.md carries the CI badge, and the two docs pages exist;
+* the "Registered sync sites" table in ``docs/kernels.md`` names
+  exactly the keys of ``tools/sal/registry.py::SYNC_SITES`` (both a
+  documented-but-unregistered and a registered-but-undocumented site
+  fail);
 * the repo-root perf-trajectory snapshots (``BENCH_dedup.json`` /
   ``BENCH_relational.json``, written by full-size benchmark runs) are
   present, parse as JSON, name the existing benchmark command that
@@ -23,6 +27,7 @@ otherwise. Stdlib only — CI's docs job runs it with no deps installed.
 """
 from __future__ import annotations
 
+import importlib.util
 import json
 import re
 import shlex
@@ -30,6 +35,8 @@ import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
+
+SITE_ROW = re.compile(r"^\|\s*`([A-Za-z0-9_]+)`\s*\|", re.MULTILINE)
 
 PATH_TOKEN = re.compile(
     r"\b((?:src|docs|benchmarks|examples|tests|tools|\.github)/"
@@ -82,6 +89,41 @@ def check_bench_artifacts() -> list[str]:
                           f"trajectory wants full-size results")
         if not data.get("gate", {}).get("pass"):
             errors.append(f"{name}: recorded gate did not pass")
+    return errors
+
+
+def _load_sync_sites() -> dict:
+    """Load ``SYNC_SITES`` from the SAL registry by file path (the
+    registry is pure data with no package-relative imports, so this
+    works without putting the repo root on ``sys.path``)."""
+    path = ROOT / "tools" / "sal" / "registry.py"
+    spec = importlib.util.spec_from_file_location("_sal_registry", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod.SYNC_SITES
+
+
+def check_sync_site_table() -> list[str]:
+    """docs/kernels.md's sync-site table must match the SAL registry
+    exactly: every registered site documented, no stale rows."""
+    md = ROOT / "docs" / "kernels.md"
+    if not md.exists():
+        return ["docs/kernels.md: missing (sync-site table lives there)"]
+    text = md.read_text()
+    head, sep, tail = text.partition("### Registered sync sites")
+    if not sep:
+        return ["docs/kernels.md: no 'Registered sync sites' section"]
+    section = tail.split("\n## ")[0]
+    documented = {m.group(1) for m in SITE_ROW.finditer(section)}
+    documented.discard("site")  # the header row, if backticked
+    registered = set(_load_sync_sites())
+    errors = []
+    for site in sorted(registered - documented):
+        errors.append(f"docs/kernels.md: registered sync site "
+                      f"`{site}` missing from the site table")
+    for site in sorted(documented - registered):
+        errors.append(f"docs/kernels.md: site table row `{site}` is "
+                      f"not in tools/sal/registry.py::SYNC_SITES")
     return errors
 
 
@@ -139,6 +181,10 @@ def main() -> int:
     for err in bench_errors:
         print(f"FAIL: {err}")
     failed = failed or bool(bench_errors)
+    site_errors = check_sync_site_table()
+    for err in site_errors:
+        print(f"FAIL: {err}")
+    failed = failed or bool(site_errors)
     if failed:
         return 1
     print(f"docs check OK ({len(docs)} files, "

@@ -24,11 +24,14 @@ from __future__ import annotations
 import sys
 from pathlib import Path
 
-ROOT = Path(__file__).resolve().parent.parent
+if __package__:
+    from .repo_walk import ROOT, SOURCE_DIRS, iter_py_files
+else:  # script mode: python tools/check_format.py
+    from repo_walk import ROOT, SOURCE_DIRS, iter_py_files
+
 MAX_COLS = 79
-# the repo's own source trees: a stray .venv/ or vendored checkout in
-# the repo root must not fail the gate
-SOURCE_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
+
+__all__ = ["ROOT", "SOURCE_DIRS", "MAX_COLS", "check_file", "main"]
 
 
 def check_file(path: Path) -> list[str]:
@@ -61,11 +64,8 @@ def check_file(path: Path) -> list[str]:
 def main() -> int:
     """Run every check; print a report and return a process exit code."""
     errors = []
-    for d in SOURCE_DIRS:
-        for path in sorted((ROOT / d).rglob("*.py")):
-            if "__pycache__" in path.parts:
-                continue
-            errors.extend(check_file(path))
+    for path in iter_py_files():
+        errors.extend(check_file(path))
     for err in errors:
         print(f"FAIL: {err}")
     if errors:

@@ -1,0 +1,34 @@
+"""The one definition of "the repo's own Python source tree".
+
+``tools/check_format.py`` and ``tools/sal`` both walk every ``*.py``
+file the repo owns; this module is the single shared walker so the
+directory list and the skip rules (dot-directories, virtualenvs,
+``__pycache__``) cannot drift between gates.
+
+Stdlib only — both consumers run in CI jobs with no deps installed.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Iterable, Iterator
+
+ROOT = Path(__file__).resolve().parent.parent
+# the repo's own source trees: a stray .venv/ or vendored checkout in
+# the repo root must not fail any gate
+SOURCE_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
+
+
+def _skipped(path: Path) -> bool:
+    """True for files no gate should ever look at."""
+    return any(part == "__pycache__" or part.startswith(".")
+               for part in path.parts)
+
+
+def iter_py_files(dirs: Iterable[str] = SOURCE_DIRS,
+                  root: Path = ROOT) -> Iterator[Path]:
+    """Yield every checked-in ``*.py`` under ``root``'s source dirs,
+    sorted, skipping ``__pycache__`` and dot-directories."""
+    for d in dirs:
+        for path in sorted((root / d).rglob("*.py")):
+            if not _skipped(path.relative_to(root)):
+                yield path

@@ -1,0 +1,27 @@
+"""SAL — static analysis for the PLOP repro's executor invariants.
+
+A stdlib-only ``ast`` lint framework enforcing, at review time, the
+properties the repo otherwise proves dynamically:
+
+* **SYNC** — no unaccounted device->host materialisation outside the
+  ``fetch``/``HOST_SYNCS`` choke points;
+* **KERNEL** — the three-impl kernel contract (ops/ref/pallas trio,
+  ``impl=`` threading, ``*_np`` oracle, numpy-free Pallas files,
+  import integrity);
+* **SITE** — the sync-site registry is exactly the set of live sites;
+* **JIT** — jit-ed functions and Pallas bodies stay pure;
+* **WIDTH** — no 64-bit/string values bypass ``as_column``.
+
+Run ``python -m tools.sal`` from the repo root (CI's blocking lint
+step); see ``docs/static_analysis.md`` for the rule catalog and the
+pragma syntax (``# sal: ok[RULE] reason``).
+"""
+from .core import (RULE_DOCS, RULES, Violation, analyze_project,
+                   analyze_source, render_json, render_text)
+from .registry import SANCTIONED, SYNC_SITES
+
+__all__ = [
+    "RULES", "RULE_DOCS", "Violation", "analyze_project",
+    "analyze_source", "render_json", "render_text", "SANCTIONED",
+    "SYNC_SITES",
+]

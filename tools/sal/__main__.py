@@ -1,0 +1,59 @@
+"""CLI for SAL: ``python -m tools.sal [--json FILE] [--root DIR]``.
+
+Exit code 0 when the tree is clean, 1 with per-violation ``file:line``
+reports otherwise (and 2 on usage errors). ``--json`` additionally
+writes the machine-readable report CI uploads as an artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from .core import RULE_DOCS, RULES, analyze_project, render_json, \
+    render_text
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.sal",
+        description="SAL: stdlib AST lint for sync discipline, the "
+                    "kernel contract, site registry, jit purity and "
+                    "dtype width.")
+    parser.add_argument("--json", metavar="FILE", default=None,
+                        help="also write a JSON report to FILE")
+    parser.add_argument("--root", metavar="DIR", default=None,
+                        help="tree to scan (default: the repo root)")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule catalog and exit")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule in RULES:
+            print(f"{rule:7s} {RULE_DOCS[rule]}")
+        return 0
+
+    if args.root is not None:
+        root = Path(args.root).resolve()
+        files = sorted(p for p in (root / "src").rglob("*.py")
+                       if "__pycache__" not in p.parts)
+    else:
+        from ..repo_walk import ROOT as root  # type: ignore[no-redef]
+        files = None
+
+    violations = analyze_project(root, files)
+    n_files = len(files) if files is not None else \
+        sum(1 for _ in _default_files(root))
+    print(render_text(violations, n_files))
+    if args.json:
+        Path(args.json).write_text(render_json(violations, n_files))
+    return 1 if violations else 0
+
+
+def _default_files(root: Path):
+    from ..repo_walk import iter_py_files
+    return iter_py_files(dirs=("src",), root=root)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

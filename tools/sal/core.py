@@ -1,0 +1,242 @@
+"""SAL core: violation model, pragma suppression, rule registry and
+the analysis drivers shared by the CLI and the tests.
+
+Rules come in two shapes:
+
+* **file rules** — ``fn(ctx: FileCtx) -> list[Violation]``, run once
+  per parsed source file;
+* **project rules** — ``fn(proj: ProjectCtx) -> list[Violation]``,
+  run once over the whole file set (kernel-family layout, import
+  integrity, stale registry entries).
+
+Suppression: ``# sal: ok[RULE] reason`` on the offending line — or on
+a comment-only line directly above it, for lines with no column budget
+left — suppresses that rule there. The reason is mandatory; a pragma
+without one (or naming an unknown rule) is itself a violation
+(``PRAGMA``), so suppressions stay auditable.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Iterable
+
+RULES = ("SYNC", "KERNEL", "SITE", "JIT", "WIDTH")
+_META_RULES = ("PRAGMA", "PARSE")
+
+RULE_DOCS = {
+    "SYNC": "host materialisation of device values outside the "
+            "sanctioned choke points",
+    "KERNEL": "kernel-family contract: ops/ref/pallas trio, impl= "
+              "threading, *_np oracle, numpy-free pallas file, "
+              "import integrity",
+    "SITE": "every fetch/tick/fallback site literal is registered "
+            "(and every registry entry is live)",
+    "JIT": "no host numpy, .item() or print inside jit-ed functions "
+           "and pallas kernel bodies",
+    "WIDTH": "no 64-bit/string values into jnp.asarray or int32 "
+             "kernel entries without as_column",
+    "PRAGMA": "suppression pragmas are well-formed and carry a reason",
+    "PARSE": "source files parse",
+}
+
+_PRAGMA = re.compile(r"#\s*sal:\s*ok\[([A-Za-z0-9_,\s]*)\]\s*(.*)$")
+
+
+@dataclass(frozen=True, order=True)
+class Violation:
+    path: str  # repo-relative posix path
+    line: int
+    rule: str
+    message: str
+
+    def report(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+    def to_dict(self) -> dict:
+        return {"path": self.path, "line": self.line,
+                "rule": self.rule, "message": self.message}
+
+
+@dataclass
+class FileCtx:
+    """One parsed source file plus its repo-relative identity."""
+
+    rel: str
+    text: str
+    tree: ast.Module
+    lines: list[str] = field(default_factory=list)
+
+    @classmethod
+    def parse(cls, rel: str, text: str) -> "FileCtx | Violation":
+        try:
+            tree = ast.parse(text)
+        except SyntaxError as e:
+            return Violation(rel, e.lineno or 1, "PARSE",
+                             f"does not parse: {e.msg}")
+        return cls(rel=rel, text=text, tree=tree,
+                   lines=text.splitlines())
+
+    def in_dir(self, *prefixes: str) -> bool:
+        return any(self.rel.startswith(p) for p in prefixes)
+
+
+@dataclass
+class ProjectCtx:
+    """The whole scanned file set, for cross-file rules."""
+
+    root: Path
+    files: list[FileCtx]
+
+    def get(self, rel: str) -> FileCtx | None:
+        for f in self.files:
+            if f.rel == rel:
+                return f
+        return None
+
+
+FileRule = Callable[[FileCtx], list[Violation]]
+ProjectRule = Callable[[ProjectCtx], list[Violation]]
+
+FILE_RULES: list[FileRule] = []
+PROJECT_RULES: list[ProjectRule] = []
+
+
+def file_rule(fn: FileRule) -> FileRule:
+    FILE_RULES.append(fn)
+    return fn
+
+
+def project_rule(fn: ProjectRule) -> ProjectRule:
+    PROJECT_RULES.append(fn)
+    return fn
+
+
+# ------------------------------------------------------------- pragmas
+def collect_pragmas(ctx: FileCtx) -> tuple[dict[int, set[str]],
+                                           list[Violation]]:
+    """Map line number -> rules suppressed there, plus PRAGMA
+    violations for malformed pragmas. A pragma on a comment-only line
+    also covers the next line."""
+    covered: dict[int, set[str]] = {}
+    errors: list[Violation] = []
+    for i, line in enumerate(ctx.lines, 1):
+        m = _PRAGMA.search(line)
+        if not m:
+            continue
+        rules = {r.strip().upper() for r in m.group(1).split(",")
+                 if r.strip()}
+        reason = m.group(2).strip()
+        bad = rules - set(RULES)
+        if bad or not rules:
+            errors.append(Violation(
+                ctx.rel, i, "PRAGMA",
+                f"unknown rule(s) in pragma: "
+                f"{sorted(bad) if bad else '(none)'} — valid: "
+                f"{', '.join(RULES)}"))
+            continue
+        if not reason:
+            errors.append(Violation(
+                ctx.rel, i, "PRAGMA",
+                "pragma without a reason — '# sal: ok[RULE] why' "
+                "(the reason is mandatory)"))
+            continue
+        covered.setdefault(i, set()).update(rules)
+        if line.lstrip().startswith("#"):
+            covered.setdefault(i + 1, set()).update(rules)
+    return covered, errors
+
+
+def apply_pragmas(ctx: FileCtx,
+                  violations: Iterable[Violation]) -> list[Violation]:
+    covered, errors = collect_pragmas(ctx)
+    kept = [v for v in violations
+            if v.rule not in covered.get(v.line, set())]
+    return kept + errors
+
+
+# ------------------------------------------------------------- drivers
+def _load_rules() -> None:
+    """Import the rule modules (idempotent) so they self-register."""
+    from . import rules_kernel, rules_site, rules_sync  # noqa: F401
+
+
+def analyze_source(rel: str, text: str) -> list[Violation]:
+    """Run every file rule (plus pragma filtering) on one source blob
+    under the given repo-relative path — the unit-test entry point."""
+    _load_rules()
+    ctx = FileCtx.parse(rel, text)
+    if isinstance(ctx, Violation):
+        return [ctx]
+    found: list[Violation] = []
+    for rule in FILE_RULES:
+        found.extend(rule(ctx))
+    return sorted(apply_pragmas(ctx, found))
+
+
+def analyze_project(root: Path,
+                    files: Iterable[Path] | None = None
+                    ) -> list[Violation]:
+    """Scan a repo tree rooted at ``root``: every file rule on every
+    ``src/`` Python file, then the project rules."""
+    _load_rules()
+    if files is None:
+        if __package__:
+            from ..repo_walk import iter_py_files
+        else:  # pragma: no cover - script mode
+            from repo_walk import iter_py_files
+        files = iter_py_files(dirs=("src",), root=root)
+    ctxs: list[FileCtx] = []
+    out: list[Violation] = []
+    for path in files:
+        rel = path.relative_to(root).as_posix()
+        parsed = FileCtx.parse(rel, path.read_text())
+        if isinstance(parsed, Violation):
+            out.append(parsed)
+            continue
+        ctxs.append(parsed)
+    proj = ProjectCtx(root=root, files=ctxs)
+    for ctx in ctxs:
+        found: list[Violation] = []
+        for rule in FILE_RULES:
+            found.extend(rule(ctx))
+        out.extend(apply_pragmas(ctx, found))
+    proj_found: list[Violation] = []
+    for prule in PROJECT_RULES:
+        proj_found.extend(prule(proj))
+    by_rel = {c.rel: c for c in ctxs}
+    for v in proj_found:
+        ctx = by_rel.get(v.path)
+        if ctx is None:
+            out.append(v)
+            continue
+        covered, _ = collect_pragmas(ctx)  # PRAGMA errs already added
+        if v.rule not in covered.get(v.line, set()):
+            out.append(v)
+    return sorted(set(out))
+
+
+# ----------------------------------------------------------- reporters
+def render_text(violations: list[Violation], n_files: int) -> str:
+    lines = [v.report() for v in violations]
+    if violations:
+        lines.append(f"{len(violations)} SAL violations "
+                     f"across {n_files} files")
+    else:
+        lines.append(f"SAL OK ({n_files} files)")
+    return "\n".join(lines)
+
+
+def render_json(violations: list[Violation], n_files: int) -> str:
+    counts: dict[str, int] = {}
+    for v in violations:
+        counts[v.rule] = counts.get(v.rule, 0) + 1
+    return json.dumps({
+        "ok": not violations,
+        "files": n_files,
+        "counts": counts,
+        "violations": [v.to_dict() for v in violations],
+    }, indent=2, sort_keys=True) + "\n"

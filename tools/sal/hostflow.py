@@ -1,0 +1,381 @@
+"""Host/device provenance analysis for SAL's sync and width rules.
+
+A deliberately small, per-scope taint lattice over three values:
+
+* ``"host"``   — provably a host Python/numpy value (literals,
+  comprehensions, ``len``/``int``-style builtins, ``np.*`` results,
+  values returned by ``fetch``, ``.item()`` results, …);
+* ``"device"`` — evidenced to live on device (``jnp.*`` results,
+  values annotated as jax arrays, methods of device values);
+* ``"unknown"``— everything else (parameters, attributes of objects
+  the analysis cannot see through).
+
+The SYNC rule is asymmetric on purpose: materialisers such as
+``np.asarray`` flag unless the operand is *provably host* (an unknown
+operand on the engine's hot path is exactly the unaccounted bounce the
+rule exists for), while ``int()``/``float()``/``bool()`` coercions and
+``for`` iteration — overwhelmingly applied to host scalars — flag only
+on *device-evidenced* operands. No flow sensitivity: a name's taint is
+the merge of every assignment to it in the scope (two passes for
+forward references), where any device evidence wins and disagreement
+degrades to unknown.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+
+HOST = "host"
+DEVICE = "device"
+UNKNOWN = "unknown"
+
+# builtins whose results are host values regardless of argument
+HOST_BUILTINS = frozenset({
+    "len", "int", "float", "bool", "str", "repr", "bytes", "hash",
+    "sorted", "list", "tuple", "dict", "set", "frozenset", "sum",
+    "min", "max", "abs", "round", "range", "enumerate", "zip",
+    "isinstance", "getattr", "hasattr", "id", "format", "ord", "chr",
+})
+# repo functions whose return value is host by contract
+HOST_FUNCS = frozenset({"fetch"})
+# attributes that are host metadata even on device arrays
+META_ATTRS = frozenset({"shape", "ndim", "dtype", "size", "nbytes"})
+# method names that preserve their receiver's residency
+PROPAGATE_METHODS = frozenset({
+    "astype", "reshape", "ravel", "copy", "view", "sum", "max", "min",
+    "cumsum", "argsort", "take", "squeeze", "flatten", "rstrip",
+    "strip", "encode", "decode", "get",
+})
+
+_ANN_SCALARS = frozenset({
+    "int", "float", "bool", "str", "bytes", "complex", "None",
+    "Hashable", "object", "Any",
+})
+_ANN_CONTAINERS = frozenset({
+    "list", "List", "dict", "Dict", "tuple", "Tuple", "set", "Set",
+    "frozenset", "Sequence", "Iterable", "Iterator", "Mapping",
+    "Optional", "Union", "Callable",
+})
+_ANN_HOST_ARRAYS = frozenset({"np.ndarray", "numpy.ndarray",
+                              "ndarray"})
+
+
+def merge(a: str | None, b: str) -> str:
+    """Lattice merge over assignments: device evidence wins, agreement
+    holds, disagreement degrades to unknown."""
+    if a is None or a == b:
+        return b
+    if DEVICE in (a, b):
+        return DEVICE
+    return UNKNOWN
+
+
+@dataclass
+class ModuleInfo:
+    """Per-module alias context shared by every scope."""
+
+    np_names: set[str] = field(default_factory=lambda: {"numpy"})
+    jnp_names: set[str] = field(default_factory=set)
+
+    @classmethod
+    def collect(cls, tree: ast.AST) -> "ModuleInfo":
+        info = cls()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    bound = a.asname or a.name.split(".")[0]
+                    if a.name == "numpy":
+                        info.np_names.add(bound)
+                    elif a.name in ("jax.numpy", "jax"):
+                        info.jnp_names.add(a.asname or "jax")
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "jax":
+                    for a in node.names:
+                        if a.name == "numpy":
+                            info.jnp_names.add(a.asname or "numpy")
+        return info
+
+    def is_np(self, node: ast.expr) -> bool:
+        return isinstance(node, ast.Name) and node.id in self.np_names
+
+    def is_jnp(self, node: ast.expr) -> bool:
+        return isinstance(node, ast.Name) and node.id in self.jnp_names
+
+
+def _ann_taint(ann: ast.expr | None) -> str:
+    """Taint implied by a parameter annotation. Host only when every
+    named type is a scalar / scalar container / numpy array — a
+    ``list[Table]`` is a host container of device-holding objects and
+    must stay unknown."""
+    if ann is None:
+        return UNKNOWN
+    try:
+        s = ast.unparse(ann)
+    except Exception:  # pragma: no cover - unparse is total on 3.9+
+        return UNKNOWN
+    tokens = re.findall(r"[A-Za-z_][\w.]*", s)
+    if any(t.startswith(("jnp.", "jax.")) or t == "Array"
+           for t in tokens):
+        return DEVICE
+    ok = _ANN_SCALARS | _ANN_CONTAINERS | _ANN_HOST_ARRAYS
+    if tokens and all(t in ok for t in tokens):
+        return HOST
+    return UNKNOWN
+
+
+class ScopeTaint:
+    """Taint environment for one function (or module) scope."""
+
+    def __init__(self, info: ModuleInfo,
+                 parent_env: dict[str, str] | None = None):
+        self.info = info
+        self.env: dict[str, str] = dict(parent_env or {})
+        # previous-pass results (name lookup fallback during a pass)
+        self._prev: dict[str, str] = {}
+        # comprehension-local targets: Python scopes them to the
+        # comprehension, so they must not shadow real scope bindings
+        self._comp: dict[str, str] = {}
+
+    # ------------------------------------------------------------ build
+    def bind_params(self, fn: ast.FunctionDef | ast.AsyncFunctionDef
+                    ) -> None:
+        args = fn.args
+        for a in (*args.posonlyargs, *args.args, *args.kwonlyargs):
+            self.env[a.arg] = _ann_taint(a.annotation)
+        for a in (args.vararg, args.kwarg):
+            if a is not None:
+                self.env[a.arg] = HOST  # a tuple / dict object
+
+    def absorb(self, stmts: list[ast.stmt]) -> None:
+        """Merge the taint of every assignment in ``stmts`` (without
+        descending into nested function/class scopes). Each pass
+        rebuilds the env from the parameter/parent base — looking
+        names up in the previous pass's results — so a forward
+        reference resolved late can still upgrade to host/device
+        instead of sticking at unknown."""
+        base = dict(self.env)
+        prev: dict[str, str] = {}
+        for _ in range(2):
+            self._prev = prev
+            self.env = dict(base)
+            self._comp = {}
+            for node in _scope_walk(stmts):
+                self._absorb_node(node)
+            prev = self.env
+        self._prev = {}
+
+    def _absorb_node(self, node: ast.AST) -> None:
+        if isinstance(node, ast.Assign):
+            t = self.classify(node.value)
+            for target in node.targets:
+                self._bind_target(target, t, node.value)
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            ann = _ann_taint(node.annotation)
+            t = ann if ann != UNKNOWN else self.classify(node.value)
+            self._bind_target(node.target, t, node.value)
+        elif isinstance(node, ast.AugAssign):
+            if isinstance(node.target, ast.Name):
+                t = merge(self.classify(node.target),
+                          self.classify(node.value))
+                self._merge_name(node.target.id, t)
+        elif isinstance(node, (ast.For, ast.AsyncFor)):
+            t = self.classify(node.iter)
+            # iterating host yields host elements; device iteration is
+            # itself a SYNC violation and taints elements device
+            self._bind_target(node.target, t, None)
+        elif isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                if item.optional_vars is not None:
+                    self._bind_target(item.optional_vars, UNKNOWN, None)
+        elif isinstance(node, ast.NamedExpr):
+            if isinstance(node.target, ast.Name):
+                self._merge_name(node.target.id,
+                                 self.classify(node.value))
+
+    def _bind_target(self, target: ast.expr, taint: str,
+                     value: ast.expr | None,
+                     comp: bool = False) -> None:
+        if isinstance(target, ast.Name):
+            self._merge_name(target.id, taint, comp)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            elts: list[ast.expr | None]
+            if isinstance(value, (ast.Tuple, ast.List)) and \
+                    len(value.elts) == len(target.elts):
+                elts = list(value.elts)
+            else:
+                elts = [None] * len(target.elts)
+            for t_el, v_el in zip(target.elts, elts):
+                el_taint = self.classify(v_el) if v_el is not None \
+                    else taint
+                if isinstance(t_el, ast.Starred):
+                    t_el = t_el.value
+                self._bind_target(t_el, el_taint, None, comp)
+        # attribute / subscript targets: no name to bind
+
+    def _merge_name(self, name: str, taint: str,
+                    comp: bool = False) -> None:
+        if comp:
+            self._comp[name] = merge(self._comp.get(name), taint)
+        else:
+            self.env[name] = merge(self.env.get(name), taint)
+
+    # --------------------------------------------------------- classify
+    def classify(self, node: ast.expr | None) -> str:
+        if node is None:
+            return UNKNOWN
+        if isinstance(node, (ast.Constant, ast.JoinedStr,
+                             ast.FormattedValue, ast.Lambda)):
+            return HOST
+        if isinstance(node, (ast.List, ast.Tuple, ast.Set)):
+            # the container is host, but its *elements* carry their
+            # own taint — iterating or materialising a list of device
+            # columns still bounces
+            return self._merge_all(node.elts)
+        if isinstance(node, ast.Dict):
+            return self._merge_all([v for v in node.values
+                                    if v is not None])
+        if isinstance(node, (ast.ListComp, ast.SetComp,
+                             ast.GeneratorExp, ast.DictComp)):
+            return self._classify_comp(node)
+        if isinstance(node, ast.Name):
+            # comp overlay first: comprehension targets shadow the
+            # scope while a comprehension body is being classified
+            for scope in (self._comp, self.env, self._prev):
+                if node.id in scope:
+                    return scope[node.id]
+            # unresolved ALL_CAPS names: module constants (sentinels,
+            # np scalar constants) — host by convention
+            if node.id.isupper() or node.id.lstrip("_").isupper():
+                return HOST
+            return UNKNOWN
+        if isinstance(node, ast.Starred):
+            return self.classify(node.value)
+        if isinstance(node, ast.Attribute):
+            if self.info.is_np(node.value):
+                return HOST  # np.pi, np.int32, ...
+            if self.info.is_jnp(node.value):
+                return DEVICE
+            if node.attr in META_ATTRS:
+                return HOST
+            base = self.classify(node.value)
+            return base if base in (HOST, DEVICE) else UNKNOWN
+        if isinstance(node, ast.Subscript):
+            return self.classify(node.value)
+        if isinstance(node, ast.UnaryOp):
+            return self.classify(node.operand)
+        if isinstance(node, (ast.BinOp, ast.BoolOp, ast.Compare)):
+            return self._merge_operands(node)
+        if isinstance(node, ast.IfExp):
+            return merge(self.classify(node.body),
+                         self.classify(node.orelse))
+        if isinstance(node, ast.Call):
+            return self._classify_call(node)
+        return UNKNOWN
+
+    def _classify_comp(self, node: ast.expr) -> str:
+        """Element taint of a comprehension, with its targets bound in
+        a temporary overlay (they shadow the enclosing scope)."""
+        saved = self._comp
+        self._comp = dict(saved)
+        try:
+            for gen in node.generators:  # type: ignore[attr-defined]
+                self._bind_target(gen.target,
+                                  self.classify(gen.iter), None,
+                                  comp=True)
+            body = node.value if isinstance(node, ast.DictComp) \
+                else node.elt  # type: ignore[attr-defined]
+            return self.classify(body)
+        finally:
+            self._comp = saved
+
+    def bind_comp_targets(self, node: ast.expr) -> dict[str, str]:
+        """Bind a comprehension's targets into the overlay, returning
+        the previous overlay for the caller to restore."""
+        saved = self._comp
+        self._comp = dict(saved)
+        for gen in node.generators:  # type: ignore[attr-defined]
+            self._bind_target(gen.target, self.classify(gen.iter),
+                              None, comp=True)
+        return saved
+
+    def restore_comp_targets(self, saved: dict[str, str]) -> None:
+        self._comp = saved
+
+    def _merge_all(self, exprs: list[ast.expr]) -> str:
+        if not exprs:
+            return HOST
+        taints = [self.classify(e) for e in exprs]
+        if DEVICE in taints:
+            return DEVICE
+        if all(t == HOST for t in taints):
+            return HOST
+        return UNKNOWN
+
+    def _merge_operands(self, node: ast.expr) -> str:
+        if isinstance(node, ast.BinOp):
+            ops = [node.left, node.right]
+        elif isinstance(node, ast.BoolOp):
+            ops = list(node.values)
+        else:  # Compare
+            ops = [node.left, *node.comparators]  # type: ignore[attr-defined]
+        taints = [self.classify(o) for o in ops]
+        if DEVICE in taints:
+            return DEVICE
+        if all(t == HOST for t in taints):
+            return HOST
+        return UNKNOWN
+
+    def _classify_call(self, node: ast.Call) -> str:
+        fn = node.func
+        if isinstance(fn, ast.Name):
+            if fn.id in HOST_BUILTINS or fn.id in HOST_FUNCS:
+                return HOST
+            return UNKNOWN
+        if isinstance(fn, ast.Attribute):
+            if self.info.is_np(fn.value):
+                return HOST
+            if self.info.is_jnp(fn.value):
+                return DEVICE
+            if fn.attr in ("item", "tolist", "block_until_ready"):
+                return HOST if fn.attr != "block_until_ready" \
+                    else DEVICE
+            base = self.classify(fn.value)
+            if base == HOST:
+                return HOST
+            if base == DEVICE and fn.attr in PROPAGATE_METHODS:
+                return DEVICE
+            return UNKNOWN
+        return UNKNOWN
+
+
+COMP_NODES = (ast.ListComp, ast.SetComp, ast.DictComp,
+              ast.GeneratorExp)
+
+
+def _scope_walk(stmts: list[ast.stmt]):
+    """Walk statement bodies in source order without descending into
+    nested function / class definitions (separate scopes) or into
+    comprehensions (their targets shadow the scope; handled via the
+    comp overlay)."""
+    stack: list[ast.AST] = list(reversed(stmts))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef, *COMP_NODES)):
+            continue  # nested scope: handled separately
+        stack.extend(reversed(list(ast.iter_child_nodes(node))))
+
+
+def scope_env(info: ModuleInfo,
+              fn: ast.FunctionDef | ast.AsyncFunctionDef | None,
+              stmts: list[ast.stmt],
+              parent_env: dict[str, str] | None = None) -> ScopeTaint:
+    """Build the taint environment for one scope: bind parameters (if a
+    function), then merge every assignment in the body."""
+    taint = ScopeTaint(info, parent_env)
+    if fn is not None:
+        taint.bind_params(fn)
+    taint.absorb(stmts)
+    return taint

@@ -1,0 +1,87 @@
+"""SAL's checked-in policy data: the sync-site registry and the
+sanctioned choke points.
+
+This module is pure data and must stay importable standalone (no
+package-relative imports): ``tools/check_docs.py`` loads it by file
+path to cross-check ``SYNC_SITES`` against ``docs/kernels.md``.
+
+* ``SYNC_SITES`` — every string a ``fetch(_, site)`` / ``tick(site=)``
+  / ``fallback(site)`` call may name. The SITE rule fails on literals
+  missing here AND on stale entries no code names, so the registry is
+  exactly the set of live sync sites; ``docs/kernels.md`` must carry
+  the same set (enforced by ``tools/check_docs.py``).
+* ``SANCTIONED`` — ``path::qualname`` entries whose bodies the SYNC
+  rule skips: the choke points that *implement* host materialisation
+  (and are accounted elsewhere), plus host-side helpers whose inputs
+  are host arrays by construction. Functions that tick ``HOST_SYNCS``
+  or whose name ends in ``_np`` / ``_host`` are sanctioned implicitly
+  and do not need an entry.
+* ``WIDTH_EXEMPT`` — scopes the WIDTH rule skips: ``as_column`` is the
+  one place allowed to decide device uploads from runtime dtypes.
+* ``INT32_KERNEL_ENTRIES`` — kernel entry points whose key operands
+  are int32-coded; feeding them 64-bit values is the silent-truncation
+  bug class the WIDTH rule guards.
+"""
+from __future__ import annotations
+
+SYNC_SITES = {
+    # engine/exec.py — reference (host) operator paths
+    "sort_keys": "ORDER BY fetches its sort-key columns",
+    "predicate": "reference predicate fetches its operand column",
+    "join_gather": "reference join gathers payload columns",
+    "agg_keys": "reference aggregate fetches group-key columns",
+    "agg_values": "aggregate fetches the value column to reduce",
+    "sem_keys": "semantic operators fetch referenced key columns",
+    "union_concat": "UNION concatenates mixed host/device columns",
+    # engine/table.py — Table plumbing
+    "materialize": "Database.materialize pulls result columns to host",
+    "compact_host_cols": "host-kept columns gather via one HostIndex",
+    "num_valid": "Table.num_valid reads the device row count",
+    # kernels — device kernels returning host-visible results
+    "compact": "compact_index returns the surviving-row index",
+    "expand": "expand_segments materialises the row-repeat map",
+    "group_build": "group_build returns dedup group structures",
+    "group_build_columns": "column-code group build returns groups",
+    "group_key_codes": "per-column code assignment (host fallback)",
+    "group_build_collision": "exact-key rebuild after a hash collision",
+    "segment_reduce": "segmented reduction returns per-group values",
+    "join_keys": "join key columns fetch for encode / reference probe",
+    "join_build_keys": "device join probe pulls build-side keys",
+    "join_probe": "device join probe returns match lists",
+    # semantic — device verdict cache
+    "verdict_table": "VerdictTable.probe gathers cached verdicts",
+}
+
+SANCTIONED = frozenset({
+    # the engine's host<->device boundary: fetch IS the accounted sync
+    # choke point; as_column / LazyColumn / TextStore implement the
+    # host-or-device column representation itself
+    "src/repro/engine/table.py::fetch",
+    "src/repro/engine/table.py::as_column",
+    "src/repro/engine/table.py::LazyColumn",
+    "src/repro/engine/table.py::TextStore",
+    # kernel wrappers whose array params are host by construction
+    # (their device paths tick HOST_SYNCS and are implicitly exempt)
+    "src/repro/kernels/segmented_reduce/ops.py::segment_count",
+    "src/repro/kernels/segmented_reduce/ops.py::make_segment_plan",
+    "src/repro/kernels/segmented_reduce/ops.py::encode_join_keys",
+    "src/repro/kernels/hash_dedup/ops.py::dedup_representatives",
+    # pure-numpy property-test oracle (inputs are host by contract)
+    "src/repro/kernels/segmented_reduce/ref.py::segment_reduce_brute",
+    # semantic verdict table: probe ticks; _salted/bind re-code host
+    # uint32 hash arrays produced by dedup_representatives
+    "src/repro/semantic/cache.py::VerdictTable._salted",
+    "src/repro/semantic/cache.py::VerdictTable.bind",
+})
+
+WIDTH_EXEMPT = frozenset({
+    "src/repro/engine/table.py::as_column",
+})
+
+INT32_KERNEL_ENTRIES = frozenset({
+    "hash_rows",
+    "hash_rows_np",
+    "group_build",
+    "group_build_np",
+    "dedup_representatives",
+})

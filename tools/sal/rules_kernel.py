@@ -1,0 +1,320 @@
+"""KERNEL and JIT: the three-impl kernel contract and jit purity.
+
+KERNEL (project rule over ``src/repro/kernels/``):
+
+* every family directory ships the ``ops.py`` / ``ref.py`` /
+  ``<family>.py`` trio;
+* ``ops.py`` threads an ``impl=`` parameter on at least one entry
+  point;
+* ``ref.py`` exports an exact ``*_np`` numpy oracle (pragma families
+  whose documented oracle is the jnp reference);
+* the Pallas file (``<family>.py``) never imports numpy — kernel
+  bodies must stay traceable;
+* import integrity: every ``from <kernels module> import name`` in
+  ``src/repro`` names a symbol that module actually defines, so
+  deleting an oracle (or any kernel export) is a lint error before it
+  is an ImportError.
+
+JIT (file rule over ``src/repro/``): inside ``jax.jit``-ed functions
+and Pallas kernel bodies, no host numpy calls (trace-time dtype
+machinery like ``np.dtype`` / ``np.iinfo`` and scalar-type
+constructors are allowed), no ``.item()``, no ``print`` — all three
+either break tracing or silently de-optimise into per-trace host
+work.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from .core import (FileCtx, ProjectCtx, Violation, file_rule,
+                   project_rule)
+
+KERNELS_PKG = "src/repro/kernels"
+
+# numpy attributes that are legal inside traced code: static dtype
+# machinery and scalar-type constructors resolved at trace time
+NP_STATIC_OK = frozenset({
+    "dtype", "iinfo", "finfo", "issubdtype", "result_type",
+    "promote_types", "broadcast_shapes", "shape", "ndim",
+    "bool_", "int8", "int16", "int32", "int64",
+    "uint8", "uint16", "uint32", "uint64",
+    "float16", "float32", "float64", "bfloat16",
+    "integer", "floating", "number", "generic",
+})
+
+
+# ------------------------------------------------------------- KERNEL
+def _module_symbols(tree: ast.Module) -> set[str]:
+    """Top-level names a module defines (defs, classes, assignments,
+    imports) — the targets import-integrity checks against."""
+    out: set[str] = set()
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            out.add(node.name)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out.add(t.id)
+                elif isinstance(t, (ast.Tuple, ast.List)):
+                    out.update(e.id for e in t.elts
+                               if isinstance(e, ast.Name))
+        elif isinstance(node, ast.AnnAssign):
+            if isinstance(node.target, ast.Name):
+                out.add(node.target.id)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for a in node.names:
+                if a.name != "*":
+                    out.add(a.asname or a.name.split(".")[0])
+        elif isinstance(node, ast.If):
+            # TYPE_CHECKING / platform guards: both arms count
+            for sub in (*node.body, *node.orelse):
+                if isinstance(sub, (ast.FunctionDef, ast.ClassDef,
+                                    ast.AsyncFunctionDef)):
+                    out.add(sub.name)
+                elif isinstance(sub, ast.Assign):
+                    for t in sub.targets:
+                        if isinstance(t, ast.Name):
+                            out.add(t.id)
+                elif isinstance(sub, (ast.Import, ast.ImportFrom)):
+                    for a in sub.names:
+                        if a.name != "*":
+                            out.add(a.asname or a.name.split(".")[0])
+    return out
+
+
+def _resolve_import(rel: str, node: ast.ImportFrom) -> str | None:
+    """Repo-relative path of the module an ImportFrom targets, if it
+    can be resolved inside ``src/repro``; None otherwise."""
+    if node.level == 0:
+        mod = node.module or ""
+        if not mod.startswith("repro."):
+            return None
+        return "src/" + mod.replace(".", "/")
+    base = Path(rel).parent
+    for _ in range(node.level - 1):
+        base = base.parent
+    if node.module:
+        return (base / node.module.replace(".", "/")).as_posix()
+    return base.as_posix()
+
+
+def _has_impl_param(tree: ast.Module) -> bool:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            names = [a.arg for a in (*node.args.args,
+                                     *node.args.kwonlyargs)]
+            if "impl" in names:
+                return True
+    return False
+
+
+def _exports_np_oracle(tree: ast.Module) -> bool:
+    return any(name.endswith("_np") for name in _module_symbols(tree))
+
+
+@project_rule
+def rule_kernel(proj: ProjectCtx) -> list[Violation]:
+    out: list[Violation] = []
+    families: dict[str, dict[str, FileCtx]] = {}
+    for ctx in proj.files:
+        if not ctx.rel.startswith(KERNELS_PKG + "/"):
+            continue
+        parts = ctx.rel[len(KERNELS_PKG) + 1:].split("/")
+        if len(parts) == 2:  # kernels/<family>/<file>.py
+            families.setdefault(parts[0], {})[parts[1]] = ctx
+
+    for family, members in sorted(families.items()):
+        pallas_name = f"{family}.py"
+        for required in ("ops.py", "ref.py", pallas_name):
+            if required not in members:
+                anchor = members.get("ops.py") or \
+                    next(iter(members.values()))
+                out.append(Violation(
+                    anchor.rel, 1, "KERNEL",
+                    f"kernel family '{family}' is missing "
+                    f"{required} — every family ships the "
+                    f"ops.py/ref.py/{pallas_name} trio"))
+        ops = members.get("ops.py")
+        if ops is not None and not _has_impl_param(ops.tree):
+            out.append(Violation(
+                ops.rel, 1, "KERNEL",
+                "ops.py must thread an impl= parameter "
+                "(kernel|ref|host|auto dispatch)"))
+        ref = members.get("ref.py")
+        if ref is not None and not _exports_np_oracle(ref.tree):
+            out.append(Violation(
+                ref.rel, 1, "KERNEL",
+                "ref.py exports no *_np oracle — the exact numpy "
+                "reference is the contract's ground truth"))
+        pallas = members.get(pallas_name)
+        if pallas is not None:
+            for node in ast.walk(pallas.tree):
+                if isinstance(node, ast.Import):
+                    if any(a.name.split(".")[0] == "numpy"
+                           for a in node.names):
+                        out.append(Violation(
+                            pallas.rel, node.lineno, "KERNEL",
+                            "the Pallas file must not import numpy "
+                            "— kernel bodies stay traceable; host "
+                            "helpers belong in ops.py/ref.py"))
+                elif isinstance(node, ast.ImportFrom):
+                    if (node.module or "").split(".")[0] == "numpy":
+                        out.append(Violation(
+                            pallas.rel, node.lineno, "KERNEL",
+                            "the Pallas file must not import numpy "
+                            "— kernel bodies stay traceable; host "
+                            "helpers belong in ops.py/ref.py"))
+
+    out.extend(_check_import_integrity(proj))
+    return out
+
+
+def _check_import_integrity(proj: ProjectCtx) -> list[Violation]:
+    symbols: dict[str, set[str]] = {}
+    module_dirs: set[str] = set()
+    for ctx in proj.files:
+        if ctx.rel.startswith(KERNELS_PKG):
+            symbols[ctx.rel[:-3]] = _module_symbols(ctx.tree)
+            module_dirs.add(str(Path(ctx.rel).parent.as_posix()))
+    out: list[Violation] = []
+    for ctx in proj.files:
+        if not ctx.rel.startswith("src/repro/"):
+            continue
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ImportFrom):
+                continue
+            target = _resolve_import(ctx.rel, node)
+            if target is None or not target.startswith(KERNELS_PKG):
+                continue
+            if target in symbols:
+                table = symbols[target]
+                for a in node.names:
+                    if a.name != "*" and a.name not in table:
+                        out.append(Violation(
+                            ctx.rel, node.lineno, "KERNEL",
+                            f"import of '{a.name}' from "
+                            f"{target}.py: no such symbol — kernel "
+                            f"exports (oracles included) must "
+                            f"exist"))
+            elif target in module_dirs or \
+                    (target + "/__init__") in symbols:
+                for a in node.names:
+                    sub = f"{target}/{a.name}"
+                    if a.name != "*" and sub not in symbols and \
+                            sub not in module_dirs:
+                        out.append(Violation(
+                            ctx.rel, node.lineno, "KERNEL",
+                            f"import of '{a.name}' from package "
+                            f"{target}: no such submodule"))
+    return out
+
+
+# ---------------------------------------------------------------- JIT
+def _collect_defs(tree: ast.Module) -> dict[str, ast.AST]:
+    defs: dict[str, ast.AST] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs[node.name] = node
+    return defs
+
+
+def _is_jit_expr(node: ast.expr) -> bool:
+    """jax.jit / jit / partial(jax.jit, ...)-style expressions."""
+    if isinstance(node, ast.Attribute) and node.attr == "jit":
+        return True
+    if isinstance(node, ast.Name) and node.id == "jit":
+        return True
+    if isinstance(node, ast.Call) and _is_partial(node.func) \
+            and node.args:
+        return _is_jit_expr(node.args[0])
+    return False
+
+
+def _is_partial(node: ast.expr) -> bool:
+    return (isinstance(node, ast.Name) and node.id == "partial") or \
+        (isinstance(node, ast.Attribute) and node.attr == "partial")
+
+
+def _jit_targets(tree: ast.Module) -> set[str]:
+    """Names of defs evidenced to run under jit or as pallas kernel
+    bodies in this module."""
+    defs = _collect_defs(tree)
+    # name -> name it forwards to through functools.partial(...)
+    partial_of: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and isinstance(node.value, ast.Call) \
+                and _is_partial(node.value.func) and node.value.args \
+                and isinstance(node.value.args[0], ast.Name):
+            partial_of[node.targets[0].id] = node.value.args[0].id
+
+    def resolve(name: str) -> str | None:
+        seen = set()
+        while name in partial_of and name not in seen:
+            seen.add(name)
+            name = partial_of[name]
+        return name if name in defs else None
+
+    targets: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(_is_jit_expr(d) for d in node.decorator_list):
+                targets.add(node.name)
+        elif isinstance(node, ast.Call):
+            if _is_jit_expr(node.func) and node.args and \
+                    isinstance(node.args[0], ast.Name):
+                got = resolve(node.args[0].id)
+                if got:
+                    targets.add(got)
+            elif (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "pallas_call" and node.args):
+                first = node.args[0]
+                if isinstance(first, ast.Name):
+                    got = resolve(first.id)
+                    if got:
+                        targets.add(got)
+                elif isinstance(first, ast.Call) and \
+                        _is_partial(first.func) and first.args and \
+                        isinstance(first.args[0], ast.Name):
+                    got = resolve(first.args[0].id)
+                    if got:
+                        targets.add(got)
+    return targets
+
+
+@file_rule
+def rule_jit(ctx: FileCtx) -> list[Violation]:
+    if not ctx.in_dir("src/repro/"):
+        return []
+    from .hostflow import ModuleInfo
+    info = ModuleInfo.collect(ctx.tree)
+    defs = _collect_defs(ctx.tree)
+    out: list[Violation] = []
+    for name in sorted(_jit_targets(ctx.tree)):
+        fn = defs[name]
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if isinstance(f, ast.Attribute) and info.is_np(f.value) \
+                    and f.attr not in NP_STATIC_OK:
+                out.append(Violation(
+                    ctx.rel, node.lineno, "JIT",
+                    f"np.{f.attr} inside jit/pallas body '{name}' — "
+                    f"host numpy does not trace; use jnp or hoist "
+                    f"to the caller"))
+            elif isinstance(f, ast.Attribute) and f.attr == "item" \
+                    and not node.args:
+                out.append(Violation(
+                    ctx.rel, node.lineno, "JIT",
+                    f".item() inside jit/pallas body '{name}' — "
+                    f"forces a trace-breaking sync"))
+            elif isinstance(f, ast.Name) and f.id == "print":
+                out.append(Violation(
+                    ctx.rel, node.lineno, "JIT",
+                    f"print() inside jit/pallas body '{name}' — "
+                    f"runs at trace time only; use jax.debug.print"))
+    return out

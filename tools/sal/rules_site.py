@@ -1,0 +1,109 @@
+"""SITE: every sync-site literal is registered, every registry entry
+is live.
+
+``fetch(_, "site")``, ``HOST_SYNCS.tick(site="site")`` and
+``HOST_SYNCS.fallback("site")`` name the accounting buckets the cost
+model and the bench gates reason about; a typo'd or ad-hoc site
+silently escapes the sync budget. The rule checks both directions
+against ``tools/sal/registry.py``:
+
+* (file rule) every string literal passed as a site must be a
+  ``SYNC_SITES`` key;
+* (project rule) every ``SYNC_SITES`` key must be named by at least
+  one call site in ``src/repro`` — stale entries rot the docs table
+  ``tools/check_docs.py`` cross-checks.
+
+Non-literal site arguments (variables) are skipped: the definition of
+``fetch`` itself forwards a parameter.
+"""
+from __future__ import annotations
+
+import ast
+
+from .core import FileCtx, ProjectCtx, Violation, file_rule, \
+    project_rule
+from .registry import SYNC_SITES
+
+
+def _site_literals(ctx: FileCtx) -> list[tuple[int, str]]:
+    """(line, site) for every literal site argument in the file."""
+    out: list[tuple[int, str]] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        site: ast.expr | None = None
+        if isinstance(fn, ast.Name) and fn.id == "fetch":
+            site = node.args[1] if len(node.args) >= 2 else None
+            for kw in node.keywords:
+                if kw.arg == "site":
+                    site = kw.value
+        elif isinstance(fn, ast.Attribute) and fn.attr == "tick":
+            site = node.args[1] if len(node.args) >= 2 else None
+            for kw in node.keywords:
+                if kw.arg == "site":
+                    site = kw.value
+        elif isinstance(fn, ast.Attribute) and fn.attr == "fallback":
+            site = node.args[0] if node.args else None
+            for kw in node.keywords:
+                if kw.arg == "site":
+                    site = kw.value
+        if isinstance(site, ast.Constant) and \
+                isinstance(site.value, str):
+            out.append((node.lineno, site.value))
+    return out
+
+
+@file_rule
+def rule_site(ctx: FileCtx) -> list[Violation]:
+    if not ctx.in_dir("src/repro/"):
+        return []
+    out: list[Violation] = []
+    for line, site in _site_literals(ctx):
+        if site not in SYNC_SITES:
+            out.append(Violation(
+                ctx.rel, line, "SITE",
+                f"sync site '{site}' is not registered — add it to "
+                f"tools/sal/registry.py::SYNC_SITES and document it "
+                f"in docs/kernels.md"))
+    return out
+
+
+def _registry_key_lines() -> dict[str, int]:
+    """Line number of each SYNC_SITES key in the registry source, so
+    stale-entry violations anchor to the entry itself."""
+    from pathlib import Path
+    reg_path = Path(__file__).resolve().parent / "registry.py"
+    try:
+        tree = ast.parse(reg_path.read_text())
+    except (OSError, SyntaxError):  # pragma: no cover
+        return {}
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and \
+                isinstance(node.targets[0], ast.Name) and \
+                node.targets[0].id == "SYNC_SITES" and \
+                isinstance(node.value, ast.Dict):
+            return {k.value: k.lineno for k in node.value.keys
+                    if isinstance(k, ast.Constant)}
+    return {}
+
+
+@project_rule
+def rule_site_registry_live(proj: ProjectCtx) -> list[Violation]:
+    used: set[str] = set()
+    for ctx in proj.files:
+        if ctx.rel.startswith("src/repro/"):
+            used.update(site for _ln, site in _site_literals(ctx))
+    if proj.get("src/repro/engine/table.py") is None:
+        return []  # a fixture tree, not the repo: staleness is a
+        # whole-repo invariant anchored at the fetch choke point
+    lines = _registry_key_lines()
+    out: list[Violation] = []
+    for site in sorted(set(SYNC_SITES) - used):
+        out.append(Violation(
+            "tools/sal/registry.py", lines.get(site, 1), "SITE",
+            f"registered sync site '{site}' is named by no "
+            f"fetch/tick/fallback call in src/repro — stale entries "
+            f"must be removed (docs/kernels.md mirrors the "
+            f"registry)"))
+    return out

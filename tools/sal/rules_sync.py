@@ -1,0 +1,290 @@
+"""SYNC and WIDTH: the host-bounce and dtype-width rules.
+
+SYNC scope: ``src/repro/engine/``, ``src/repro/kernels/``,
+``src/repro/semantic/`` — the layers whose host↔device traffic the
+cost model accounts. Flags, per non-sanctioned scope:
+
+* ``np.asarray`` / ``np.array`` / ``np.ascontiguousarray`` /
+  ``np.unique`` / ``np.repeat`` / ``np.isin`` whose first operand is
+  not provably host;
+* ``.item()`` on a non-host value;
+* ``int()`` / ``float()`` / ``bool()`` on a device-evidenced value;
+* ``for``-iteration (and comprehension iteration) over a
+  device-evidenced value.
+
+A scope is sanctioned — its body skipped — when it ticks
+``HOST_SYNCS`` (``tick``/``fallback``), its name ends in ``_np`` /
+``_host`` (the numpy-oracle convention), or ``registry.SANCTIONED``
+lists its ``path::qualname`` (or an enclosing class). Everything else
+must route bounces through ``engine/table.py::fetch`` with a
+registered site, or carry a pragma with a reason.
+
+WIDTH guards the silent-truncation bug class: 64-bit / string values
+reaching ``jnp.asarray`` (device upload) or the int32-coded kernel
+entry points without going through ``as_column``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from .core import FileCtx, Violation, file_rule
+from .hostflow import DEVICE, HOST, ModuleInfo, scope_env
+from .registry import INT32_KERNEL_ENTRIES, SANCTIONED, WIDTH_EXEMPT
+
+SYNC_DIRS = ("src/repro/engine/", "src/repro/kernels/",
+             "src/repro/semantic/")
+
+MATERIALIZERS = frozenset({"asarray", "array", "ascontiguousarray",
+                           "unique", "repeat", "isin"})
+COERCIONS = frozenset({"int", "float", "bool"})
+_WIDE_TOKENS = frozenset({"int64", "float64", "uint64", "str_",
+                          "object_", "longlong"})
+
+
+# ------------------------------------------------------------- scopes
+def iter_scopes(ctx: FileCtx) -> Iterator[tuple[str, ast.AST,
+                                                list[ast.stmt]]]:
+    """Yield (qualname, node, body) for the module scope, every class
+    body and every function, depth-first."""
+    yield "<module>", ctx.tree, ctx.tree.body
+
+    def walk(body: list[ast.stmt], prefix: str):
+        for node in body:
+            if isinstance(node, (ast.FunctionDef,
+                                 ast.AsyncFunctionDef)):
+                qual = f"{prefix}{node.name}"
+                yield qual, node, node.body
+                yield from walk(node.body, qual + ".")
+            elif isinstance(node, ast.ClassDef):
+                qual = f"{prefix}{node.name}"
+                yield qual, node, node.body
+                yield from walk(node.body, qual + ".")
+            else:
+                for sub in ast.walk(node):
+                    if isinstance(sub, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                        qual = f"{prefix}{sub.name}"
+                        yield qual, sub, sub.body
+                        yield from walk(sub.body, qual + ".")
+
+    yield from walk(ctx.tree.body, "")
+
+
+def _ticks_syncs(node: ast.AST) -> bool:
+    """True if the scope's body (including nested defs) calls
+    ``HOST_SYNCS.tick`` / ``HOST_SYNCS.fallback``."""
+    for sub in ast.walk(node):
+        if (isinstance(sub, ast.Call)
+                and isinstance(sub.func, ast.Attribute)
+                and sub.func.attr in ("tick", "fallback")
+                and isinstance(sub.func.value, ast.Name)
+                and sub.func.value.id == "HOST_SYNCS"):
+            return True
+    return False
+
+
+def sanctioned_scopes(ctx: FileCtx, registry: frozenset[str]
+                      ) -> set[str]:
+    """Qualnames whose bodies the SYNC rule skips, with lexical
+    inheritance (a def nested in a sanctioned scope is sanctioned)."""
+    out: set[str] = set()
+    for qual, node, _body in iter_scopes(ctx):
+        if qual == "<module>":
+            continue
+        enclosing = qual.rsplit(".", 1)[0] if "." in qual else None
+        name = qual.rsplit(".", 1)[-1]
+        if (f"{ctx.rel}::{qual}" in registry
+                or name.endswith(("_np", "_host"))
+                or (enclosing is not None and enclosing in out)
+                or _ticks_syncs(node)):
+            out.add(qual)
+    return out
+
+
+_COMP_NODES = (ast.ListComp, ast.SetComp, ast.DictComp,
+               ast.GeneratorExp)
+
+
+def _scope_stmt_walk(nodes: list[ast.AST],
+                     enter_comps: bool = False) -> Iterator[ast.AST]:
+    """Walk nodes without entering nested defs/classes (separate
+    scopes with their own sanction state). Comprehensions are skipped
+    by default (SYNC checks them under their own target bindings);
+    the syntactic WIDTH rule walks straight through them."""
+    stack: list[ast.AST] = list(nodes)
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue  # nested scope: checked on its own
+        if not enter_comps and isinstance(node, _COMP_NODES):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+# ---------------------------------------------------------------- SYNC
+@file_rule
+def rule_sync(ctx: FileCtx) -> list[Violation]:
+    if not ctx.in_dir(*SYNC_DIRS):
+        return []
+    info = ModuleInfo.collect(ctx.tree)
+    sanctioned = sanctioned_scopes(ctx, SANCTIONED)
+    out: list[Violation] = []
+    envs: dict[str, dict[str, str]] = {}
+    for qual, node, body in iter_scopes(ctx):
+        parent = qual.rsplit(".", 1)[0] if "." in qual else \
+            ("<module>" if qual != "<module>" else None)
+        fn = node if isinstance(node, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)) else None
+        taint = scope_env(info, fn, body, envs.get(parent))
+        envs[qual] = taint.env
+        if fn is None and qual != "<module>":
+            continue  # class bodies: methods checked individually
+        if qual in sanctioned:
+            continue
+        out.extend(_check_scope(ctx, info, taint, body))
+    return out
+
+
+def _check_scope(ctx: FileCtx, info: ModuleInfo, taint, body
+                 ) -> list[Violation]:
+    out: list[Violation] = []
+
+    def flag(node: ast.AST, msg: str) -> None:
+        out.append(Violation(ctx.rel, node.lineno, "SYNC", msg))
+
+    for node in _scope_stmt_walk(body):
+        if isinstance(node, ast.Call):
+            fn = node.func
+            if (isinstance(fn, ast.Attribute) and info.is_np(fn.value)
+                    and fn.attr in MATERIALIZERS and node.args):
+                if taint.classify(node.args[0]) != HOST:
+                    flag(node,
+                         f"np.{fn.attr} on a value not provably host "
+                         f"— route through engine/table.py::fetch "
+                         f"with a registered site (or pragma with a "
+                         f"reason)")
+            elif (isinstance(fn, ast.Attribute) and fn.attr == "item"
+                    and not node.args):
+                if taint.classify(fn.value) != HOST:
+                    flag(node,
+                         ".item() on a value not provably host — one "
+                         "hidden device->host sync per call")
+            elif (isinstance(fn, ast.Name) and fn.id in COERCIONS
+                    and len(node.args) == 1):
+                if taint.classify(node.args[0]) == DEVICE:
+                    flag(node,
+                         f"{fn.id}() coercion of a device value "
+                         f"blocks on the device — fetch first")
+        elif isinstance(node, (ast.For, ast.AsyncFor)):
+            if taint.classify(node.iter) == DEVICE:
+                flag(node,
+                     "iterating a device value syncs once per "
+                     "element — fetch the column first")
+        elif isinstance(node, _COMP_NODES):
+            for gen in node.generators:
+                if taint.classify(gen.iter) == DEVICE:
+                    flag(gen.iter,
+                         "comprehension over a device value syncs "
+                         "once per element — fetch the column first")
+            saved = taint.bind_comp_targets(node)
+            inner: list[ast.AST] = [g.iter for g in node.generators]
+            inner += [i for g in node.generators for i in g.ifs]
+            if isinstance(node, ast.DictComp):
+                inner += [node.key, node.value]
+            else:
+                inner.append(node.elt)
+            out.extend(_check_scope(ctx, info, taint, inner))
+            taint.restore_comp_targets(saved)
+    return out
+
+
+# --------------------------------------------------------------- WIDTH
+def _has_wide_token(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr in _WIDE_TOKENS:
+            return True
+        if isinstance(sub, ast.Name) and sub.id in _WIDE_TOKENS:
+            return True
+        if (isinstance(sub, ast.Constant) and isinstance(sub.value, str)
+                and sub.value in _WIDE_TOKENS):
+            return True
+    return False
+
+
+def _dtype_arg(node: ast.Call) -> ast.expr | None:
+    for kw in node.keywords:
+        if kw.arg == "dtype":
+            return kw.value
+    if len(node.args) >= 2:
+        return node.args[1]
+    return None
+
+
+@file_rule
+def rule_width(ctx: FileCtx) -> list[Violation]:
+    if not ctx.in_dir(*SYNC_DIRS):
+        return []
+    info = ModuleInfo.collect(ctx.tree)
+    exempt: set[str] = set()
+    for qual, _node, _body in iter_scopes(ctx):
+        enclosing = qual.rsplit(".", 1)[0] if "." in qual else None
+        if (f"{ctx.rel}::{qual}" in WIDTH_EXEMPT
+                or (enclosing is not None and enclosing in exempt)):
+            exempt.add(qual)
+    out: list[Violation] = []
+
+    def flag(node: ast.AST, msg: str) -> None:
+        out.append(Violation(ctx.rel, node.lineno, "WIDTH", msg))
+
+    for qual, scope_node, body in iter_scopes(ctx):
+        if qual in exempt:
+            continue
+        if not isinstance(scope_node, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)) \
+                and qual != "<module>":
+            continue
+        for node in _scope_stmt_walk(body, enter_comps=True):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            if (isinstance(fn, ast.Attribute) and info.is_jnp(fn.value)
+                    and fn.attr in ("asarray", "array") and node.args):
+                dtype = _dtype_arg(node)
+                if dtype is not None:
+                    if _has_wide_token(dtype):
+                        flag(node,
+                             f"jnp.{fn.attr} with a 64-bit dtype — "
+                             f"device columns are 32-bit; go through "
+                             f"as_column")
+                    continue
+                arg = node.args[0]
+                if (isinstance(arg, ast.Call)
+                        and isinstance(arg.func, ast.Attribute)
+                        and info.is_np(arg.func.value)
+                        and arg.func.attr in ("asarray", "array",
+                                              "ascontiguousarray")
+                        and _dtype_arg(arg) is None):
+                    flag(node,
+                         f"jnp.{fn.attr} of an unknown-width host "
+                         f"array — int64/str silently truncate; use "
+                         f"as_column or an explicit narrow dtype")
+                elif isinstance(arg, (ast.List, ast.ListComp)):
+                    flag(node,
+                         f"jnp.{fn.attr} of a Python list defaults "
+                         f"to 64-bit weak types — use as_column or "
+                         f"an explicit narrow dtype")
+                elif _has_wide_token(arg):
+                    flag(node,
+                         f"jnp.{fn.attr} of a 64-bit/string value — "
+                         f"silent truncation; use as_column")
+            elif (isinstance(fn, ast.Name)
+                    and fn.id in INT32_KERNEL_ENTRIES
+                    and any(_has_wide_token(a) for a in node.args)):
+                flag(node,
+                     f"{fn.id}() is an int32-coded kernel entry — "
+                     f"64-bit keys truncate; encode via as_column "
+                     f"first")
+    return out
