@@ -157,8 +157,11 @@ def main(argv=None) -> int:
     # device-resident pipeline sync gate (deterministic — smoke included)
     pipe = pipeline_pass(db, plan, results["per-row"][1],
                          results["per-row"][2])
+    # the shared DEVICE_SITES list covers the join family too: any
+    # hash_join host-oracle serving here is a fallback violation
     print(f"device pipeline: pipeline_syncs={pipe['pipeline_syncs']} "
           f"(max {PIPELINE_SYNCS_MAX})  "
+          f"join_physical={pipe['join_physical']}  "
           f"by_site={pipe['host_syncs']['by_site']}  "
           f"fallback_violations={pipe['fallback_violations']}")
 

@@ -5,16 +5,21 @@ equi-joins.
 The workload is the regime where the O(G*N) per-group loop blows up:
 100k+ input rows with 10k+ distinct groups, several aggregate columns
 (each reference group runs ``np.nonzero(inverse == gi)`` per aggregate).
-The join side measures a fan-out probe over a hash-grouped build side.
+The join side measures a fan-out probe through the open-addressing
+hash join (``kernels/hash_join``, docs/joins.md) — O(N) build + probe
+against the reference's O(N log N) sort + searchsorted.
 
     PYTHONPATH=src python benchmarks/bench_relational_path.py \
         [--rows 120000] [--groups 12000] [--repeats 3] [--smoke] [--json P]
 
 Acceptance gates: >= 5x on the grouped-aggregate path at >= 100k rows
-and >= 10k groups, and — deterministic, so checked in smoke mode too —
-the device-resident pipeline (``kernel_impl="ref"``: the exact TPU
-routing, on CPU) stays within the ``pipeline_syncs`` budget with zero
-host ``np.nonzero``/searchsorted/``np.repeat``/``np.unique`` fallbacks.
+and >= 10k groups, >= 2x on the equi-join at 120k x 60k rows, and —
+deterministic, so checked in smoke mode too — the device-resident
+pipeline (``kernel_impl="ref"``: the exact TPU routing, on CPU) stays
+within the ``pipeline_syncs`` budget (the join query within its own
+<= PIPELINE_SYNCS_JOIN_MAX bound) with zero host
+``np.nonzero``/searchsorted/``np.repeat``/``np.unique`` fallbacks —
+in particular zero ``hash_join`` host-oracle servings.
 ``--smoke`` shrinks the workload for CI and only fails on crash, result
 mismatch or the sync gate, never on timing; both modes write a
 ``BENCH_relational_path.json`` artifact, and full-size runs additionally
@@ -38,9 +43,14 @@ from repro.engine import Database, Executor, result_f1  # noqa: E402
 from repro.kernels.sync import HOST_SYNCS  # noqa: E402
 from repro.semantic import OracleBackend, SemanticRunner  # noqa: E402
 
-from pipeline_gate import PIPELINE_SYNCS_MAX, gate_result  # noqa: E402
+from pipeline_gate import (  # noqa: E402
+    PIPELINE_SYNCS_JOIN_MAX,
+    PIPELINE_SYNCS_MAX,
+    gate_result,
+)
 
 AGG_SPEEDUP_GATE = 5.0
+JOIN_SPEEDUP_GATE = 2.0
 
 
 def build_db(rows: int, groups: int, fanout_rows: int) -> Database:
@@ -84,7 +94,7 @@ def run_once(db, plan, vectorized: bool):
     return table, stats, HOST_SYNCS.snapshot()
 
 
-def pipeline_pass(db, plan, out_cols, ref_rows) -> dict:
+def pipeline_pass(db, plan, out_cols, ref_rows, max_syncs=None) -> dict:
     """One run with the device-resident pipeline forced on
     (``kernel_impl="ref"`` — the exact accelerator routing, on CPU):
     counts the device→host syncs the whole plan performs, checks result
@@ -99,7 +109,7 @@ def pipeline_pass(db, plan, out_cols, ref_rows) -> dict:
     f1 = result_f1(ref_rows, rows)
     if f1 != 1.0:
         raise AssertionError(f"device-pipeline result mismatch (f1={f1})")
-    return gate_result(stats, snap)
+    return gate_result(stats, snap, max_syncs=max_syncs)
 
 
 def bench(db, plan, out_cols, repeats: int) -> dict:
@@ -168,17 +178,21 @@ def main(argv=None) -> int:
             agg.pop("_ref_rows")),
         "join": pipeline_pass(db, join_plan(),
                               ["probes.probe_id", "facts.fact_id"],
-                              join.pop("_ref_rows")),
+                              join.pop("_ref_rows"),
+                              max_syncs=PIPELINE_SYNCS_JOIN_MAX),
     }
     pipe_ok = all(p["pass"] for p in pipe.values())
     for name, p in pipe.items():
         print(f"{name} device pipeline: pipeline_syncs="
-              f"{p['pipeline_syncs']} (max {PIPELINE_SYNCS_MAX})  "
+              f"{p['pipeline_syncs']} (max {p['pipeline_syncs_max']})  "
+              f"join_physical={p['join_physical']}  "
               f"by_site={p['host_syncs']['by_site']}  "
               f"fallback_violations={p['fallback_violations']}")
 
     gated = not args.smoke
-    ok = (not gated or agg["speedup"] >= AGG_SPEEDUP_GATE) and pipe_ok
+    ok = (not gated or (agg["speedup"] >= AGG_SPEEDUP_GATE
+                        and join["speedup"] >= JOIN_SPEEDUP_GATE)) \
+        and pipe_ok
     out = {
         "name": "relational_path",
         "command": "python benchmarks/bench_relational_path.py",
@@ -189,7 +203,9 @@ def main(argv=None) -> int:
         "join": join,
         "pipeline": pipe,
         "gate": {"aggregate_speedup_min": AGG_SPEEDUP_GATE if gated else None,
+                 "join_speedup_min": JOIN_SPEEDUP_GATE if gated else None,
                  "pipeline_syncs_max": PIPELINE_SYNCS_MAX,
+                 "pipeline_syncs_join_max": PIPELINE_SYNCS_JOIN_MAX,
                  "pass": ok},
     }
     args.json.parent.mkdir(parents=True, exist_ok=True)
@@ -207,6 +223,9 @@ def main(argv=None) -> int:
         if gated and agg["speedup"] < AGG_SPEEDUP_GATE:
             print(f"FAIL: aggregate speedup {agg['speedup']:.2f}x < "
                   f"{AGG_SPEEDUP_GATE}x", file=sys.stderr)
+        if gated and join["speedup"] < JOIN_SPEEDUP_GATE:
+            print(f"FAIL: join speedup {join['speedup']:.2f}x < "
+                  f"{JOIN_SPEEDUP_GATE}x", file=sys.stderr)
         if not pipe_ok:
             detail = {k: (p["pipeline_syncs"], p["fallback_violations"])
                       for k, p in pipe.items()}

@@ -11,21 +11,31 @@ from __future__ import annotations
 # device-pipeline budget: one group_build(+codes) fetch per grouped
 # operator, one probe-total scalar per join, one segment_reduce per
 # device-reducible aggregate column, one num_valid per stats bump —
-# measured 5 (aggregate) / 3 (join) / 5 (dedup) at 120k rows; small
+# measured 5 (aggregate) / 1 (join) / 5 (dedup) at 120k rows; small
 # headroom for workload growth, not slack for regressions
 PIPELINE_SYNCS_MAX = 10
 
+# join-only budget: the hash join costs exactly one sync (the match
+# total) plus at most a couple of num_valid stats scalars — a join
+# query drifting past this has re-grown a per-stage host round-trip
+PIPELINE_SYNCS_JOIN_MAX = 3
+
 # host-numpy fallback sites that must stay silent on the device pipeline
-DEVICE_SITES = ("compact", "join_probe", "expand", "group_key_codes",
-                "group_build")
+DEVICE_SITES = ("compact", "join_probe", "hash_join", "expand",
+                "group_key_codes", "group_build")
 
 
-def gate_result(stats, snap: dict) -> dict:
+def gate_result(stats, snap: dict, *, max_syncs: int | None = None) -> dict:
     """Assemble the JSON-ready gate record for one device-pipeline run:
-    the query's sync count, the full snapshot, any device-site fallback
-    violations and the combined pass verdict."""
+    the query's sync count, the full snapshot, which physical join(s)
+    served the query, any device-site fallback violations and the
+    combined pass verdict. ``max_syncs`` tightens the budget for
+    queries with a per-shape bound (joins)."""
+    budget = PIPELINE_SYNCS_MAX if max_syncs is None else max_syncs
     bad = [s for s in DEVICE_SITES if s in snap["host_fallbacks"]]
     return {"pipeline_syncs": stats.pipeline_syncs,
+            "pipeline_syncs_max": budget,
+            "join_physical": dict(stats.join_physical),
             "host_syncs": snap,
             "fallback_violations": bad,
-            "pass": stats.pipeline_syncs <= PIPELINE_SYNCS_MAX and not bad}
+            "pass": stats.pipeline_syncs <= budget and not bad}

@@ -21,6 +21,7 @@ by the DP itself (§5 'function caching is not free').
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -45,6 +46,10 @@ DEFAULT_SF_SELECTIVITY = 0.2
 DEFAULT_JOIN_DISTINCT_SELECTIVITY = 0.1
 DEFAULT_REL_FILTER_SELECTIVITY = 0.25
 
+# physical equi-join operators, in deterministic tie-break order (the
+# executor implements them in engine/exec.py::_equi_join)
+JOIN_PHYSICAL_OPS = ("hash", "sort_merge", "host")
+
 
 @dataclass
 class CostParams:
@@ -58,6 +63,15 @@ class CostParams:
     # §5: charge one cache probe per row reaching a pulled-up filter.
     # False reproduces §4.2's formulas verbatim (no probe term).
     charge_probe_cost: bool = True
+    # --- physical join selection (docs/joins.md, docs/cost_model.md) ---
+    # c(u) of a Join becomes the min-cost physical operator's row model;
+    # False keeps the flat rows-in + rows-out term of earlier revisions.
+    price_physical_joins: bool = True
+    # hash build weight: table insert + regroup passes over the build
+    # side (vs one probe pass per probe row)
+    w_hash_build: float = 2.0
+    # host-oracle penalty per row: device→host transfer + code space
+    w_host_join: float = 8.0
 
     def s_of(self, sf_id: int, hint: Optional[float] = None) -> float:
         if sf_id in self.sf_selectivity:
@@ -117,12 +131,68 @@ class Estimator:
             return sum(self.card(c) for c in node.children)
         raise TypeError(f"unknown node {type(node)}")
 
+    # -- physical join selection ----------------------------------------------
+    def grouped_on(self, node: Node, key: str) -> bool:
+        """True when ``node``'s output is guaranteed to arrive grouped
+        (ascending) by ``key`` — the static mirror of the executor's
+        ``Table.sorted_by`` metadata. Aggregate outputs ascend by their
+        first group key (``np.unique`` order), ascending sorts by their
+        primary key; filters, projections (key kept) and semantic
+        operators preserve row order."""
+        if isinstance(node, Aggregate):
+            return bool(node.group_by) and node.group_by[0] == key
+        if isinstance(node, Sort):
+            return bool(node.keys) and node.keys[0] == (key, False)
+        if isinstance(node, (Filter, SemanticFilter, SemanticProject)):
+            return self.grouped_on(node.children[0], key)
+        if isinstance(node, Project):
+            return key in node.cols and self.grouped_on(node.children[0],
+                                                        key)
+        return False
+
+    def join_physical_costs(self, node: Join) -> dict[str, float]:
+        """Row-model cost of each physical operator for this join
+        (probe side = left child, build side = right child):
+
+        * ``hash``       —  |L| + w_hash_build·|R| + |out| : one probe
+          pass, table insert + regroup passes over the build side;
+        * ``sort_merge`` —  |L|·log2|R| + |R|·log2|R| + |out|, with the
+          build-side sort term DISCOUNTED to a linear |R| touch when
+          the input is already grouped by the key (an aggregate or
+          ascending-sort output — ``grouped_on``);
+        * ``host``       —  w_host_join·(|L| + |R|) + |out| : the
+          searchsorted oracle plus its device→host transfers.
+        """
+        lc = self.card(node.children[0])
+        rc = self.card(node.children[1])
+        out = self.card(node)
+        p = self.params
+        lg_b = math.log2(max(rc, 2.0))
+        presorted = self.grouped_on(node.children[1], node.right_key)
+        return {
+            "hash": lc + p.w_hash_build * rc + out,
+            "sort_merge": lc * lg_b + (rc if presorted else rc * lg_b)
+            + out,
+            "host": p.w_host_join * (lc + rc) + out,
+        }
+
+    def choose_join_physical(self, node: Join) -> tuple[str, float]:
+        """Min-cost physical operator for ``node`` and its cost, ties
+        broken in ``JOIN_PHYSICAL_OPS`` order (hash first)."""
+        costs = self.join_physical_costs(node)
+        best = min(JOIN_PHYSICAL_OPS, key=lambda op: costs[op])
+        return best, costs[best]
+
     # -- per-operator relational cost c(u) ------------------------------------
     def c(self, node: Node) -> float:
         """Rows processed by relational operator u on SF-unfiltered input
-        (paper: 'estimated by the relational optimizer')."""
+        (paper: 'estimated by the relational optimizer'). Equi joins are
+        priced as their cheapest physical operator, putting physical
+        join selection inside the DP objective's C_rel term."""
         if isinstance(node, Scan):
             return float(self.catalog.size(node.table))
+        if isinstance(node, Join) and self.params.price_physical_joins:
+            return self.choose_join_physical(node)[1]
         ins = sum(self.card(c) for c in node.children)
         return ins + self.card(node)
 
@@ -144,6 +214,20 @@ class Estimator:
                 # CrossJoin: selectivity 1 (paper §5) — no reduction
             total *= max(n, 1.0)
         return total
+
+
+def select_physical_joins(root: Node, catalog: Catalog,
+                          params: Optional[CostParams] = None) -> Node:
+    """Annotate every equi join in ``root`` (in place) with its
+    min-cost physical operator (``Join.physical``). Runs as the last
+    optimizer stage, after semantic-operator placement settled the
+    plan shape; the executor may still downgrade at runtime when key
+    dtypes rule the device paths out."""
+    est = Estimator(catalog, params or CostParams())
+    for node in root.walk():
+        if isinstance(node, Join):
+            node.physical = est.choose_join_physical(node)[0]
+    return root
 
 
 def _path_to_scan(u: Node, table: str) -> Optional[list[Node]]:

@@ -166,7 +166,11 @@ def dp_place(
                 out *= s_of[i]
         return out
 
-    # precompute per-node static quantities
+    # precompute per-node static quantities. For equi joins, est.c()
+    # already resolves to the cheapest physical operator (hash /
+    # sort-merge with the pre-grouped discount / host oracle —
+    # cost.py::join_physical_costs), so Step 2's α·c(u) term carries
+    # physical join selection into the DP objective.
     c_u = {u.nid: est.c(u) for u in nodes}
     card_u = {u.nid: est.card(u) for u in nodes}
     N_ui: dict[tuple[int, int], float] = {}

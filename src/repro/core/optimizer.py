@@ -20,7 +20,7 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass, field
 
-from .cost import CostParams, plan_cost_report
+from .cost import CostParams, plan_cost_report, select_physical_joins
 from .dp import dp_place, lift_semantic_filters, rebuild_plan
 from .plan import Catalog, Node, SemanticFilter
 from .pullup import pull_up_semantic_filters
@@ -84,6 +84,12 @@ def optimize(
         dp_states = result.n_states
     else:
         overhead["placement"] = 0.0
+
+    # physical join selection runs last: semantic placement has settled
+    # the plan shape, so build-side grouping guarantees are final
+    t0 = time.perf_counter()
+    select_physical_joins(plan, catalog, params)
+    overhead["physical_join"] = time.perf_counter() - t0
 
     return OptimizedPlan(
         plan=plan,

@@ -211,10 +211,19 @@ class Project(Node):
 
 @dataclass
 class Join(Node):
-    """Inner equi-join on left_key == right_key (qualified columns)."""
+    """Inner equi-join on left_key == right_key (qualified columns).
+
+    ``physical`` is the cost-selected physical operator
+    (``core/cost.py::select_physical_joins``): ``"hash"`` (device
+    open-addressing build + probe), ``"sort_merge"`` (discounted when
+    the build side arrives grouped by the key) or ``"host"`` (the host
+    searchsorted oracle). ``None`` leaves the choice to the executor's
+    runtime heuristic; the executor also downgrades to the host path
+    whenever the key dtypes require it, whatever is annotated here."""
 
     left_key: str = ""
     right_key: str = ""
+    physical: Optional[str] = None
 
     def output_columns(self, catalog):
         return (

@@ -51,6 +51,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
+from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -78,15 +79,25 @@ from ..core.plan import (
 from ..kernels.expand.ops import expand_segments
 from ..kernels.hash_dedup.ops import dedup_representatives, group_build_columns
 from ..kernels.hash_dedup.ref import hash_rows_np
+from ..kernels.hash_join.ops import hash_join_match, sorted_probe_match
 from ..kernels.segmented_reduce.ops import (
     join_match_lists,
     segment_plan_from_group_build,
     segmented_aggregate,
 )
 from ..kernels.sync import HOST_SYNCS
+from ..kernels.util import resolve_impl
 from ..semantic.cache import FP_BASIS
 from ..semantic.runner import SemanticResult, SemanticRunner
-from .table import Database, Table, as_column, fetch, is_device
+from .table import (
+    Database,
+    HostIndex,
+    LazyColumn,
+    Table,
+    as_column,
+    fetch,
+    is_device,
+)
 
 MAX_CROSS_ROWS = 30_000_000
 
@@ -115,6 +126,9 @@ class ExecStats:
     prompt_chars: int = 0
     prompts_rendered: int = 0  # host renders (distinct keys, vectorized)
     pipeline_syncs: int = 0  # device→host fetches during execute()
+    # physical operator -> count of equi joins it served this query
+    # ("hash" | "sort_merge" | "host" | "reference")
+    join_physical: dict = field(default_factory=dict)
 
     def bump(self, op: str, key: str, v: float) -> None:
         """Accumulate ``v`` under ``per_op[op][key]``."""
@@ -204,7 +218,9 @@ class Executor:
         if isinstance(node, Project):
             return ch[0].select(self._resolve_cols(node.cols, ch[0]))
         if isinstance(node, Join):
-            return self._equi_join(ch[0], ch[1], node.left_key, node.right_key)
+            return self._equi_join(ch[0], ch[1], node.left_key,
+                                   node.right_key, physical=node.physical,
+                                   stats=stats)
         if isinstance(node, CrossJoin):
             return self._cross_join(ch[0], ch[1])
         if isinstance(node, Aggregate):
@@ -233,7 +249,12 @@ class Executor:
                     ranks = np.unique(v, return_inverse=True)[1]
                     keys.append(-ranks)
             order = np.lexsort(keys)
-            return t.gather(order, self.kernel_impl)
+            out = t.gather(order, self.kernel_impl)
+            # an ascending primary key is a pre-sorted-build guarantee
+            # downstream sort-merge joins can spend
+            if not node.keys[0][1]:
+                out.sorted_by = node.keys[0][0]
+            return out
         if isinstance(node, Union):
             parts = [c.compact(self.kernel_impl) for c in ch]
             cols = {}
@@ -350,22 +371,67 @@ class Executor:
             return e.value
         raise ExecutionError(f"unsupported value expr {e}")
 
-    def _equi_join(self, left: Table, right: Table, lk: str, rk: str) -> Table:
-        """Equi join. Vectorized: device-grouped build side + device
-        probe/match expansion (``join_match_lists`` — key columns go in
-        as-is: probe keys stay on device; the build side is fetched
-        once for the host-padded group build, ticked as
-        ``join_build_keys``); reference: stable argsort + searchsorted
-        + ``np.repeat``. Identical output rows in identical order
-        either way."""
+    @staticmethod
+    def _join_key_physical(col) -> bool:
+        """int32-codable key: eligible for the hash / sort-merge device
+        physical joins (the same narrow-integer test the device probe
+        applies — strings and 64-bit keys go through the shared code
+        space instead)."""
+        dt = np.dtype(col.dtype)
+        return dt.kind in "iub" and dt.itemsize <= 4
+
+    def _equi_join(self, left: Table, right: Table, lk: str, rk: str,
+                   physical: Optional[str] = None,
+                   stats: Optional[ExecStats] = None) -> Table:
+        """Equi join, dispatched on the planner's chosen physical
+        operator (``Join.physical``; ``None`` = decide here):
+
+        * ``"hash"`` — ``hash_join_match``: device open-addressing
+          build + one-pass probe (O(N), one sync for the total);
+        * ``"sort_merge"`` — when the build side is already ordered by
+          the key (``Table.sorted_by``, e.g. an aggregate output) the
+          sort phase is skipped entirely (``sorted_probe_match``);
+          otherwise the sort-based ``join_match_lists`` pays its
+          O(N log N) group build;
+        * ``"host"`` — the host searchsorted oracle.
+
+        Runtime downgrades keep the planner honest against what the
+        data allows: string/64-bit keys always take the shared-code
+        -space host path, and a ``sort_merge`` pick whose pre-sorted
+        build guarantee did not survive execution (``sorted_by`` lost)
+        falls back to the sort-based device join. The reference path
+        (``vectorized=False``) is the stable argsort + searchsorted +
+        ``np.repeat`` baseline. Identical output rows in identical
+        order on every route; ``stats.join_physical`` records which
+        operator served each join."""
         lt = left.compact(self.kernel_impl)
         rt = right.compact(self.kernel_impl)
         if self.vectorized:
-            # hash-grouped build side + device probe; identical output
-            # rows in identical order to the reference below
-            out_l, out_r = join_match_lists(lt.col(lk), rt.col(rk),
-                                            impl=self.kernel_impl)
+            pk_col, bk_col = lt.col(lk), rt.col(rk)
+            phys = physical or "auto"
+            if not (self._join_key_physical(pk_col)
+                    and self._join_key_physical(bk_col)):
+                phys = "host"  # string/64-bit keys: shared code space
+                out_l, out_r = join_match_lists(pk_col, bk_col,
+                                                impl=self.kernel_impl)
+            elif phys == "auto":
+                phys = ("sort_merge" if rt.sorted_by == rk
+                        and np.dtype(bk_col.dtype).kind in "ib" else "hash")
+            if phys == "hash":
+                out_l, out_r = hash_join_match(pk_col, bk_col,
+                                               impl=self.kernel_impl)
+            elif phys == "sort_merge":
+                if (rt.sorted_by == rk
+                        and np.dtype(bk_col.dtype).kind in "ib"):
+                    out_l, out_r = sorted_probe_match(
+                        pk_col, bk_col, impl=self.kernel_impl)
+                else:  # pre-sorted guarantee lost: sort-based device join
+                    out_l, out_r = join_match_lists(pk_col, bk_col,
+                                                    impl=self.kernel_impl)
+            elif phys == "host" and self._join_key_physical(pk_col):
+                out_l, out_r = join_match_lists(pk_col, bk_col, impl="host")
         else:
+            phys = "reference"
             lkv = fetch(lt.col(lk), "join_keys")
             rkv = fetch(rt.col(rk), "join_keys")
             order = np.argsort(rkv, kind="stable")
@@ -379,22 +445,37 @@ class Executor:
             within = np.arange(total) - np.repeat(
                 np.cumsum(counts) - counts, counts)
             out_r = order[starts + within]
+        if stats is not None:
+            stats.join_physical[phys] = stats.join_physical.get(phys, 0) + 1
         return self._gather_joined(lt, rt, out_l, out_r)
 
-    @staticmethod
-    def _gather_joined(lt: Table, rt: Table, out_l, out_r) -> Table:
+    def _gather_joined(self, lt: Table, rt: Table, out_l, out_r) -> Table:
         """Materialise join output columns with ONE gather per column.
         Shared by ⋈ and ×. Device index lists (the device probe / device
         cross enumeration) keep device columns on device via the fused
-        ``take_rows`` gather and defer host-side columns lazily; host
-        index lists densify through ``as_column`` exactly once, as the
-        reference always did."""
+        ``take_rows`` gather and defer host-side columns lazily. Host
+        index lists: when the whole pipeline is host-resolved
+        (``kernel_impl`` "host", or "auto" off-TPU) every column defers
+        behind one shared ``HostIndex`` per side — only columns a
+        downstream operator actually reads pay their gather (site
+        ``join_gather``); otherwise (the reference path and the device
+        pipeline's string-key fallback) columns densify eagerly through
+        ``as_column`` exactly once, as the reference always did."""
         if is_device(out_l):
             tl = lt.take_rows(out_l)
             tr = rt.take_rows(out_r)
             return Table(columns={**tl.columns, **tr.columns},
                          valid=tl.valid, _num_valid=tl.capacity)
-        # host index lists (reference path, string-fallback probe):
+        if (self.vectorized
+                and resolve_impl(self.kernel_impl, "host") == "host"):
+            il, ir = HostIndex(out_l), HostIndex(out_r)
+            cols = {k: LazyColumn(v, il, site="join_gather")
+                    for k, v in lt.columns.items()}
+            for k, v in rt.columns.items():
+                cols[k] = LazyColumn(v, ir, site="join_gather")
+            n = len(out_l)
+            return Table(columns=cols, valid=jnp.ones(n, dtype=bool),
+                         _num_valid=n)
         # densifying a device column here is a real device→host fetch
         # and is ticked so pipeline_syncs stays honest
         cols = {k: as_column(fetch(v, "join_gather")[out_l])
@@ -462,7 +543,8 @@ class Executor:
             # numpy promotion keeps integer aggregates integral (int64);
             # as_column keeps 64-bit results host-side at full precision
             cols[f"agg.{name}"] = as_column(vals)
-        return Table(columns=cols, valid=jnp.ones(g, dtype=bool))
+        return Table(columns=cols, valid=jnp.ones(g, dtype=bool),
+                     sorted_by=node.group_by[0])
 
     def _aggregate_vectorized(self, node: Aggregate, t: Table) -> Table:
         """Grouped aggregation in one segmented pass per aggregate column.
@@ -508,8 +590,10 @@ class Executor:
             cols[f"agg.{name}"] = as_column(
                 segmented_aggregate(plan, values, func,
                                     impl=self.kernel_impl)[grp_order])
+        # np.unique(axis=0) group order ascends by the first group key:
+        # the pre-grouped guarantee sort-merge joins price as free
         return Table(columns=cols, valid=jnp.ones(g, dtype=bool),
-                     _num_valid=g)
+                     _num_valid=g, sorted_by=node.group_by[0])
 
     @staticmethod
     def _agg_value(func: str, t: Table, c: str, idx: np.ndarray):

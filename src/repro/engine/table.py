@@ -85,22 +85,29 @@ class HostIndex:
 
 
 class LazyColumn:
-    """Host-side (string / 64-bit) column whose gather is deferred.
+    """Column whose gather is deferred until something reads it.
 
     Wraps the source column plus a shared ``HostIndex``; the dense copy
     materialises on first host access (``np.asarray`` / ``__array__``)
     and is cached, releasing the source reference so chained operator
     outputs do not pin every upstream full-size column. Chained
     operators may wrap a ``LazyColumn`` in another ``LazyColumn`` —
-    materialisation composes the gathers."""
+    materialisation composes the gathers.
 
-    __slots__ = ("_base", "_index", "_dense", "_len")
+    ``Table.take_rows`` wraps host-side (string / 64-bit) bases; the
+    host-oracle join gather also wraps *device* bases (the join output
+    that is never read should never pay the fetch) — materialising one
+    of those is a real device→host sync, ticked under ``site``."""
 
-    def __init__(self, base, index: HostIndex):
+    __slots__ = ("_base", "_index", "_dense", "_len", "_site")
+
+    def __init__(self, base, index: HostIndex,
+                 site: str = "compact_host_cols"):
         self._base = base
         self._index = index
         self._dense = None
         self._len = len(index)
+        self._site = site
 
     @property
     def dtype(self) -> np.dtype:
@@ -119,6 +126,8 @@ class LazyColumn:
 
     def _materialize(self) -> np.ndarray:
         if self._dense is None:
+            if is_device(self._base):
+                HOST_SYNCS.tick(site=self._site)
             self._dense = np.asarray(self._base)[self._index.get()]
             self._base = self._index = None  # release upstream buffers
         return self._dense
@@ -164,11 +173,20 @@ class Table:
     """Fixed-capacity columnar relation. ``columns`` maps qualified names
     ("table.col") to 1-D arrays of equal length; ``valid`` masks live
     rows. ``_num_valid`` caches the live-row count so executor stats and
-    compaction share one device→host sync per operator output."""
+    compaction share one device→host sync per operator output.
+
+    ``sorted_by`` is order metadata for physical join selection: the
+    qualified column this table's live rows are known to ascend by
+    (aggregate outputs ascend by their first group key; ascending sorts
+    by their primary key). Order-preserving operators (mask filters,
+    compaction, projection) carry it; arbitrary-order gathers drop it.
+    It is a guarantee, never a requirement — consumers
+    (``Executor._equi_join``) only use it to skip the build-side sort."""
 
     columns: dict[str, jnp.ndarray]
     valid: jnp.ndarray  # bool[capacity]
     _num_valid: Optional[int] = None
+    sorted_by: Optional[str] = None
 
     @property
     def capacity(self) -> int:
@@ -187,7 +205,8 @@ class Table:
         return self.columns[name]
 
     def with_mask(self, mask: jnp.ndarray) -> "Table":
-        return Table(columns=self.columns, valid=self.valid & mask)
+        return Table(columns=self.columns, valid=self.valid & mask,
+                     sorted_by=self.sorted_by)
 
     def compact(self, impl: str = "auto") -> "Table":
         """Materialise only valid rows.
@@ -212,12 +231,14 @@ class Table:
             cols = {k: as_column(np.asarray(v)[idx])
                     for k, v in self.columns.items()}
             return Table(columns=cols, valid=jnp.ones(count, dtype=bool),
-                         _num_valid=count)
+                         _num_valid=count, sorted_by=self.sorted_by)
         count = self.num_valid  # one scalar sync, cached (stats reuse it)
         if count == self.capacity:
             return self
         idx, _ = compact_index(self.valid, count=count, impl=impl)
-        return self.take_rows(idx)
+        out = self.take_rows(idx)
+        out.sorted_by = self.sorted_by  # compaction preserves row order
+        return out
 
     def take_rows(self, idx) -> "Table":
         """Device-mode row gather: device columns go through ONE fused
@@ -256,7 +277,9 @@ class Table:
             }:
                 keep.setdefault(k, self.columns[k])
         return Table(columns=keep, valid=self.valid,
-                     _num_valid=self._num_valid)
+                     _num_valid=self._num_valid,
+                     sorted_by=self.sorted_by if self.sorted_by in keep
+                     else None)
 
 
 

@@ -1,0 +1,66 @@
+"""Radix-partition rank — the Pallas kernel behind the hash join's
+grouped build order.
+
+The device hash join (ops.py) needs the build rows laid out slot-major
+(all rows of one hash-table slot contiguous) so the probe expansion can
+gather a match run as ``order[start + k]``. That layout is a *stable*
+sort of the build rows by their int32 slot id — exactly an LSD radix
+sort, and each radix pass reduces to a stable counting-rank: every row
+scatters to ``base[digit] + seen_before[digit] + rank_in_tile``.
+
+This module holds the rank kernel for one 8-bit pass. The TPU grid
+iterates row tiles sequentially, so the kernel carries the 256
+per-bucket running counts across tiles in scratch — the same
+accumulate-across-the-grid pattern as ``compact``'s prefix count and
+``expand``'s running-sum scan, widened from compact's scalar SMEM cell
+to a (256,) VMEM vector because the per-tile rank needs vector
+(one-hot / cumsum) arithmetic over all buckets at once. The jnp driver
+that chains the passes lives in ops.py; the SAL KERNEL rule keeps this
+file numpy-free.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NBUCKETS = 256  # one 8-bit digit per pass
+
+
+def _radix_rank_kernel(digit_ref, base_ref, dest_ref, carry):
+    r = pl.program_id(0)
+
+    @pl.when(r == 0)
+    def _():
+        carry[...] = jnp.zeros_like(carry)
+
+    d = digit_ref[...]                       # (block_rows,) int32 in [0,256)
+    buckets = jax.lax.broadcasted_iota(jnp.int32, (d.shape[0], NBUCKETS), 1)
+    onehot = (d[:, None] == buckets).astype(jnp.int32)
+    # rank of each row among same-digit rows within this tile (0-based)
+    rank = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=1) - 1
+    before = carry[...]                      # same-digit rows in prior tiles
+    dest_ref[...] = (jnp.sum(onehot * (base_ref[...] + before)[None, :],
+                             axis=1) + rank)
+    carry[...] = before + jnp.sum(onehot, axis=0)
+
+
+def radix_rank_kernel(digits, base, *, block_rows: int = 1024,
+                      interpret: bool = False):
+    """digits: (N,) int32 in [0, 256) with N % block_rows == 0 (ops.py
+    buckets N to a power of two); base: (256,) int32 exclusive bucket
+    offsets -> (N,) int32 stable scatter destinations: row i lands at
+    ``base[digits[i]] + #{j < i : digits[j] == digits[i]}``."""
+    n = digits.shape[0]
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        _radix_rank_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows,), lambda i: (i,)),
+                  pl.BlockSpec((NBUCKETS,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((NBUCKETS,), jnp.int32)],
+        interpret=interpret,
+    )(digits, base)

@@ -1,0 +1,220 @@
+"""Host-facing wrappers: the hash and sort-merge physical equi-joins.
+
+``hash_join_match`` is the O(N) replacement for the sort-based
+``join_match_lists`` device path on int32-codable keys: build an
+open-addressing table from the build side on device, probe in one
+pass, expand matches with the ``kernels/expand`` machinery. Four
+impls, following the family contract:
+
+* ``impl="kernel"``/``"interpret"`` — jnp build/probe loops plus the
+  Pallas radix-rank passes (hash_join.py) for the grouped build order;
+* ``impl="ref"`` — same device formulation with a jnp stable argsort
+  standing in for the radix passes;
+* ``impl="host"`` — the exact ``hash_join_np`` oracle (zero device
+  work), recorded as a ``host_fallbacks["hash_join"]`` serving;
+* ``impl="auto"`` — the kernel on TPU, the host oracle elsewhere.
+
+Device impls cost ONE device→host sync per join — the scalar match
+total (site ``"hash_join_probe"``) — down from the sort-based path's
+three; match lists come back as device int32 arrays feeding the fused
+table gather. ``sorted_probe_match`` is the sort-merge probe the
+planner selects when the build side is already grouped by the join key
+(an aggregate output): no table build at all, just a fused
+searchsorted over the sorted keys, same single sync.
+
+Both wrappers require int32-codable keys — they are registered in
+SAL's ``INT32_KERNEL_ENTRIES``; ``engine/exec.py::_equi_join`` routes
+strings/64-bit keys to the shared-code-space host path instead.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sync import HOST_SYNCS
+from ..util import is_device_array, pow2_bucket, resolve_impl
+from ..segmented_reduce.ops import _probe_expand_device
+from .hash_join import NBUCKETS, radix_rank_kernel
+from .ref import (EMPTY_SLOT, hash_join_np, hash_table_build_jnp,
+                  hash_table_probe_jnp, sorted_probe_match_np, table_bits)
+
+_EMPTY = np.zeros(0, dtype=np.int64)
+
+# match totals at or beyond 2^30 rows leave the int32-indexable range
+# the device expansion (and the int32 total itself) can address
+_MAX_DEVICE_TOTAL = float(2**30)
+
+
+def _radix_order(slot_key, *, key_bits: int, impl: str, block_rows: int):
+    """Stable LSD radix sort of row ids by ``slot_key`` (values in
+    [0, 2**key_bits)): 8-bit histogram + Pallas rank + scatter per
+    pass. Returns the grouped build order (slot-major, row-ascending
+    within a slot)."""
+    rows = jnp.arange(slot_key.shape[0], dtype=jnp.int32)
+    key = slot_key
+    for shift in range(0, key_bits, 8):
+        digit = (key >> shift) & (NBUCKETS - 1)
+        hist = jnp.zeros(NBUCKETS, jnp.int32).at[digit].add(1)
+        base = jnp.cumsum(hist) - hist
+        dest = radix_rank_kernel(digit, base, block_rows=block_rows,
+                                 interpret=(impl == "interpret"))
+        key = jnp.zeros_like(key).at[dest].set(key)
+        rows = jnp.zeros_like(rows).at[dest].set(rows)
+    return rows
+
+
+@partial(jax.jit, static_argnames=("hbits", "impl", "block_rows"))
+def _hash_join_device(pk, bk, n_probe, n_build, *, hbits: int, impl: str,
+                      block_rows: int = 1024):
+    """Build + probe + per-slot segment structures in one device pass.
+
+    ``pk``/``bk`` arrive pow2-padded int32; ``n_probe``/``n_build`` are
+    the live prefixes (traced scalars — bounded compiles). Returns
+    per-probe (cnt, offs) into the grouped build ``order`` plus the
+    match total (int32, and a float32 magnitude guard)."""
+    h = 1 << hbits
+    b_rows = jnp.arange(bk.shape[0], dtype=jnp.int32)
+    bvalid = b_rows < n_build
+    owner, slot_of = hash_table_build_jnp(bk, bvalid, hbits)
+    # slot-indexed counts/starts over static H: no dense group ids, no
+    # data-dependent G inside the jit
+    counts_slot = jnp.zeros(h, jnp.int32).at[slot_of].add(
+        bvalid.astype(jnp.int32))
+    starts_slot = jnp.cumsum(counts_slot) - counts_slot
+    # grouped build order: stable sort by slot; pad rows sort last
+    slot_key = jnp.where(bvalid, slot_of, h)
+    if impl == "ref":
+        order = jnp.argsort(slot_key, stable=True).astype(jnp.int32)
+    else:
+        order = _radix_order(slot_key, key_bits=hbits + 1, impl=impl,
+                             block_rows=block_rows)
+    pvalid = jnp.arange(pk.shape[0], dtype=jnp.int32) < n_probe
+    pslot = hash_table_probe_jnp(pk, pvalid, bk, owner, hbits)
+    hit = pslot >= 0
+    pslot_c = jnp.where(hit, pslot, 0)
+    cnt = jnp.where(hit, counts_slot[pslot_c], 0)
+    offs = jnp.where(hit, starts_slot[pslot_c], 0)
+    return cnt, offs, order, jnp.sum(cnt), jnp.sum(cnt.astype(jnp.float32))
+
+
+@jax.jit
+def _sorted_lookup_device(bk_sorted, pk, n_probe, n_build):
+    """Fused sort-merge probe: per-probe match runs over an
+    already-sorted (ascending, ``EMPTY_SLOT``-padded) build column.
+    The run ``[lo, hi)`` positions ARE build row indices, so the
+    grouped order is the identity."""
+    lo = jnp.searchsorted(bk_sorted, pk)
+    hi = jnp.minimum(jnp.searchsorted(bk_sorted, pk, side="right"),
+                     n_build)  # clamp: pads share real INT32_MAX keys
+    valid = jnp.arange(pk.shape[0], dtype=jnp.int32) < n_probe
+    cnt = jnp.where(valid, jnp.maximum(hi - lo, 0), 0).astype(jnp.int32)
+    offs = jnp.where(cnt > 0, lo, 0).astype(jnp.int32)
+    return cnt, offs, jnp.sum(cnt), jnp.sum(cnt.astype(jnp.float32))
+
+
+def _host_oracle(probe_keys, build_keys, sorted_build: bool
+                 ) -> tuple[np.ndarray, np.ndarray]:
+    """Serve the join from the exact numpy oracle, accounting the key
+    fetches (device columns) and the ``hash_join`` fallback."""
+    for a in (probe_keys, build_keys):
+        if is_device_array(a):
+            HOST_SYNCS.tick(site="hash_join_keys")
+    HOST_SYNCS.fallback("hash_join")
+    pk = np.ascontiguousarray(np.asarray(probe_keys), dtype=np.int32)
+    bk = np.ascontiguousarray(np.asarray(build_keys), dtype=np.int32)
+    if sorted_build:
+        return sorted_probe_match_np(pk, bk)
+    return hash_join_np(pk, bk)
+
+
+def _expand_device_matches(cnt, offs, order, total: int, impl: str
+                           ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Slice the padded device expansion down to the real match lists
+    (device int32 — the fused-gather feed, zero extra syncs)."""
+    t_bucket = pow2_bucket(total)
+    seg, out_b = _probe_expand_device(cnt, offs, order, total=t_bucket,
+                                      impl=impl)
+    return seg[:total], out_b[:total]
+
+
+def _pad_device_keys(keys, n: int, bucket: int, pad_value: int = 0):
+    """int32 device copy of a key column, padded to its pow2 bucket."""
+    dev = jnp.asarray(keys, dtype=jnp.int32)
+    if bucket != n:
+        dev = jnp.pad(dev, (0, bucket - n), constant_values=pad_value)
+    return dev
+
+
+def hash_join_match(probe_keys, build_keys, *, impl: str = "auto"
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """Equi-join match lists via the open-addressing hash table:
+    ``(out_probe, out_build)`` index pairs, probe-major with build rows
+    ascending per probe row — bit-identical to ``join_match_lists`` and
+    to the ``hash_join_np`` oracle. Keys must be int32-codable; device
+    impls return device int32 arrays, the host oracle numpy int64."""
+    impl = resolve_impl(impl, "host")
+    n_probe = int(np.shape(probe_keys)[0])
+    n_build = int(np.shape(build_keys)[0])
+    if n_probe == 0 or n_build == 0:
+        if impl != "host":
+            empty = jnp.zeros(0, dtype=jnp.int32)
+            return empty, empty
+        return _EMPTY.copy(), _EMPTY.copy()
+    if impl == "host":
+        return _host_oracle(probe_keys, build_keys, sorted_build=False)
+    hbits = table_bits(n_build)
+    pk_dev = _pad_device_keys(probe_keys, n_probe, pow2_bucket(n_probe))
+    bk_dev = _pad_device_keys(build_keys, n_build, pow2_bucket(n_build))
+    cnt, offs, order, total, total_f = _hash_join_device(
+        pk_dev, bk_dev, n_probe, n_build, hbits=hbits, impl=impl)
+    total, total_f = jax.device_get((total, total_f))
+    HOST_SYNCS.tick(site="hash_join_probe")
+    if float(total_f) > _MAX_DEVICE_TOTAL:
+        # pathological skew join: int32 indices cannot address the
+        # expansion — keep the exact int64 host oracle
+        return _host_oracle(probe_keys, build_keys, sorted_build=False)
+    total = int(total)
+    if total == 0:
+        empty = jnp.zeros(0, dtype=jnp.int32)
+        return empty, empty
+    return _expand_device_matches(cnt, offs, order, total, impl)
+
+
+def sorted_probe_match(probe_keys, build_keys, *, impl: str = "auto"
+                       ) -> tuple[np.ndarray, np.ndarray]:
+    """Sort-merge equi-join over a build side ALREADY sorted ascending
+    by the key (caller's contract — ``Table.sorted_by`` guards it).
+    Skips the build/sort phase entirely: the physical join the planner
+    prices as discounted for pre-grouped inputs. Same output contract,
+    impls, and sync accounting as ``hash_join_match``."""
+    impl = resolve_impl(impl, "host")
+    n_probe = int(np.shape(probe_keys)[0])
+    n_build = int(np.shape(build_keys)[0])
+    if n_probe == 0 or n_build == 0:
+        if impl != "host":
+            empty = jnp.zeros(0, dtype=jnp.int32)
+            return empty, empty
+        return _EMPTY.copy(), _EMPTY.copy()
+    if impl == "host":
+        return _host_oracle(probe_keys, build_keys, sorted_build=True)
+    b_bucket = pow2_bucket(n_build)
+    # pads carry INT32_MAX: the column stays sorted; the device lookup
+    # clamps the right boundary so real INT32_MAX keys stay exact
+    pk_dev = _pad_device_keys(probe_keys, n_probe, pow2_bucket(n_probe))
+    bk_dev = _pad_device_keys(build_keys, n_build, b_bucket,
+                              pad_value=int(EMPTY_SLOT))
+    cnt, offs, total, total_f = _sorted_lookup_device(
+        bk_dev, pk_dev, n_probe, n_build)
+    total, total_f = jax.device_get((total, total_f))
+    HOST_SYNCS.tick(site="hash_join_probe")
+    if float(total_f) > _MAX_DEVICE_TOTAL:
+        return _host_oracle(probe_keys, build_keys, sorted_build=True)
+    total = int(total)
+    if total == 0:
+        empty = jnp.zeros(0, dtype=jnp.int32)
+        return empty, empty
+    order = jnp.arange(b_bucket, dtype=jnp.int32)
+    return _expand_device_matches(cnt, offs, order, total, impl)

@@ -1,0 +1,220 @@
+"""Reference implementations for the hash join family.
+
+* ``hash_join_np`` — the exact numpy oracle: the same open-addressing
+  table the device path builds, evaluated with host vectorized probing.
+  It is the ``impl="host"`` serving AND the equivalence baseline the
+  property tests compare every device impl against.
+* ``hash_table_build_jnp`` / ``hash_table_probe_jnp`` — the jnp
+  build/probe loops shared by every device impl (``ref`` and the Pallas
+  impls differ only in how they produce the grouped build *order*).
+* ``sorted_probe_match_np`` — the sort-merge probe oracle over an
+  already-sorted build side (the planner's discounted physical join).
+
+Table invariants (shared host/device, documented in docs/joins.md):
+
+* capacity ``H = 2**hbits`` with ``H >= 2 * n_build`` (load factor
+  <= 0.5) and ``hbits >= 10`` — linear probing stays short and, because
+  the table can never fill, every probe chain terminates at a hole;
+* Fibonacci hashing ``(uint32(key) * 2654435769) >> (32 - hbits)``
+  spreads consecutive int32 keys across slots;
+* collisions resolve by linear probing with wraparound; a slot stores
+  the *owner* build row (first row inserted with that key — on device
+  the lowest row index wins the scatter-min claim race, which only
+  changes *which* duplicate anchors the slot, never the output);
+* duplicate keys share their owner's slot: per-slot counts plus a
+  stable sort of build rows by slot id give each key's match run.
+
+The match-list contract is exactly ``join_match_lists``'s: probe-major
+output, build rows ascending within each probe row — independent of
+hash/slot layout, so all impls (and the sort-based reference path) are
+bit-identical.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# open slot sentinel: no real build row index can reach INT32_MAX
+EMPTY_SLOT = np.int32(2**31 - 1)
+# Fibonacci multiplier: floor(2**32 / golden ratio), forced odd
+FIB_MULT = np.uint32(2654435769)
+MIN_BITS = 10
+
+
+def table_bits(n_build: int) -> int:
+    """Smallest ``hbits`` with ``2**hbits >= max(2 * n_build, 2**10)``:
+    the load-factor <= 0.5 invariant every impl shares."""
+    return max(int(2 * n_build - 1).bit_length(), MIN_BITS)
+
+
+def fib_hash_jnp(keys, hbits: int):
+    """(N,) int32 keys -> (N,) int32 initial slots in [0, 2**hbits)."""
+    return ((keys.astype(jnp.uint32) * jnp.uint32(FIB_MULT))
+            >> jnp.uint32(32 - hbits)).astype(jnp.int32)
+
+
+def hash_table_build_jnp(bk, valid, hbits: int):
+    """Build the open-addressing table from padded build keys.
+
+    ``bk``: (Nb,) int32 (pow2-padded); ``valid``: (Nb,) bool row mask.
+    Returns ``(owner, slot_of)``: ``owner`` (H,) int32 maps slot ->
+    owning build row (``EMPTY_SLOT`` = hole); ``slot_of`` (Nb,) int32
+    maps each valid build row -> its key's slot. Each round every
+    unresolved row scatter-min-claims its current slot if open, then
+    either adopts the slot (owner's key matches — duplicates join their
+    owner here) or linearly advances. Rounds are bounded by the probe
+    chain length, which the load invariant keeps short."""
+    h = 1 << hbits
+    mask = h - 1
+    n = bk.shape[0]
+    rows = jnp.arange(n, dtype=jnp.int32)
+
+    def cond(state):
+        return ~jnp.all(state[2])
+
+    def body(state):
+        owner, cur, resolved, slot_of = state
+        target = jnp.where(~resolved & (owner[cur] == EMPTY_SLOT), cur, h)
+        owner = owner.at[target].min(rows, mode="drop")
+        own = owner[cur]
+        occupied = own != EMPTY_SLOT
+        key_at = bk[jnp.where(occupied, own, 0)]
+        ok = ~resolved & occupied & (key_at == bk)
+        slot_of = jnp.where(ok, cur, slot_of)
+        resolved = resolved | ok
+        cur = jnp.where(resolved, cur, (cur + 1) & mask)
+        return owner, cur, resolved, slot_of
+
+    owner, _, _, slot_of = jax.lax.while_loop(
+        cond, body,
+        (jnp.full(h, EMPTY_SLOT, jnp.int32), fib_hash_jnp(bk, hbits),
+         ~valid, jnp.zeros(n, jnp.int32)))
+    return owner, slot_of
+
+
+def hash_table_probe_jnp(pk, valid, bk, owner, hbits: int):
+    """One-pass probe: (Np,) int32 slot per probe row, -1 = no match.
+    A probe chain ends at its key's slot (hit) or at a hole (miss —
+    guaranteed to exist by the load invariant)."""
+    mask = (1 << hbits) - 1
+    n = pk.shape[0]
+
+    def cond(state):
+        return ~jnp.all(state[1])
+
+    def body(state):
+        cur, done, pslot = state
+        own = owner[cur]
+        occupied = own != EMPTY_SLOT
+        key_at = bk[jnp.where(occupied, own, 0)]
+        hit = ~done & occupied & (key_at == pk)
+        pslot = jnp.where(hit, cur, pslot)
+        done = done | hit | ~occupied
+        cur = jnp.where(done, cur, (cur + 1) & mask)
+        return cur, done, pslot
+
+    _, _, pslot = jax.lax.while_loop(
+        cond, body,
+        (fib_hash_jnp(pk, hbits), ~valid, jnp.full(n, -1, jnp.int32)))
+    return pslot
+
+
+def hash_join_np(probe_keys: np.ndarray, build_keys: np.ndarray
+                 ) -> tuple[np.ndarray, np.ndarray]:
+    """Exact host oracle: open-addressing hash join on int32 keys.
+
+    Same table shape and invariants as the device path (Fibonacci hash,
+    linear probing, load <= 0.5); vectorized rounds retire whole
+    cohorts of unresolved rows at once. Returns int64 ``(out_probe,
+    out_build)`` match lists under the family's ordering contract."""
+    pk = np.ascontiguousarray(probe_keys, dtype=np.int32)
+    bk = np.ascontiguousarray(build_keys, dtype=np.int32)
+    nb, npr = bk.shape[0], pk.shape[0]
+    empty = np.zeros(0, dtype=np.int64)
+    if nb == 0 or npr == 0:
+        return empty, empty.copy()
+    hbits = table_bits(nb)
+    h = 1 << hbits
+    mask = h - 1
+    bku = bk.view(np.uint32)
+    owner = np.full(h, -1, np.int32)
+    rows = np.arange(nb, dtype=np.int32)
+    cur = ((bku * FIB_MULT) >> np.uint32(32 - hbits)).astype(np.int32)
+    slot_of = np.empty(nb, np.int32)
+    unres = rows
+    while unres.size:
+        own = owner[cur]
+        emp = own == -1
+        if emp.any():
+            # last-writer-wins claim; losers re-read and key-check below
+            owner[cur[emp]] = unres[emp]
+            own = owner[cur]
+        ok = bk[own] == bk[unres]
+        slot_of[unres] = cur  # rows resolved this round keep this slot
+        unres = unres[~ok]
+        cur = (cur[~ok] + 1) & mask
+    # dense group ids in slot order + grouped build order. The packed
+    # (gid << row_bits) | row keys are unique, so plain (unstable)
+    # quicksort already yields the stable grouped order.
+    occ = owner >= 0
+    gid_of_slot = np.cumsum(occ, dtype=np.int32)
+    gid = gid_of_slot[slot_of] - 1
+    g = int(gid_of_slot[-1])
+    row_bits = max(nb - 1, 1).bit_length()
+    if row_bits + max(g - 1, 1).bit_length() <= 32:
+        packed = ((gid.astype(np.uint32) << np.uint32(row_bits))
+                  | rows.view(np.uint32))
+        packed.sort()
+        order = (packed & np.uint32((1 << row_bits) - 1)).astype(np.int64)
+    else:
+        packed = ((gid.astype(np.uint64) << np.uint64(row_bits))
+                  | rows.astype(np.uint64))
+        packed.sort()
+        order = (packed & np.uint64((1 << row_bits) - 1)).astype(np.int64)
+    counts = np.bincount(gid, minlength=g)
+    starts = np.concatenate([[0], np.cumsum(counts[:-1])])
+    # probe rounds: each key chases its chain to a hit or a hole
+    pcur = ((pk.view(np.uint32) * FIB_MULT)
+            >> np.uint32(32 - hbits)).astype(np.int32)
+    pgid = np.full(npr, -1, np.int32)
+    punres = np.arange(npr, dtype=np.int32)
+    while punres.size:
+        own = owner[pcur]
+        hit = (own >= 0) & (bk[own] == pk[punres])
+        pgid[punres[hit]] = gid_of_slot[pcur[hit]] - 1
+        keep = ~(hit | (own == -1))
+        punres = punres[keep]
+        pcur = (pcur[keep] + 1) & mask
+    # probe-major expansion (build rows ascend within each probe row)
+    matched = pgid >= 0
+    mrows = np.flatnonzero(matched)
+    mgid = pgid[matched]
+    cnt = counts[mgid]
+    total = int(cnt.sum())
+    out_l = np.repeat(mrows, cnt).astype(np.int64)
+    ends = np.cumsum(cnt)
+    base = starts[mgid] - (ends - cnt)
+    out_r = order[np.repeat(base, cnt) + np.arange(total, dtype=np.int64)]
+    return out_l, out_r
+
+
+def sorted_probe_match_np(probe_keys: np.ndarray, build_keys: np.ndarray
+                          ) -> tuple[np.ndarray, np.ndarray]:
+    """Sort-merge probe oracle: ``build_keys`` MUST already be sorted
+    ascending (the caller's contract — e.g. an aggregate output grouped
+    by the join key). The sort phase is free; matches are the
+    ``[searchsorted-left, searchsorted-right)`` runs, whose positions
+    ARE ascending build row indices, satisfying the family ordering
+    contract with no reorder."""
+    pk = np.asarray(probe_keys)
+    bk = np.asarray(build_keys)
+    lo = np.searchsorted(bk, pk, side="left")
+    hi = np.searchsorted(bk, pk, side="right")
+    cnt = hi - lo
+    total = int(cnt.sum())
+    out_l = np.repeat(np.arange(pk.shape[0], dtype=np.int64), cnt)
+    ends = np.cumsum(cnt)
+    base = lo - (ends - cnt)
+    out_r = np.repeat(base, cnt) + np.arange(total, dtype=np.int64)
+    return out_l, out_r

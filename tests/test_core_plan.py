@@ -406,7 +406,8 @@ class TestDP:
 class TestOptimizerPipeline:
     def test_overhead_reported(self, catalog):
         opt = optimize(motivating_plan(), catalog, strategy="cost")
-        assert set(opt.overhead) == {"pushdown", "simplify", "placement"}
+        assert set(opt.overhead) == {"pushdown", "simplify", "placement",
+                                     "physical_join"}
         assert opt.total_overhead < 1.0  # Fig 9: well under a second
 
     def test_strategies_produce_same_operator_multiset(self, catalog):

@@ -1,0 +1,292 @@
+"""Hash-join family (docs/joins.md): every impl bit-identical to the
+numpy oracle on the edge shapes that stress an open-addressing table
+(empty sides, forced slot collisions, G=1 duplicate floods, G=N
+all-distinct, misses), the planner's physical-join selection picking
+the right operator per shape, and the executor recording which
+physical served each join."""
+import numpy as np
+import pytest
+
+from repro.core import CostParams, Estimator, Q, col
+from repro.core.cost import select_physical_joins
+from repro.core.plan import Catalog, Join
+from repro.engine import Database, Executor
+from repro.kernels.hash_join.ops import hash_join_match, sorted_probe_match
+from repro.kernels.hash_join.ref import (
+    EMPTY_SLOT,
+    FIB_MULT,
+    MIN_BITS,
+    hash_join_np,
+    sorted_probe_match_np,
+    table_bits,
+)
+from repro.semantic import OracleBackend, SemanticRunner
+
+IMPLS = ("host", "ref", "interpret")
+
+
+def _expected(pk, bk):
+    """Brute-force match lists: probe-major, build rows ascending."""
+    out_p, out_b = [], []
+    for i, k in enumerate(pk):
+        rows = np.nonzero(bk == k)[0]
+        out_p.extend([i] * len(rows))
+        out_b.extend(rows.tolist())
+    return np.asarray(out_p, np.int64), np.asarray(out_b, np.int64)
+
+
+def _colliding_keys(n, hbits):
+    """n distinct int32 keys that all hash to ONE slot (worst-case
+    linear-probe chain)."""
+    cand = np.arange(1, 300_000, dtype=np.int64)
+    h = ((cand.astype(np.uint32) * FIB_MULT)
+         >> np.uint32(32 - hbits)).astype(np.int64)
+    slot = np.bincount(h).argmax()
+    keys = cand[h == slot][:n]
+    assert len(keys) == n, "not enough colliding candidates"
+    return keys.astype(np.int32)
+
+
+CASES = {
+    "empty_probe": (np.zeros(0, np.int32), np.array([1, 2], np.int32)),
+    "empty_build": (np.array([1, 2], np.int32), np.zeros(0, np.int32)),
+    "both_empty": (np.zeros(0, np.int32), np.zeros(0, np.int32)),
+    "singleton": (np.array([7], np.int32), np.array([7], np.int32)),
+    "all_miss": (np.arange(100, 200, dtype=np.int32),
+                 np.arange(50, dtype=np.int32)),
+    "g1_duplicates": (np.full(97, 5, np.int32),
+                      np.full(203, 5, np.int32)),
+    "gn_distinct": (np.arange(513, dtype=np.int32)[::-1].copy(),
+                    np.arange(257, dtype=np.int32)),
+    "negative_and_extremes": (
+        np.array([-2**31, -1, 0, 2**31 - 1, 42], np.int32),
+        np.array([2**31 - 1, -2**31, 42, 42, -1, 9], np.int32)),
+}
+
+
+class TestOracleEquivalence:
+    @pytest.mark.parametrize("name", sorted(CASES))
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_hash_join_matches_brute_force(self, name, impl):
+        pk, bk = CASES[name]
+        ep, eb = _expected(pk, bk)
+        op, ob = hash_join_match(pk, bk, impl=impl)
+        np.testing.assert_array_equal(np.asarray(op), ep)
+        np.testing.assert_array_equal(np.asarray(ob), eb)
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_all_collision_chain(self, impl):
+        # 12 distinct keys in one slot of the smallest (2^10) table,
+        # duplicated build-side: probing must walk the full chain and
+        # still resolve each key to exactly its own rows
+        keys = _colliding_keys(12, MIN_BITS)
+        rng = np.random.default_rng(3)
+        bk = rng.choice(keys[:8], size=64).astype(np.int32)
+        pk = np.concatenate([keys, keys[:4]]).astype(np.int32)
+        assert table_bits(len(bk)) == MIN_BITS
+        ep, eb = _expected(pk, bk)
+        op, ob = hash_join_match(pk, bk, impl=impl)
+        np.testing.assert_array_equal(np.asarray(op), ep)
+        np.testing.assert_array_equal(np.asarray(ob), eb)
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_duplicate_heavy_random(self, impl):
+        rng = np.random.default_rng(11)
+        bk = rng.integers(0, 37, size=1500).astype(np.int32)
+        pk = rng.integers(0, 60, size=700).astype(np.int32)
+        ep, eb = _expected(pk, bk)
+        op, ob = hash_join_match(pk, bk, impl=impl)
+        np.testing.assert_array_equal(np.asarray(op), ep)
+        np.testing.assert_array_equal(np.asarray(ob), eb)
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_sorted_probe_match(self, impl):
+        rng = np.random.default_rng(5)
+        bk = np.sort(rng.integers(-50, 50, size=600)).astype(np.int32)
+        pk = rng.integers(-70, 70, size=300).astype(np.int32)
+        ep, eb = _expected(pk, bk)
+        op, ob = sorted_probe_match(pk, bk, impl=impl)
+        np.testing.assert_array_equal(np.asarray(op), ep)
+        np.testing.assert_array_equal(np.asarray(ob), eb)
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_sorted_probe_int32_max_key(self, impl):
+        # real INT32_MAX build keys must not be confused with the
+        # EMPTY_SLOT-valued padding the device path appends
+        bk = np.array([1, 1, 2, int(EMPTY_SLOT), int(EMPTY_SLOT)],
+                      np.int32)
+        pk = np.array([int(EMPTY_SLOT), 2, 0], np.int32)
+        ep, eb = _expected(pk, bk)
+        op, ob = sorted_probe_match(pk, bk, impl=impl)
+        np.testing.assert_array_equal(np.asarray(op), ep)
+        np.testing.assert_array_equal(np.asarray(ob), eb)
+
+    def test_np_oracles_agree(self):
+        rng = np.random.default_rng(7)
+        bk = np.sort(rng.integers(0, 40, size=250)).astype(np.int32)
+        pk = rng.integers(0, 55, size=120).astype(np.int32)
+        np.testing.assert_array_equal(
+            np.column_stack(hash_join_np(pk, bk)),
+            np.column_stack(sorted_probe_match_np(pk, bk)))
+
+    def test_table_bits_load_factor(self):
+        for n in (1, 2, 3, 511, 512, 513, 60_000):
+            hbits = table_bits(n)
+            assert hbits >= MIN_BITS
+            assert 2 ** hbits >= 2 * n  # load factor <= 0.5
+
+
+def _catalog():
+    cat = Catalog()
+    cat.add_table("probes", ["probe_id", "g"], 5_000)
+    cat.add_table("small_probes", ["probe_id", "g"], 100)
+    cat.add_table("facts", ["fact_id", "g", "v"], 10_000)
+    return cat
+
+
+def _join_node(plan):
+    joins = [n for n in plan.walk() if isinstance(n, Join)]
+    assert len(joins) == 1
+    return joins[0]
+
+
+class TestPlannerSelection:
+    def test_hash_is_the_default(self):
+        plan = (Q.scan("probes")
+                .join(Q.scan("facts"), "probes.g", "facts.g").build())
+        est = Estimator(_catalog(), CostParams())
+        phys, cost = est.choose_join_physical(_join_node(plan))
+        assert phys == "hash"
+        assert cost == est.join_physical_costs(_join_node(plan))["hash"]
+
+    def test_sort_merge_discount_on_pregrouped_build(self):
+        # small probe into an aggregate output grouped by the join key:
+        # the |R| log|R| sort term drops to |R| and sort_merge wins
+        plan = (Q.scan("small_probes")
+                .join(Q.scan("facts")
+                      .group_by(["facts.g"], [("count", "*", "cnt")]),
+                      "small_probes.g", "facts.g").build())
+        est = Estimator(_catalog(), CostParams())
+        node = _join_node(plan)
+        assert est.grouped_on(node.children[1], "facts.g")
+        costs = est.join_physical_costs(node)
+        assert costs["sort_merge"] < costs["hash"] < costs["host"]
+        assert est.choose_join_physical(node)[0] == "sort_merge"
+
+    def test_grouped_on_recurses_through_filters(self):
+        plan = (Q.scan("small_probes")
+                .join(Q.scan("facts")
+                      .group_by(["facts.g"], [("count", "*", "cnt")])
+                      .where(col("facts.g") >= 0),
+                      "small_probes.g", "facts.g").build())
+        est = Estimator(_catalog(), CostParams())
+        node = _join_node(plan)
+        assert est.grouped_on(node.children[1], "facts.g")
+        # a plain scan carries no grouping guarantee
+        assert not est.grouped_on(node.children[0], "small_probes.g")
+
+    def test_host_wins_when_transfer_is_cheap(self):
+        plan = (Q.scan("probes")
+                .join(Q.scan("facts"), "probes.g", "facts.g").build())
+        est = Estimator(_catalog(), CostParams(w_host_join=0.01))
+        assert est.choose_join_physical(_join_node(plan))[0] == "host"
+
+    def test_select_physical_joins_annotates(self):
+        plan = (Q.scan("probes")
+                .join(Q.scan("facts"), "probes.g", "facts.g").build())
+        assert _join_node(plan).physical is None
+        select_physical_joins(plan, _catalog())
+        assert _join_node(plan).physical == "hash"
+
+    def test_pricing_enters_c_u(self):
+        plan = (Q.scan("probes")
+                .join(Q.scan("facts"), "probes.g", "facts.g").build())
+        node = _join_node(plan)
+        cat = _catalog()
+        priced = Estimator(cat, CostParams()).c(node)
+        flat = Estimator(
+            cat, CostParams(price_physical_joins=False)).c(node)
+        assert priced == Estimator(
+            cat, CostParams()).choose_join_physical(node)[1]
+        assert priced != flat
+
+
+def _db(rows=400, groups=13, str_keys=False):
+    db = Database()
+    rng = np.random.default_rng(0)
+    gs = rng.integers(0, groups, size=rows)
+    key = (lambda g: f"k{g:03d}") if str_keys else int
+    db.add_table("facts", [{"fact_id": i, "g": key(gs[i])}
+                           for i in range(rows)])
+    db.add_table("dims", [{"g": key(gi), "w": gi * 10}
+                          for gi in range(groups)])
+    return db
+
+
+def _run(db, plan, vectorized=True, **kw):
+    ex = Executor(db, SemanticRunner(OracleBackend(truths={})),
+                  vectorized=vectorized, **kw)
+    return ex.execute(plan)
+
+
+class TestExecutorDispatch:
+    def test_stats_record_hash_and_reference(self):
+        db = _db()
+        plan = (Q.scan("facts")
+                .join(Q.scan("dims"), "facts.g", "dims.g").build())
+        _, sv = _run(db, plan, vectorized=True)
+        _, sr = _run(db, plan, vectorized=False)
+        assert sv.join_physical == {"hash": 1}
+        assert sr.join_physical == {"reference": 1}
+
+    def test_runtime_auto_uses_sort_merge_on_aggregate_output(self):
+        db = _db()
+        plan = (Q.scan("dims")
+                .join(Q.scan("facts")
+                      .group_by(["facts.g"], [("count", "*", "cnt")]),
+                      "dims.g", "facts.g").build())
+        out_cols = ["dims.w", "agg.cnt"]
+        tv, sv = _run(db, plan, vectorized=True)
+        tr, sr = _run(db, plan, vectorized=False)
+        assert sv.join_physical == {"sort_merge": 1}
+        assert db.materialize(tv, out_cols) == db.materialize(tr, out_cols)
+
+    def test_string_keys_force_host_physical(self):
+        # string key columns exist host-side only: whatever the plan
+        # annotates, the executor must downgrade to the host code space
+        import jax.numpy as jnp
+
+        from repro.engine import Table
+        from repro.engine.exec import ExecStats
+        lt = Table(columns={"l.k": np.asarray(["a", "b", "a", "c"]),
+                            "l.x": jnp.arange(4, dtype=jnp.int32)},
+                   valid=jnp.ones(4, dtype=bool))
+        rt = Table(columns={"r.k": np.asarray(["a", "c", "a"]),
+                            "r.y": jnp.arange(3, dtype=jnp.int32)},
+                   valid=jnp.ones(3, dtype=bool))
+        ex = Executor(Database(),
+                      SemanticRunner(OracleBackend(truths={})),
+                      vectorized=True)
+        stats = ExecStats()
+        out = ex._equi_join(lt, rt, "l.k", "r.k", physical="hash",
+                            stats=stats)
+        assert stats.join_physical == {"host": 1}
+        # probe-major, build rows ascending: a->(0,2), b->(), a->(0,2),
+        # c->(1,)
+        assert np.asarray(out.col("l.k")).tolist() == \
+            ["a", "a", "a", "a", "c"]
+        assert np.asarray(out.col("r.y")).tolist() == [0, 2, 0, 2, 1]
+
+    @pytest.mark.parametrize("phys", ["hash", "sort_merge", "host"])
+    def test_annotated_physical_is_honoured(self, phys):
+        # sort_merge over an unsorted build side must downgrade to the
+        # sort-based device join internally, yet still answer exactly
+        db = _db()
+        plan = (Q.scan("facts")
+                .join(Q.scan("dims"), "facts.g", "dims.g").build())
+        _join_node(plan).physical = phys
+        tv, sv = _run(db, plan, vectorized=True)
+        tr, _ = _run(db, plan, vectorized=False)
+        assert sv.join_physical == {phys: 1}
+        out_cols = ["facts.fact_id", "dims.w"]
+        assert db.materialize(tv, out_cols) == db.materialize(tr, out_cols)

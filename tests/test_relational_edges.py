@@ -11,6 +11,7 @@ import pytest
 
 from repro.core import Q, col
 from repro.engine import Database, Executor, Table
+from repro.engine.table import is_device
 from repro.semantic import OracleBackend, SemanticRunner
 
 
@@ -222,8 +223,11 @@ class TestCrossJoinHostColumns:
         assert list(np.asarray(out.col("l.name"))) == \
             ["x", "x", "x", "y", "y", "y"]
         big = np.asarray(out.col("l.big"))
-        # 64-bit columns stay host-side numpy at full precision
-        assert isinstance(out.col("l.big"), np.ndarray)
+        # 64-bit columns stay host-side at full precision (the
+        # host-resolved pipeline defers the gather behind a LazyColumn;
+        # materialisation must stay int64, never a device round-trip)
+        assert not is_device(out.col("l.big"))
+        assert big.dtype == np.int64
         assert big.tolist() == [2**40] * 3 + [2**41] * 3
         assert np.asarray(out.col("r.z")).tolist() == [0, 1, 2] * 2
 
@@ -490,15 +494,16 @@ class TestAcceleratedPathNoHostNumpy:
         assert snap["by_site"].get("group_build_columns", 0) >= 1
 
     def test_join_probe_and_expansion_stay_on_device(self):
-        # the probe-side searchsorted + match expansion run inside the
-        # device jit: one "join_probe" fetch (the output total), no host
-        # searchsorted fallback and no np.repeat expansion
+        # the hash-table build, probe and match expansion run inside
+        # the device jit: ONE "hash_join_probe" fetch (the output
+        # total), no host oracle fallback and no np.repeat expansion
         db = _db_events(300, 11)
         snap = self._run_accel(db, _join_plan(),
                                ["events.event_id", "cats.cat_id"])
-        for site in ("join_probe", "expand", "group_build", "compact"):
+        for site in ("hash_join", "join_probe", "expand", "group_build",
+                     "compact"):
             assert site not in snap["host_fallbacks"], snap
-        assert snap["by_site"].get("join_probe", 0) >= 1
+        assert snap["by_site"].get("hash_join_probe", 0) >= 1
 
     def test_empty_build_side_join_stays_on_device(self):
         # a filter that kills the whole build side must not densify the

@@ -17,6 +17,11 @@ Checks, per markdown file:
   exactly the keys of ``tools/sal/registry.py::SYNC_SITES`` (both a
   documented-but-unregistered and a registered-but-undocumented site
   fail);
+* ``docs/joins.md`` documents every public export of the
+  ``kernels/hash_join`` family (module-level non-underscore ``def``s
+  across its three files), its "Exports" table carries no stale rows,
+  and its sync/fallback-site table names exactly the registry sites
+  whose key contains ``join`` — again both directions fail;
 * the repo-root perf-trajectory snapshots (``BENCH_dedup.json`` /
   ``BENCH_relational.json``, written by full-size benchmark runs) are
   present, parse as JSON, name the existing benchmark command that
@@ -52,7 +57,11 @@ REQUIRED = [
     "README.md",
     "docs/kernels.md",
     "docs/cost_model.md",
+    "docs/joins.md",
 ]
+
+PUBLIC_DEF = re.compile(r"^def ([a-z][A-Za-z0-9_]*)", re.MULTILINE)
+HASH_JOIN_FAMILY = "src/repro/kernels/hash_join"
 README_MUST_CONTAIN = [
     "actions/workflows/ci.yml/badge.svg",   # the CI badge
     "examples/quickstart.py",               # the quickstart pointer
@@ -127,6 +136,51 @@ def check_sync_site_table() -> list[str]:
     return errors
 
 
+def check_joins_doc() -> list[str]:
+    """docs/joins.md must track the ``kernels/hash_join`` family: every
+    public export documented, no stale rows in its Exports table, and
+    its sync/fallback-site table naming exactly the registry sites
+    whose key mentions a join."""
+    md = ROOT / "docs" / "joins.md"
+    if not md.exists():
+        return ["docs/joins.md: missing (the physical-join catalog)"]
+    text = md.read_text()
+
+    exports = set()
+    for src in sorted((ROOT / HASH_JOIN_FAMILY).glob("*.py")):
+        exports |= set(PUBLIC_DEF.findall(src.read_text()))
+    errors = []
+    for name in sorted(exports):
+        if f"`{name}`" not in text:
+            errors.append(f"docs/joins.md: {HASH_JOIN_FAMILY} export "
+                          f"`{name}` is undocumented")
+    head, sep, tail = text.partition("## Exports")
+    if not sep:
+        errors.append("docs/joins.md: no 'Exports' section")
+    else:
+        rows = {m.group(1) for m in SITE_ROW.finditer(tail.split("\n## ")[0])}
+        rows.discard("export")  # the header row, if backticked
+        for name in sorted(rows - exports):
+            errors.append(f"docs/joins.md: Exports row `{name}` is not a "
+                          f"public def in {HASH_JOIN_FAMILY}")
+
+    head, sep, tail = text.partition("## Sync and fallback sites")
+    if not sep:
+        errors.append("docs/joins.md: no 'Sync and fallback sites' section")
+        return errors
+    section = tail.split("\n## ")[0]
+    documented = {m.group(1) for m in SITE_ROW.finditer(section)}
+    documented.discard("site")
+    registered = {s for s in _load_sync_sites() if "join" in s}
+    for site in sorted(registered - documented):
+        errors.append(f"docs/joins.md: registered join site `{site}` "
+                      f"missing from the site table")
+    for site in sorted(documented - registered):
+        errors.append(f"docs/joins.md: site table row `{site}` is not a "
+                      f"join site in tools/sal/registry.py::SYNC_SITES")
+    return errors
+
+
 def _check_token(tok: str) -> str | None:
     """Return an error string if ``tok`` should resolve but doesn't."""
     if "*" in tok or "<" in tok:
@@ -181,7 +235,7 @@ def main() -> int:
     for err in bench_errors:
         print(f"FAIL: {err}")
     failed = failed or bool(bench_errors)
-    site_errors = check_sync_site_table()
+    site_errors = check_sync_site_table() + check_joins_doc()
     for err in site_errors:
         print(f"FAIL: {err}")
     failed = failed or bool(site_errors)

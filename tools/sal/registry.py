@@ -48,6 +48,9 @@ SYNC_SITES = {
     "join_keys": "join key columns fetch for encode / reference probe",
     "join_build_keys": "device join probe pulls build-side keys",
     "join_probe": "device join probe returns match lists",
+    "hash_join": "hash/sort-merge join served by the host oracle",
+    "hash_join_keys": "host-oracle join fetches device key columns",
+    "hash_join_probe": "device hash/sort-merge join returns its total",
     # semantic — device verdict cache
     "verdict_table": "VerdictTable.probe gathers cached verdicts",
 }
@@ -84,4 +87,8 @@ INT32_KERNEL_ENTRIES = frozenset({
     "group_build",
     "group_build_np",
     "dedup_representatives",
+    "hash_join_match",
+    "hash_join_np",
+    "sorted_probe_match",
+    "sorted_probe_match_np",
 })
