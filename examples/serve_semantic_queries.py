@@ -5,8 +5,9 @@ requests — no oracle in the execution path.
     PYTHONPATH=src python examples/serve_semantic_queries.py
 
 Pipeline: train (or reuse) the 13M-param backend from
-examples/train_backend.py -> wrap it in ServingEngine (batched prefill +
-greedy decode, slot recycling) -> ModelBackend parses YES/NO -> PLOP
+examples/train_backend.py -> wrap it in ServingEngine (continuous slot
+scheduler: prefill/decode interleaving, mid-decode slot recycling —
+docs/serving.md) -> ModelBackend parses YES/NO -> PLOP
 optimizes placement -> the executor sends only *distinct uncached* prompts
 to the model. Reports accuracy vs. the noise-free oracle plus serving and
 cache statistics.
@@ -88,8 +89,9 @@ def main():
         print(f"distinct model calls={stats.llm_calls}  "
               f"cache hits={stats.cache_hits}  wall={wall:.1f}s")
         print(f"serving: {engine.stats.batches} batches, "
-              f"{engine.stats.decode_steps} decode steps, "
-              f"{engine.stats.prefill_tokens} prefill tokens")
+              f"{engine.stats.decode_steps} decode rounds, "
+              f"{engine.stats.prefill_tokens} prefill tokens, "
+              f"occupancy={engine.stats.occupancy:.2f}")
 
 
 if __name__ == "__main__":

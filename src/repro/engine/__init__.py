@@ -1,10 +1,10 @@
 """Vectorised JAX relational engine + hybrid-plan executor."""
-from .exec import ExecStats, ExecutionError, Executor
+from .exec import ExecStats, ExecutionError, Executor, FrontDoor
 from .metrics import result_f1
 from .table import Database, Table, TextStore
 
 __all__ = [
-    "ExecStats", "ExecutionError", "Executor",
+    "ExecStats", "ExecutionError", "Executor", "FrontDoor",
     "result_f1",
     "Database", "Table", "TextStore",
 ]

@@ -16,6 +16,13 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+# serving-tier sync sites (see docs/serving.md): these count the LLM
+# tier's device→host round-trips, which scale with decode length — the
+# executor reports them separately (``ExecStats.serving_syncs``) so the
+# data-path budget ``pipeline_syncs`` stays comparable across serving
+# disciplines (drained ticks per decode *step*, continuous per *round*)
+SERVING_SITES = ("serving_round", "serving_decode")
+
 
 @dataclass
 class HostSyncStats:
@@ -38,6 +45,11 @@ class HostSyncStats:
         self.syncs += n
         if site is not None:
             self.by_site[site] = self.by_site.get(site, 0) + n
+
+    def site_total(self, sites) -> int:
+        """Sum of ``by_site`` counts over ``sites`` (e.g. the serving
+        tier's ``SERVING_SITES``)."""
+        return sum(self.by_site.get(s, 0) for s in sites)
 
     def fallback(self, site: str, n: int = 1) -> None:
         """Record ``n`` host-side numpy servings of ``site``'s request."""

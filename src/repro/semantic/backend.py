@@ -30,10 +30,18 @@ class Backend:
     ``SemanticRunner`` streams distinct misses to ``evaluate_batch`` in
     chunks of at most this many prompts (aligned with the serving tier's
     bucket size) instead of one monolithic batch.
+
+    ``supports_async`` marks backends that additionally implement the
+    ticket protocol (``submit_batch`` / ``collect``): the runner then
+    submits every chunk up front — so rendering/encoding chunk k+1
+    overlaps the engine's device work on chunk k — and collects all
+    results at the end. Sync backends keep the chunked
+    ``evaluate_batch`` shape.
     """
 
     calls: int
     preferred_batch_rows: Optional[int] = None
+    supports_async: bool = False
 
     def evaluate_batch(self, prompts: Sequence[str],
                        contexts: Sequence[dict]) -> list[object]:
@@ -78,45 +86,86 @@ class OracleBackend(Backend):
 
 class ModelBackend(Backend):
     """Wraps a callable ``answer_fn(prompts) -> list[str]`` (typically
-    ``ServingEngine.answer``); parses YES/NO or integers out of the reply."""
+    ``ServingEngine.answer``); parses YES/NO or integers out of the reply.
+
+    Constructed via ``from_engine(engine)`` (the default, continuous
+    mode) it also speaks the async ticket protocol: ``submit_batch``
+    enqueues prompts on the engine's continuous scheduler — row weights
+    become weighted-fair admission priorities — and returns immediately
+    (prefill launches under JAX async dispatch), ``collect`` drains the
+    tickets and parses the answers. ``from_engine(engine,
+    continuous=False)`` keeps the legacy drain-per-batch dispatch, the
+    serving benchmark's baseline."""
 
     def __init__(self, answer_fn: Callable[[Sequence[str]], list[str]],
                  out_dtype: str = "bool",
-                 preferred_batch_rows: Optional[int] = None):
+                 preferred_batch_rows: Optional[int] = None,
+                 engine=None):
         self.answer_fn = answer_fn
         self.out_dtype = out_dtype
         self.preferred_batch_rows = preferred_batch_rows
+        self.engine = engine
         self.calls = 0
 
+    @property
+    def supports_async(self) -> bool:
+        """Ticket protocol available iff a continuous engine is bound."""
+        return self.engine is not None
+
     @classmethod
-    def from_engine(cls, engine, out_dtype: str = "bool") -> "ModelBackend":
+    def from_engine(cls, engine, out_dtype: str = "bool",
+                    continuous: bool = True) -> "ModelBackend":
         """Wrap a ``ServingEngine``, inheriting its bucket-aligned
-        dispatch size so runner chunks map onto whole serving batches."""
-        return cls(engine.answer, out_dtype=out_dtype,
+        dispatch size so runner chunks map onto whole serving batches.
+        ``continuous=False`` pins the drained baseline path."""
+        if continuous:
+            return cls(engine.answer, out_dtype=out_dtype,
+                       preferred_batch_rows=getattr(
+                           engine, "preferred_batch_rows", None),
+                       engine=engine)
+        return cls(engine.answer_drained, out_dtype=out_dtype,
                    preferred_batch_rows=getattr(
                        engine, "preferred_batch_rows", None))
 
+    # ------------------------------------------------- async ticket API
+    def submit_batch(self, prompts, contexts, weights=None):
+        """Enqueue one chunk on the continuous scheduler; returns an
+        opaque handle for ``collect``. Does not block on the device."""
+        prompts = list(prompts)
+        self.calls += len(prompts)
+        ticket = self.engine.submit(prompts, weights=weights)
+        return ticket, list(contexts)
+
+    def collect(self, handles):
+        """Drain every submitted ticket and parse answers, in order."""
+        out = []
+        for ticket, ctxs in handles:
+            self.engine.drain(ticket)
+            raw = self.engine.answers(ticket)
+            out.extend(self._parse(r, ctx) for r, ctx in zip(raw, ctxs))
+        return out
+
+    # ------------------------------------------------------ sync path
     def evaluate_batch(self, prompts, contexts):
         self.calls += len(prompts)
         raw = self.answer_fn(list(prompts))
-        out = []
-        for r, ctx in zip(raw, contexts):
-            dtype = ctx.get("__dtype__", self.out_dtype)
-            txt = (r or "").strip().upper()
-            if dtype in ("bool",):
-                out.append(txt.startswith("YES") or txt.startswith("TRUE")
-                           or txt.startswith("1"))
-            elif dtype in ("int", "float"):
-                num = ""
-                for ch in txt:
-                    if ch.isdigit() or (ch == "-" and not num):
-                        num += ch
-                    elif num:
-                        break
-                try:
-                    out.append(int(num) if dtype == "int" else float(num))
-                except ValueError:
-                    out.append(0)
-            else:
-                out.append(r)
-        return out
+        return [self._parse(r, ctx) for r, ctx in zip(raw, contexts)]
+
+    def _parse(self, r, ctx):
+        dtype = ctx.get("__dtype__", self.out_dtype)
+        txt = (r or "").strip().upper()
+        if dtype in ("bool",):
+            return (txt.startswith("YES") or txt.startswith("TRUE")
+                    or txt.startswith("1"))
+        if dtype in ("int", "float"):
+            num = ""
+            for ch in txt:
+                if ch.isdigit() or (ch == "-" and not num):
+                    num += ch
+                elif num:
+                    break
+            try:
+                return int(num) if dtype == "int" else float(num)
+            except ValueError:
+                return 0
+        return r

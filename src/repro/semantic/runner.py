@@ -20,7 +20,12 @@ Backend dispatch is chunked: distinct misses go out in slices of
 ``max_batch_rows`` (defaulting to the backend's ``preferred_batch_rows``,
 which ``ModelBackend`` aligns with the serving engine's bucket size) so a
 huge pulled-up filter becomes a stream of bounded batches instead of one
-monolithic ``evaluate_batch``.
+monolithic ``evaluate_batch``. Against an async-capable backend
+(``supports_async`` — the continuous serving engine) the chunks are
+*submitted as tickets* instead of drained one by one: context
+construction for chunk k+1 overlaps device decode of chunk k, and each
+representative's row multiplicity rides along as its fair-admission
+weight (see ``docs/serving.md``).
 
 NULL semantics (paper §4.1): a row whose referenced value is NULL requires
 no LLM call; SF(NULL) = NULL (row excluded), SP(NULL) = NULL value.
@@ -109,15 +114,48 @@ class SemanticRunner:
             return self.max_batch_rows
         return getattr(self.backend, "preferred_batch_rows", None)
 
-    def _dispatch(self, keys: list, ctxs: list) -> list[object]:
-        """Send distinct misses to the backend in bounded chunks."""
+    @staticmethod
+    def _ctx_slice(ctxs, keys, s, e):
+        """Materialize contexts for one chunk: ``ctxs`` is either a
+        prebuilt list or a lazy builder called with the key slice (the
+        async path defers host-side context construction until the
+        chunk is actually submitted, so it overlaps device decode of
+        the previous chunk)."""
+        if callable(ctxs):
+            return ctxs(keys[s:e])
+        return list(ctxs[s:e])
+
+    def _dispatch(self, keys: list, ctxs,
+                  weights: Optional[Sequence[int]] = None) -> list[object]:
+        """Send distinct misses to the backend.
+
+        Sync backends get bounded chunks, each drained before the next
+        is built (the legacy shape). An async-capable backend
+        (``supports_async``) instead has every chunk submitted as a
+        ticket up front: ``submit_batch`` only enqueues + launches
+        prefill (JAX async dispatch), so rendering/encoding chunk k+1
+        overlaps decode of chunk k, and ``collect`` drains everything
+        at the end. ``weights`` (per-key row multiplicities) feed the
+        scheduler's row-weighted fair admission."""
+        if not keys:
+            return []
         limit = self._batch_limit()
-        if not limit or len(keys) <= limit:
-            return self.backend.evaluate_batch(keys, ctxs)
+        step = limit if limit else len(keys)
+        if getattr(self.backend, "supports_async", False):
+            handles = []
+            for s in range(0, len(keys), step):
+                w = list(weights[s:s + step]) if weights is not None \
+                    else None
+                handles.append(self.backend.submit_batch(
+                    list(keys[s:s + step]),
+                    self._ctx_slice(ctxs, keys, s, s + step),
+                    weights=w))
+            return self.backend.collect(handles)
         out: list[object] = []
-        for s in range(0, len(keys), limit):
-            out.extend(self.backend.evaluate_batch(keys[s:s + limit],
-                                                   ctxs[s:s + limit]))
+        for s in range(0, len(keys), step):
+            out.extend(self.backend.evaluate_batch(
+                list(keys[s:s + step]),
+                self._ctx_slice(ctxs, keys, s, s + step)))
         return out
 
     # ------------------------------------------------------------ evaluate
@@ -213,15 +251,24 @@ class SemanticRunner:
 
         def compute(missing_keys):
             key_to_ctx = {}
+            row_weight: dict[object, int] = {}
             for i in live_idx:
                 key_to_ctx.setdefault(prompts[i], contexts[i])
-            batch_ctx = []
-            for k in missing_keys:
-                c = dict(key_to_ctx[k])
-                c["__phi__"] = phi
-                c["__dtype__"] = out_dtype
-                batch_ctx.append(c)
-            return self._dispatch(list(missing_keys), batch_ctx)
+                row_weight[prompts[i]] = (row_weight.get(prompts[i], 0)
+                                          + int(counts[i]))
+
+            def build_ctx(chunk_keys):
+                batch_ctx = []
+                for k in chunk_keys:
+                    c = dict(key_to_ctx[k])
+                    c["__phi__"] = phi
+                    c["__dtype__"] = out_dtype
+                    batch_ctx.append(c)
+                return batch_ctx
+
+            mk = list(missing_keys)
+            return self._dispatch(mk, build_ctx,
+                                  weights=[row_weight[k] for k in mk])
 
         live_results = self.cache.lookup_batch(
             [prompts[i] for i in live_idx], compute,

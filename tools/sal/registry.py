@@ -53,6 +53,10 @@ SYNC_SITES = {
     "hash_join_probe": "device hash/sort-merge join returns its total",
     # semantic — device verdict cache
     "verdict_table": "VerdictTable.probe gathers cached verdicts",
+    # serving — LLM-tier decode fetches (split out of pipeline_syncs
+    # into ExecStats.serving_syncs; see docs/serving.md)
+    "serving_round": "continuous scheduler: one packed fetch per round",
+    "serving_decode": "drained baseline: per-decode-step token fetch",
 }
 
 SANCTIONED = frozenset({

@@ -1,8 +1,8 @@
 """SYNC and WIDTH: the host-bounce and dtype-width rules.
 
 SYNC scope: ``src/repro/engine/``, ``src/repro/kernels/``,
-``src/repro/semantic/`` — the layers whose host↔device traffic the
-cost model accounts. Flags, per non-sanctioned scope:
+``src/repro/semantic/``, ``src/repro/serving/`` — the layers whose
+host↔device traffic the cost model accounts. Flags, per non-sanctioned scope:
 
 * ``np.asarray`` / ``np.array`` / ``np.ascontiguousarray`` /
   ``np.unique`` / ``np.repeat`` / ``np.isin`` whose first operand is
@@ -33,7 +33,7 @@ from .hostflow import DEVICE, HOST, ModuleInfo, scope_env
 from .registry import INT32_KERNEL_ENTRIES, SANCTIONED, WIDTH_EXEMPT
 
 SYNC_DIRS = ("src/repro/engine/", "src/repro/kernels/",
-             "src/repro/semantic/")
+             "src/repro/semantic/", "src/repro/serving/")
 
 MATERIALIZERS = frozenset({"asarray", "array", "ascontiguousarray",
                            "unique", "repeat", "isin"})
