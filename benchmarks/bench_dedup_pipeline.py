@@ -75,7 +75,12 @@ def pulled_up_plan():
             .build())
 
 
-from pipeline_gate import PIPELINE_SYNCS_MAX, gate_result  # noqa: E402
+from pipeline_gate import (  # noqa: E402
+    PIPELINE_SYNCS_MAX,
+    PIPELINE_SYNCS_SMALL_MAX,
+    gate_result,
+    small_batch_gate,
+)
 
 
 def run_once(db, plan, vectorized: bool):
@@ -103,6 +108,23 @@ def pipeline_pass(db, plan, ref_rows: int, ref_stats) -> dict:
         (ref_stats.llm_calls, ref_stats.cache_hits,
          ref_stats.null_skipped), "device-pipeline stats mismatch"
     return gate_result(stats, snap)
+
+
+def small_batch_pass(batches: int = 5) -> dict:
+    """Many-small-batch sync gate (deterministic — smoke included):
+    the same plan executed repeatedly at micro-batch input sizes must
+    keep its per-execute sync SHAPE — every run within
+    ``PIPELINE_SYNCS_SMALL_MAX``, zero device-site fallbacks. A
+    per-row host round-trip that hides under the 120k-row amortised
+    budget blows this one on the first tiny batch."""
+    db = build_db(1_024, 64)
+    plan = pulled_up_plan()
+    ex = Executor(db, SemanticRunner(OracleBackend(truths=db.truths)),
+                  vectorized=True, kernel_impl="ref",
+                  fresh_cache_per_query=False)
+    HOST_SYNCS.reset()
+    stats = [ex.execute(plan)[1] for _ in range(batches)]
+    return small_batch_gate(stats, HOST_SYNCS.snapshot())
 
 
 def main(argv=None) -> int:
@@ -165,8 +187,15 @@ def main(argv=None) -> int:
           f"by_site={pipe['host_syncs']['by_site']}  "
           f"fallback_violations={pipe['fallback_violations']}")
 
+    # many-small-batch sync gate (deterministic — smoke included)
+    small = small_batch_pass()
+    print(f"small-batch pipeline: worst per-batch syncs="
+          f"{small['pipeline_syncs_per_batch_worst']} "
+          f"(max {PIPELINE_SYNCS_SMALL_MAX})  "
+          f"fallback_violations={small['fallback_violations']}")
+
     gated = not args.smoke
-    ok = (not gated or speedup >= 2.0) and pipe["pass"]
+    ok = (not gated or speedup >= 2.0) and pipe["pass"] and small["pass"]
     out = {
         "name": "dedup_pipeline",
         "command": "python benchmarks/bench_dedup_pipeline.py",
@@ -177,8 +206,11 @@ def main(argv=None) -> int:
         "speedup": speedup,
         "host_syncs": host_syncs,
         "pipeline": pipe,
+        "small_batch": small,
         "gate": {"speedup_min": 2.0 if gated else None,
-                 "pipeline_syncs_max": PIPELINE_SYNCS_MAX, "pass": ok},
+                 "pipeline_syncs_max": PIPELINE_SYNCS_MAX,
+                 "pipeline_syncs_small_max": PIPELINE_SYNCS_SMALL_MAX,
+                 "pass": ok},
     }
     args.json.parent.mkdir(parents=True, exist_ok=True)
     args.json.write_text(json.dumps(out, indent=2) + "\n")
@@ -198,6 +230,9 @@ def main(argv=None) -> int:
             print(f"FAIL: device pipeline sync gate: "
                   f"{pipe['pipeline_syncs']} syncs, "
                   f"violations={pipe['fallback_violations']}",
+                  file=sys.stderr)
+        if not small["pass"]:
+            print(f"FAIL: small-batch sync gate: {small}",
                   file=sys.stderr)
         return 1
     print("PASS" + ("" if gated else

@@ -46,7 +46,9 @@ from repro.semantic import OracleBackend, SemanticRunner  # noqa: E402
 from pipeline_gate import (  # noqa: E402
     PIPELINE_SYNCS_JOIN_MAX,
     PIPELINE_SYNCS_MAX,
+    PIPELINE_SYNCS_SMALL_MAX,
     gate_result,
+    small_batch_gate,
 )
 
 AGG_SPEEDUP_GATE = 5.0
@@ -136,6 +138,22 @@ def bench(db, plan, out_cols, repeats: int) -> dict:
             "_ref_rows": tables[False]}
 
 
+def small_batch_pass(batches: int = 5) -> dict:
+    """Many-small-batch sync gate (deterministic — smoke included):
+    the aggregate and join plans executed repeatedly at micro-batch
+    input sizes must keep their per-execute sync SHAPE — every run
+    within ``PIPELINE_SYNCS_SMALL_MAX``, zero device-site fallbacks."""
+    db = build_db(512, 64, 256)
+    ex = Executor(db, SemanticRunner(OracleBackend(truths={})),
+                  vectorized=True, kernel_impl="ref")
+    HOST_SYNCS.reset()
+    stats = []
+    for _ in range(batches):
+        for plan in (agg_plan(), join_plan()):
+            stats.append(ex.execute(plan)[1])
+    return small_batch_gate(stats, HOST_SYNCS.snapshot())
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--rows", type=int, default=120_000)
@@ -189,10 +207,17 @@ def main(argv=None) -> int:
               f"by_site={p['host_syncs']['by_site']}  "
               f"fallback_violations={p['fallback_violations']}")
 
+    # many-small-batch sync gate (deterministic — smoke included)
+    small = small_batch_pass()
+    print(f"small-batch pipeline: worst per-batch syncs="
+          f"{small['pipeline_syncs_per_batch_worst']} "
+          f"(max {PIPELINE_SYNCS_SMALL_MAX})  "
+          f"fallback_violations={small['fallback_violations']}")
+
     gated = not args.smoke
     ok = (not gated or (agg["speedup"] >= AGG_SPEEDUP_GATE
                         and join["speedup"] >= JOIN_SPEEDUP_GATE)) \
-        and pipe_ok
+        and pipe_ok and small["pass"]
     out = {
         "name": "relational_path",
         "command": "python benchmarks/bench_relational_path.py",
@@ -202,10 +227,12 @@ def main(argv=None) -> int:
         "aggregate": agg,
         "join": join,
         "pipeline": pipe,
+        "small_batch": small,
         "gate": {"aggregate_speedup_min": AGG_SPEEDUP_GATE if gated else None,
                  "join_speedup_min": JOIN_SPEEDUP_GATE if gated else None,
                  "pipeline_syncs_max": PIPELINE_SYNCS_MAX,
                  "pipeline_syncs_join_max": PIPELINE_SYNCS_JOIN_MAX,
+                 "pipeline_syncs_small_max": PIPELINE_SYNCS_SMALL_MAX,
                  "pass": ok},
     }
     args.json.parent.mkdir(parents=True, exist_ok=True)
@@ -230,6 +257,9 @@ def main(argv=None) -> int:
             detail = {k: (p["pipeline_syncs"], p["fallback_violations"])
                       for k, p in pipe.items()}
             print(f"FAIL: device pipeline sync gate: {detail}",
+                  file=sys.stderr)
+        if not small["pass"]:
+            print(f"FAIL: small-batch sync gate: {small}",
                   file=sys.stderr)
         return 1
     print("PASS" + ("" if gated else

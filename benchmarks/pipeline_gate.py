@@ -20,6 +20,14 @@ PIPELINE_SYNCS_MAX = 10
 # query drifting past this has re-grown a per-stage host round-trip
 PIPELINE_SYNCS_JOIN_MAX = 3
 
+# per-micro-batch budget for many-small-batch (streaming) runs: tiny
+# inputs must not change the sync SHAPE of a plan — the budget is per
+# batch, so a per-row host round-trip shows up as a budget blowout on
+# the very first 64-row batch instead of hiding under the 120k-row
+# amortised ceiling. Measured 4-6 for the streamed join+SF plans
+# (probe total + num_valid stats scalars + materialisation fetches).
+PIPELINE_SYNCS_SMALL_MAX = 8
+
 # host-numpy fallback sites that must stay silent on the device pipeline
 DEVICE_SITES = ("compact", "join_probe", "hash_join", "expand",
                 "group_key_codes", "group_build")
@@ -39,3 +47,22 @@ def gate_result(stats, snap: dict, *, max_syncs: int | None = None) -> dict:
             "host_syncs": snap,
             "fallback_violations": bad,
             "pass": stats.pipeline_syncs <= budget and not bad}
+
+
+def small_batch_gate(per_batch_stats, snap: dict, *,
+                     max_syncs: int | None = None) -> dict:
+    """Gate a many-small-batch run: EVERY batch's ``pipeline_syncs``
+    must fit the per-batch small budget (the worst batch decides), and
+    the device sites must have served zero host-numpy fallbacks across
+    the whole run. ``per_batch_stats`` is the per-micro-batch
+    ``ExecStats`` sequence; ``snap`` the run's ``HOST_SYNCS``
+    snapshot."""
+    budget = PIPELINE_SYNCS_SMALL_MAX if max_syncs is None else max_syncs
+    per_batch = [s.pipeline_syncs for s in per_batch_stats]
+    worst = max(per_batch, default=0)
+    bad = [s for s in DEVICE_SITES if s in snap["host_fallbacks"]]
+    return {"batches": len(per_batch),
+            "pipeline_syncs_per_batch_worst": worst,
+            "pipeline_syncs_small_max": budget,
+            "fallback_violations": bad,
+            "pass": worst <= budget and not bad}

@@ -128,7 +128,7 @@ class ExecStats:
     pipeline_syncs: int = 0  # data-path device→host fetches in execute()
     serving_syncs: int = 0  # LLM-tier fetches (SERVING_SITES), separate
     # physical operator -> count of equi joins it served this query
-    # ("hash" | "sort_merge" | "host" | "reference")
+    # ("hash" | "stream" | "sort_merge" | "host" | "reference")
     join_physical: dict = field(default_factory=dict)
 
     def bump(self, op: str, key: str, v: float) -> None:
@@ -168,6 +168,11 @@ class Executor:
         # prompt and context dict per row) for equivalence testing.
         self.vectorized = vectorized
         self.kernel_impl = kernel_impl
+        # optional streaming.StreamContext: when set, hash joins whose
+        # build side is covered by a live incremental StreamJoinBuild
+        # probe it instead of rebuilding the table (join_physical
+        # "stream"); identical match lists either way.
+        self.stream = None
 
     # ------------------------------------------------------------------ API
     def execute(self, plan: Node) -> tuple[Table, ExecStats]:
@@ -394,7 +399,11 @@ class Executor:
         operator (``Join.physical``; ``None`` = decide here):
 
         * ``"hash"`` — ``hash_join_match``: device open-addressing
-          build + one-pass probe (O(N), one sync for the total);
+          build + one-pass probe (O(N), one sync for the total); when
+          ``self.stream`` holds a live incremental build covering the
+          build-side table, that structure serves the probe instead
+          without rebuilding (recorded as ``"stream"``, bit-identical
+          match lists);
         * ``"sort_merge"`` — when the build side is already ordered by
           the key (``Table.sorted_by``, e.g. an aggregate output) the
           sort phase is skipped entirely (``sorted_probe_match``);
@@ -425,8 +434,21 @@ class Executor:
                 phys = ("sort_merge" if rt.sorted_by == rk
                         and np.dtype(bk_col.dtype).kind in "ib" else "hash")
             if phys == "hash":
-                out_l, out_r = hash_join_match(pk_col, bk_col,
-                                               impl=self.kernel_impl)
+                # streaming interception: a live incremental build
+                # covering EXACTLY this build-side table serves the
+                # probe in O(N_probe) without rebuilding (bit-identical
+                # match lists; None = not covered / skew fallback)
+                matches = None
+                if self.stream is not None:
+                    sjb = self.stream.build_for(rt, rk, self.kernel_impl)
+                    if sjb is not None:
+                        matches = sjb.probe(pk_col, self.kernel_impl)
+                if matches is not None:
+                    phys = "stream"
+                    out_l, out_r = matches
+                else:
+                    out_l, out_r = hash_join_match(pk_col, bk_col,
+                                                   impl=self.kernel_impl)
             elif phys == "sort_merge":
                 if (rt.sorted_by == rk
                         and np.dtype(bk_col.dtype).kind in "ib"):

@@ -19,6 +19,7 @@ Both count invocations so benchmarks can report C_LLM exactly.
 from __future__ import annotations
 
 import hashlib
+import time
 from dataclasses import dataclass
 from typing import Callable, Optional, Sequence
 
@@ -81,6 +82,12 @@ class OracleBackend(Backend):
                 if _stable_unit(prompt, self.seed) < self.noise:
                     val = not val
             out.append(val)
+        if self.per_call_latency_s > 0.0 and prompts:
+            # simulate LLM latency in one sleep per batch (the items of
+            # a batch are a single serving dispatch): C_LLM cost scales
+            # with the number of prompts actually evaluated, which is
+            # what makes cache-avoided calls visible in wall time
+            time.sleep(self.per_call_latency_s * len(prompts))
         return out
 
 

@@ -1,0 +1,21 @@
+"""Streaming ingestion + incremental standing-query maintenance.
+
+See ``docs/streaming.md`` for the append contract, per-structure
+incremental-update invariants, delta-emission semantics and the
+subsystem's sync sites.
+"""
+from .ingest import StreamContext, append_rows
+from .standing import (BatchDelta, StandingQuery, StreamSession,
+                       freeze_record)
+from .state import GroupSnapshot, StreamJoinBuild
+
+__all__ = [
+    "append_rows",
+    "StreamContext",
+    "StreamJoinBuild",
+    "GroupSnapshot",
+    "StandingQuery",
+    "StreamSession",
+    "BatchDelta",
+    "freeze_record",
+]

@@ -1,0 +1,321 @@
+"""Incremental device structures for append-only streams.
+
+``StreamJoinBuild`` maintains the SAME open-addressing hash table the
+``kernels/hash_join`` family builds from scratch — Fibonacci hashing,
+linear probing with scatter-min slot claims, load factor <= 0.5 — but
+accepts *appended* key batches in O(|delta|) device work instead of
+O(|table|) per micro-batch. Because a slot holds exactly one distinct
+key, the structure doubles as the incremental ``group_build``: occupied
+slots are the groups, slot owners are the first-occurrence
+representatives, and per-slot counts are the group sizes
+(``groups()``).
+
+Incremental-update invariants (held by every ``extend``):
+
+* ``owner[s]`` is the globally-first row inserted with slot ``s``'s key
+  (appends never displace an existing owner — new duplicates adopt the
+  owner's slot on key match, exactly like the batch build's rounds);
+* ``rank[r]`` is row ``r``'s occurrence index among rows with an equal
+  key, in row order. Ranks are assigned once at insert time and are
+  invariant under rehashing, because a slot is one distinct key;
+* probe chains never cross a hole to reach their key (we never delete,
+  and an insert claims the first hole on its chain);
+* capacity doubles before ``n`` reaches it, so ``H = 2**hbits >=
+  2 * cap >= 2 * n`` keeps the family's load invariant without any
+  per-ingest occupancy fetch — ingest costs ZERO device→host syncs.
+
+The grouped build order is derived lazily ON DEVICE from the persistent
+state (``order[starts[slot[r]] + rank[r]] = r``), reproducing the batch
+build's stable argsort-by-slot exactly, so ``probe()`` returns match
+lists bit-identical to ``hash_join_match`` / ``hash_join_np``:
+probe-major, build rows ascending per probe row, ONE device→host sync
+per probe (the match total, site ``stream_probe``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.hash_join.ops import (_MAX_DEVICE_TOTAL,
+                                     _expand_device_matches,
+                                     _pad_device_keys)
+from ..kernels.hash_join.ref import (EMPTY_SLOT, fib_hash_jnp,
+                                     hash_table_probe_jnp, table_bits)
+from ..kernels.sync import HOST_SYNCS
+from ..kernels.util import pow2_bucket, resolve_impl
+
+
+@partial(jax.jit, static_argnames=("hbits",))
+def _insert_kernel(owner, bk, counts, slot_all, rank_all, dkeys, start,
+                   n_new, *, hbits: int):
+    """Insert a padded delta of build keys into the live table.
+
+    Pure O(|delta| * chain) device pass: the delta rows run the batch
+    build's claim/adopt rounds against the EXISTING ``owner`` table
+    (global row ids keep the scatter-min tie-break identical), then
+    per-row occurrence ranks extend from the pre-delta slot counts.
+    Returns the updated persistent state plus the distinct-key count."""
+    h = 1 << hbits
+    hmask = h - 1
+    cap = bk.shape[0]
+    m = dkeys.shape[0]
+    drows = start + jnp.arange(m, dtype=jnp.int32)
+    valid = jnp.arange(m, dtype=jnp.int32) < n_new
+    # delta keys land in the global key column FIRST: a slot claimed by
+    # one delta row must be key-checkable by its in-delta duplicates
+    bk = bk.at[jnp.where(valid, drows, cap)].set(dkeys, mode="drop")
+
+    def cond(state):
+        return ~jnp.all(state[2])
+
+    def body(state):
+        owner, cur, resolved, dslot = state
+        target = jnp.where(~resolved & (owner[cur] == EMPTY_SLOT), cur, h)
+        owner = owner.at[target].min(drows, mode="drop")
+        own = owner[cur]
+        occupied = own != EMPTY_SLOT
+        key_at = bk[jnp.where(occupied, own, 0)]
+        ok = ~resolved & occupied & (key_at == dkeys)
+        dslot = jnp.where(ok, cur, dslot)
+        resolved = resolved | ok
+        cur = jnp.where(resolved, cur, (cur + 1) & hmask)
+        return owner, cur, resolved, dslot
+
+    owner, _, _, dslot = jax.lax.while_loop(
+        cond, body,
+        (owner, fib_hash_jnp(dkeys, hbits), ~valid,
+         jnp.zeros(m, jnp.int32)))
+
+    # within-delta occurrence index per slot (stable sort by slot, then
+    # position minus run start), added to the pre-delta slot count
+    pos = jnp.arange(m, dtype=jnp.int32)
+    skey = jnp.where(valid, dslot, h)
+    ordd = jnp.argsort(skey, stable=True).astype(jnp.int32)
+    ss = skey[ordd]
+    newrun = jnp.concatenate(
+        [jnp.ones((1,), bool), ss[1:] != ss[:-1]])
+    runstart = jax.lax.cummax(jnp.where(newrun, pos, 0))
+    within = pos - runstart
+    occ_in_delta = jnp.zeros(m, jnp.int32).at[ordd].set(within)
+    drank = counts[jnp.where(valid, dslot, 0)] + occ_in_delta
+    counts = counts.at[jnp.where(valid, dslot, h)].add(1, mode="drop")
+    tgt = jnp.where(valid, drows, cap)
+    slot_all = slot_all.at[tgt].set(dslot, mode="drop")
+    rank_all = rank_all.at[tgt].set(drank, mode="drop")
+    distinct = jnp.sum((owner != EMPTY_SLOT).astype(jnp.int32))
+    return owner, bk, counts, slot_all, rank_all, distinct
+
+
+@jax.jit
+def _order_kernel(counts, slot_all, rank_all, n):
+    """Derive (starts, order) from the persistent state on device.
+
+    ``order`` is the grouped build order the batch build produces with
+    its stable argsort by slot: scattering row ``r`` to position
+    ``starts[slot[r]] + rank[r]`` reproduces it exactly (rank == the
+    row's occurrence index == its stable-sort tie-break position)."""
+    cap = slot_all.shape[0]
+    starts = jnp.cumsum(counts) - counts
+    rows = jnp.arange(cap, dtype=jnp.int32)
+    valid = rows < n
+    slot_c = jnp.where(valid, slot_all, 0)
+    pos = jnp.where(valid, starts[slot_c] + rank_all, cap)
+    order = jnp.zeros(cap, jnp.int32).at[pos].set(rows, mode="drop")
+    return starts.astype(jnp.int32), order
+
+
+@partial(jax.jit, static_argnames=("hbits",))
+def _probe_kernel(pk, n_probe, bk, owner, counts, starts, *, hbits: int):
+    """One-pass probe against the live table: per-probe (cnt, offs)
+    into the grouped order plus the match total (int32 and a float32
+    magnitude guard) — the same shape ``_hash_join_device`` returns."""
+    pvalid = jnp.arange(pk.shape[0], dtype=jnp.int32) < n_probe
+    pslot = hash_table_probe_jnp(pk, pvalid, bk, owner, hbits)
+    hit = pslot >= 0
+    pslot_c = jnp.where(hit, pslot, 0)
+    cnt = jnp.where(hit, counts[pslot_c], 0)
+    offs = jnp.where(hit, starts[pslot_c], 0)
+    return cnt, offs, jnp.sum(cnt), jnp.sum(cnt.astype(jnp.float32))
+
+
+@jax.jit
+def _groups_kernel(owner, slot_all, counts, n):
+    """First-occurrence group view on device: occupied slots sorted by
+    owner row id give the representative order ``dedup_representatives``
+    produces; the inverse permutation yields dense per-row group ids."""
+    h = owner.shape[0]
+    occ = owner != EMPTY_SLOT
+    owner_key = jnp.where(occ, owner, EMPTY_SLOT)
+    order_slots = jnp.argsort(owner_key).astype(jnp.int32)
+    gid_of_slot = (jnp.zeros(h, jnp.int32)
+                   .at[order_slots].set(jnp.arange(h, dtype=jnp.int32)))
+    rows = jnp.arange(slot_all.shape[0], dtype=jnp.int32)
+    valid = rows < n
+    gids = jnp.where(valid, gid_of_slot[jnp.where(valid, slot_all, 0)], -1)
+    return (gids, owner_key[order_slots], counts[order_slots],
+            jnp.sum(occ.astype(jnp.int32)))
+
+
+@dataclass
+class GroupSnapshot:
+    """Host snapshot of the incremental group structures: the exact
+    shape ``dedup_representatives`` derives from a cold batch build.
+
+    ``reps`` are first-occurrence row ids ascending (group order),
+    ``counts`` the rows per group, ``group_ids`` the dense row → group
+    map over the live rows."""
+
+    num_groups: int
+    reps: np.ndarray
+    counts: np.ndarray
+    group_ids: np.ndarray
+
+
+class StreamJoinBuild:
+    """Incrementally-maintained join build table over one int32 key
+    column of an append-only base table.
+
+    Construction inserts the current snapshot; ``extend(new_table)``
+    inserts only the appended suffix (O(|delta|) device work, zero
+    syncs). ``probe(keys)`` serves an equi-join against the live build
+    side with ONE sync (the match total), bit-identical to
+    ``hash_join_match``; ``groups()`` snapshots the equivalent
+    incremental ``group_build`` view. ``table_ref`` pins the exact
+    ``Table`` object the state covers — the executor only consults a
+    build whose ``table_ref`` IS its (compacted) build-side table, so a
+    stale structure can never serve a join."""
+
+    def __init__(self, table_name: str, key: str, table, impl: str = "ref",
+                 min_cap: int = 1024):
+        self.table_name = table_name
+        self.key = key
+        self.impl = impl
+        self.min_cap = int(min_cap)
+        self.inserts = 0
+        self.rebuilds = 0
+        self.probes = 0
+        keys = table.col(key)
+        self._alloc(pow2_bucket(int(np.shape(keys)[0]), floor=self.min_cap))
+        self._insert(keys)
+        self.table_ref = table
+
+    # ------------------------------------------------------------ state
+    def _alloc(self, cap: int) -> None:
+        """(Re)allocate the persistent device arrays at capacity
+        ``cap`` (a power of two). ``hbits = table_bits(cap)`` keeps
+        ``H >= 2 * cap``, so the load invariant holds for ANY number of
+        distinct keys the capacity can hold."""
+        self.cap = cap
+        self.hbits = table_bits(cap)
+        h = 1 << self.hbits
+        self.n = 0
+        self.bk = jnp.zeros(cap, jnp.int32)
+        self.owner = jnp.full(h, EMPTY_SLOT, jnp.int32)
+        self.counts = jnp.zeros(h, jnp.int32)
+        self._slot = jnp.zeros(cap, jnp.int32)
+        self._rank = jnp.zeros(cap, jnp.int32)
+        self._starts = None
+        self._order = None
+        self._dirty = True
+        self._distinct_dev = None
+        self._distinct = 0
+
+    def _insert(self, delta) -> None:
+        """Insert a device int32 key batch after the current rows.
+        Grows (capacity doubling + full device rebuild — amortised
+        O(log growth) rebuilds) when the delta would overflow."""
+        m = int(np.shape(delta)[0])
+        if m == 0:
+            return
+        if self.n + m > self.cap:
+            all_keys = jnp.concatenate(
+                [self.bk[:self.n], delta.astype(jnp.int32)])
+            self._alloc(pow2_bucket(self.n + m, floor=self.min_cap))
+            self.rebuilds += 1
+            self._insert(all_keys)
+            return
+        bucket = pow2_bucket(m)
+        dk = delta.astype(jnp.int32)
+        if bucket != m:
+            dk = jnp.pad(dk, (0, bucket - m))
+        (self.owner, self.bk, self.counts, self._slot, self._rank,
+         self._distinct_dev) = _insert_kernel(
+            self.owner, self.bk, self.counts, self._slot, self._rank,
+            dk, self.n, m, hbits=self.hbits)
+        self.n += m
+        self.inserts += 1
+        self._dirty = True
+        self._distinct = None
+
+    def extend(self, new_table) -> None:
+        """Fold the rows appended since the last snapshot into the live
+        structures (only the suffix beyond ``self.n`` is touched)."""
+        keys = new_table.col(self.key)
+        self._insert(keys[self.n:])
+        self.table_ref = new_table
+
+    def _refresh(self) -> None:
+        if self._dirty:
+            self._starts, self._order = _order_kernel(
+                self.counts, self._slot, self._rank, self.n)
+            self._dirty = False
+
+    # ------------------------------------------------------- observers
+    @property
+    def distinct(self) -> int:
+        """Distinct keys in the live table — ONE cached scalar fetch
+        (site ``stream_build``), refreshed lazily after inserts."""
+        if self._distinct is None:
+            self._distinct = int(jax.device_get(self._distinct_dev))
+            HOST_SYNCS.tick(site="stream_build")
+        return self._distinct
+
+    # --------------------------------------------------------- serving
+    def probe(self, probe_keys, impl: str | None = None):
+        """Match lists ``(out_probe, out_build)`` for an equi-join with
+        this build side — same ordering contract, device output arrays
+        and single-sync cost as ``hash_join_match``. Returns ``None``
+        when the caller should fall back to the batch join (host impl
+        requested, or a skew total past the int32-addressable bound)."""
+        impl_r = resolve_impl(impl if impl is not None else self.impl,
+                              "host")
+        if impl_r == "host":
+            return None
+        n_probe = int(np.shape(probe_keys)[0])
+        if n_probe == 0 or self.n == 0:
+            empty = jnp.zeros(0, dtype=jnp.int32)
+            return empty, empty
+        self._refresh()
+        pk = _pad_device_keys(probe_keys, n_probe, pow2_bucket(n_probe))
+        cnt, offs, total, total_f = _probe_kernel(
+            pk, n_probe, self.bk, self.owner, self.counts, self._starts,
+            hbits=self.hbits)
+        total, total_f = jax.device_get((total, total_f))
+        HOST_SYNCS.tick(site="stream_probe")
+        self.probes += 1
+        if float(total_f) > _MAX_DEVICE_TOTAL:
+            return None  # pathological skew: int32 cannot address it
+        total = int(total)
+        if total == 0:
+            empty = jnp.zeros(0, dtype=jnp.int32)
+            return empty, empty
+        return _expand_device_matches(cnt, offs, self._order, total,
+                                      impl_r)
+
+    def groups(self) -> GroupSnapshot:
+        """Snapshot the incremental group view (ONE fetch, site
+        ``stream_groups``): equivalent to running
+        ``dedup_representatives`` / ``group_build`` cold over the
+        concatenated key column."""
+        if self.n == 0:
+            z = np.zeros(0, np.int32)
+            return GroupSnapshot(0, z, z.copy(), z.copy())
+        gids, reps, cnts, num = jax.device_get(_groups_kernel(
+            self.owner, self._slot, self.counts, self.n))
+        HOST_SYNCS.tick(site="stream_groups")
+        g = int(num)
+        return GroupSnapshot(g, reps[:g], cnts[:g], gids[:self.n])

@@ -26,11 +26,15 @@ Checks, per markdown file:
   ``src/repro/serving``, its "Exports" table carries no stale rows,
   and its sync-site table names exactly the registry sites whose key
   contains ``serving`` — both directions fail;
+* ``docs/streaming.md`` documents every public class of
+  ``src/repro/streaming``, its "Exports" table carries no stale rows,
+  and its sync-site table names exactly the registry sites whose key
+  contains ``stream`` — both directions fail;
 * the repo-root perf-trajectory snapshots (``BENCH_dedup.json`` /
-  ``BENCH_relational.json`` / ``BENCH_serving.json``, written by
-  full-size benchmark runs) are present, parse as JSON, name the
-  existing benchmark command that produced them and record a passing
-  gate.
+  ``BENCH_relational.json`` / ``BENCH_serving.json`` /
+  ``BENCH_streaming.json``, written by full-size benchmark runs) are
+  present, parse as JSON, name the existing benchmark command that
+  produced them and record a passing gate.
 
 Exit code 0 when everything resolves; 1 with a per-file report
 otherwise. Stdlib only — CI's docs job runs it with no deps installed.
@@ -64,19 +68,21 @@ REQUIRED = [
     "docs/cost_model.md",
     "docs/joins.md",
     "docs/serving.md",
+    "docs/streaming.md",
 ]
 
 PUBLIC_DEF = re.compile(r"^def ([a-z][A-Za-z0-9_]*)", re.MULTILINE)
 PUBLIC_CLASS = re.compile(r"^class ([A-Z][A-Za-z0-9_]*)", re.MULTILINE)
 HASH_JOIN_FAMILY = "src/repro/kernels/hash_join"
 SERVING_DIR = "src/repro/serving"
+STREAMING_DIR = "src/repro/streaming"
 README_MUST_CONTAIN = [
     "actions/workflows/ci.yml/badge.svg",   # the CI badge
     "examples/quickstart.py",               # the quickstart pointer
 ]
 # repo-root perf-trajectory snapshots written by full-size bench runs
 BENCH_ARTIFACTS = ["BENCH_dedup.json", "BENCH_relational.json",
-                   "BENCH_serving.json"]
+                   "BENCH_serving.json", "BENCH_streaming.json"]
 
 
 def check_bench_artifacts() -> list[str]:
@@ -231,6 +237,47 @@ def check_serving_doc() -> list[str]:
     return errors
 
 
+def check_streaming_doc() -> list[str]:
+    """docs/streaming.md must track ``src/repro/streaming``: every
+    public class documented, no stale rows in its Exports table, and
+    its sync-site table naming exactly the registry's stream sites."""
+    md = ROOT / "docs" / "streaming.md"
+    if not md.exists():
+        return ["docs/streaming.md: missing (the streaming-tier doc)"]
+    text = md.read_text()
+
+    exports = set()
+    for src in sorted((ROOT / STREAMING_DIR).glob("*.py")):
+        exports |= set(PUBLIC_CLASS.findall(src.read_text()))
+    errors = []
+    for name in sorted(exports):
+        if f"`{name}`" not in text:
+            errors.append(f"docs/streaming.md: {STREAMING_DIR} class "
+                          f"`{name}` is undocumented")
+    head, sep, tail = text.partition("## Exports")
+    if not sep:
+        errors.append("docs/streaming.md: no 'Exports' section")
+    else:
+        rows = {m.group(1)
+                for m in SITE_ROW.finditer(tail.split("\n## ")[0])}
+        rows.discard("export")  # the header row, if backticked
+        for name in sorted(rows - exports):
+            errors.append(f"docs/streaming.md: Exports row `{name}` is "
+                          f"not a public class in {STREAMING_DIR}")
+
+    documented = {m.group(1) for m in SITE_ROW.finditer(head)}
+    documented.discard("site")
+    registered = {s for s in _load_sync_sites() if "stream" in s}
+    for site in sorted(registered - documented):
+        errors.append(f"docs/streaming.md: registered stream site "
+                      f"`{site}` missing from the site table")
+    for site in sorted(documented - registered):
+        errors.append(f"docs/streaming.md: site table row `{site}` is "
+                      f"not a stream site in "
+                      f"tools/sal/registry.py::SYNC_SITES")
+    return errors
+
+
 def _check_token(tok: str) -> str | None:
     """Return an error string if ``tok`` should resolve but doesn't."""
     if "*" in tok or "<" in tok:
@@ -286,7 +333,7 @@ def main() -> int:
         print(f"FAIL: {err}")
     failed = failed or bool(bench_errors)
     site_errors = (check_sync_site_table() + check_joins_doc()
-                   + check_serving_doc())
+                   + check_serving_doc() + check_streaming_doc())
     for err in site_errors:
         print(f"FAIL: {err}")
     failed = failed or bool(site_errors)

@@ -57,6 +57,10 @@ SYNC_SITES = {
     # into ExecStats.serving_syncs; see docs/serving.md)
     "serving_round": "continuous scheduler: one packed fetch per round",
     "serving_decode": "drained baseline: per-decode-step token fetch",
+    # streaming — incremental structures (see docs/streaming.md)
+    "stream_build": "StreamJoinBuild.distinct: lazy distinct-key scalar",
+    "stream_probe": "incremental join probe returns its match total",
+    "stream_groups": "incremental group snapshot fetch (reps/counts/ids)",
 }
 
 SANCTIONED = frozenset({

@@ -33,7 +33,8 @@ from .hostflow import DEVICE, HOST, ModuleInfo, scope_env
 from .registry import INT32_KERNEL_ENTRIES, SANCTIONED, WIDTH_EXEMPT
 
 SYNC_DIRS = ("src/repro/engine/", "src/repro/kernels/",
-             "src/repro/semantic/", "src/repro/serving/")
+             "src/repro/semantic/", "src/repro/serving/",
+             "src/repro/streaming/")
 
 MATERIALIZERS = frozenset({"asarray", "array", "ascontiguousarray",
                            "unique", "repeat", "isin"})
