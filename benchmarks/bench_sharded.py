@@ -1,0 +1,227 @@
+"""Sharded data-tier benchmark: key-partitioned relational kernels on
+a forced multi-device host mesh vs the single-device device path.
+
+The workload is a query *stream* over a static fact table — the shape
+the partitioned tier is built for. A grouped aggregate (count + min +
+max over two int group keys) and an equi join run repeatedly against
+the same table; the partitioned executor pays one all_to_all exchange
+to lay the table out by key hash, then every later query reuses the
+cached ``ShardedTable`` layout and merged grouping (zero collectives
+on the warm path), while the single-device baseline rebuilds its group
+structures per query. Timing is wall clock over the warm stream; the
+exchange economics are asserted exactly via the per-query
+``ExecStats.collective_ops`` budget.
+
+    PYTHONPATH=src python benchmarks/bench_sharded.py \
+        [--rows 120000] [--dims 8000] [--queries 8] [--devices 4] \
+        [--smoke] [--json P]
+
+Acceptance gates: warm partitioned grouped aggregate >= 1.5x faster
+than the single-device device path (full mode only — never timing in
+CI), and — deterministic, so checked in smoke mode too — materialised
+row/order equivalence for both workloads against the single-device
+executor, plus the per-query collective budget: aggregate <= 1
+exchange cold and exactly 0 warm; join <= 2 cold (build + probe) and
+exactly 1 warm (probe only — the build side's layout is cached).
+``--smoke`` shrinks the workload for CI; full-size runs additionally
+write the repo-root ``BENCH_sharded.json`` perf-trajectory snapshot
+that ``tools/check_docs.py`` verifies.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+
+def _pre_devices(argv) -> int:
+    """Read --devices before jax imports: the host-platform device
+    count must be forced via XLA_FLAGS before jax initialises."""
+    for i, a in enumerate(argv):
+        if a == "--devices" and i + 1 < len(argv):
+            return int(argv[i + 1])
+        if a.startswith("--devices="):
+            return int(a.split("=", 1)[1])
+    return 4
+
+
+_DEVICES = _pre_devices(sys.argv[1:])
+_flags = os.environ.get("XLA_FLAGS", "")
+if "--xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        f"{_flags} --xla_force_host_platform_device_count="
+        f"{_DEVICES}").strip()
+
+import numpy as np  # noqa: E402
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core import Q  # noqa: E402
+from repro.engine import Database, Executor  # noqa: E402
+from repro.semantic import OracleBackend, SemanticRunner  # noqa: E402
+from repro.sharding import make_data_mesh  # noqa: E402
+
+SPEEDUP_MIN = 1.5
+AGG_COLLECTIVES_COLD_MAX = 1
+JOIN_COLLECTIVES_COLD_MAX = 2
+
+OUT_AGG = ["facts.k1", "facts.k2", "agg.n", "agg.lo", "agg.hi"]
+OUT_JOIN = ["facts.fact_id", "dims.dim_id", "dims.weight"]
+
+
+def build_db(rows: int, dims: int, seed: int = 0) -> Database:
+    rng = np.random.default_rng(seed)
+    facts = [{"fact_id": j, "k1": int(a), "k2": int(b),
+              "dim_id": int(d), "v": float(c)}
+             for j, (a, b, d, c) in enumerate(zip(
+                 rng.integers(0, 500, rows),
+                 rng.integers(0, 40, rows),
+                 rng.integers(0, dims, rows),
+                 rng.normal(size=rows)))]
+    dim_recs = [{"dim_id": i, "weight": float(w)}
+                for i, w in enumerate(rng.normal(size=dims))]
+    db = Database()
+    db.add_table("facts", facts)
+    db.add_table("dims", dim_recs)
+    db.truths = {}
+    return db
+
+
+def agg_plan():
+    return (Q.scan("facts")
+            .group_by(["facts.k1", "facts.k2"],
+                      aggs=[("count", "facts.v", "n"),
+                            ("min", "facts.v", "lo"),
+                            ("max", "facts.v", "hi")])
+            .build())
+
+
+def join_plan():
+    return (Q.scan("facts")
+            .join(Q.scan("dims"), "facts.dim_id", "dims.dim_id")
+            .build())
+
+
+def run_stream(ex: Executor, plan, queries: int):
+    """Execute ``plan`` ``queries`` times; per-query wall seconds and
+    collective counts, plus the last result table."""
+    walls, colls = [], []
+    table = None
+    for _ in range(queries):
+        t0 = time.perf_counter()
+        table, stats = ex.execute(plan)
+        walls.append(time.perf_counter() - t0)
+        colls.append(stats.collective_ops)
+    return walls, colls, table
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=120_000)
+    ap.add_argument("--dims", type=int, default=8_000)
+    ap.add_argument("--queries", type=int, default=8,
+                    help="length of the repeated query stream (first "
+                    "query is cold, the rest reuse the cached layout)")
+    ap.add_argument("--devices", type=int, default=4,
+                    help="forced host-platform device count / mesh "
+                    "shards (power of two; read before jax imports)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload; fail on crash/mismatch/"
+                    "collective budget, not timing")
+    ap.add_argument("--json", type=Path,
+                    default=Path("artifacts/bench/BENCH_sharded.json"))
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.rows, args.dims, args.queries = 4_000, 256, 3
+
+    db = build_db(args.rows, args.dims)
+    mesh = make_data_mesh(args.devices)
+    runner = SemanticRunner(OracleBackend(truths=db.truths))
+
+    single = Executor(db, runner, kernel_impl="ref")
+    part = Executor(db, runner, kernel_impl="ref", mesh=mesh)
+
+    errors: list[str] = []
+    results = {}
+    for name, plan, out_cols, cold_max, warm_exact in (
+            ("aggregate", agg_plan(), OUT_AGG,
+             AGG_COLLECTIVES_COLD_MAX, 0),
+            ("join", join_plan(), OUT_JOIN,
+             JOIN_COLLECTIVES_COLD_MAX, 1)):
+        # untimed warmup compiles both paths (and lays out the cold
+        # partition exchange exactly once, measured via collectives)
+        _, colls_p, tp = run_stream(part, plan, 2)
+        run_stream(single, plan, 2)
+        if colls_p[0] > cold_max:
+            errors.append(f"{name}: cold query paid {colls_p[0]} "
+                          f"collectives (budget {cold_max})")
+
+        ws, _, ts = run_stream(single, plan, args.queries)
+        wp, cp, tp = run_stream(part, plan, args.queries)
+        if any(c != warm_exact for c in cp):
+            errors.append(f"{name}: warm collectives {cp} != "
+                          f"{warm_exact} per query")
+        rows_s = db.materialize(ts, out_cols)
+        rows_p = db.materialize(tp, out_cols)
+        if rows_s != rows_p:
+            errors.append(f"{name}: materialised outputs differ "
+                          f"({len(rows_s)} vs {len(rows_p)} rows)")
+        wall_s, wall_p = sum(ws), sum(wp)
+        results[name] = {
+            "single_wall_s": wall_s, "partitioned_wall_s": wall_p,
+            "speedup": wall_s / max(wall_p, 1e-12),
+            "warm_collectives_per_query": warm_exact,
+            "cold_collectives": colls_p[0], "rows_out": len(rows_p),
+        }
+        print(f"{name}: single={wall_s:.3f}s partitioned="
+              f"{wall_p:.3f}s speedup="
+              f"{results[name]['speedup']:.2f}x "
+              f"collectives cold={colls_p[0]} warm={warm_exact}/query")
+
+    for e in errors:
+        print(f"GATE FAIL: {e}", file=sys.stderr)
+
+    agg_speedup = results["aggregate"]["speedup"]
+    gated = not args.smoke
+    ok = not errors and (not gated or agg_speedup >= SPEEDUP_MIN)
+    out = {
+        "name": "sharded",
+        "command": "python benchmarks/bench_sharded.py",
+        "config": {"rows": args.rows, "dims": args.dims,
+                   "queries": args.queries, "devices": args.devices,
+                   "smoke": args.smoke},
+        "aggregate": results["aggregate"],
+        "join": results["join"],
+        "errors": errors,
+        "gate": {"speedup_min": SPEEDUP_MIN if gated else None,
+                 "aggregate_speedup": agg_speedup,
+                 "collective_budget": not any(
+                     "collectives" in e for e in errors),
+                 "equivalence": not any(
+                     "differ" in e for e in errors),
+                 "pass": ok},
+    }
+    args.json.parent.mkdir(parents=True, exist_ok=True)
+    args.json.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {args.json}")
+    if not args.smoke:
+        root_json = Path(__file__).resolve().parent.parent \
+            / "BENCH_sharded.json"
+        root_json.write_text(json.dumps(out, indent=2) + "\n")
+        print(f"wrote {root_json}")
+
+    if not ok:
+        if gated and agg_speedup < SPEEDUP_MIN:
+            print(f"FAIL: warm aggregate speedup {agg_speedup:.2f}x "
+                  f"< {SPEEDUP_MIN}x", file=sys.stderr)
+        return 1
+    print("PASS" + ("" if gated else
+                    " (smoke: equivalence + collective gates only)"))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -72,6 +72,13 @@ class CostParams:
     w_hash_build: float = 2.0
     # host-oracle penalty per row: device→host transfer + code space
     w_host_join: float = 8.0
+    # --- partitioned data tier (docs/sharding.md) ---
+    # n_shards > 1 models the mesh executor: a Join's / grouped
+    # Aggregate's local work divides across shards, but every row
+    # entering the operator crosses the all_to_all exchange once,
+    # charged at w_exchange per row. Defaults leave c(u) untouched.
+    n_shards: int = 1
+    w_exchange: float = 1.5
 
     def s_of(self, sf_id: int, hint: Optional[float] = None) -> float:
         if sf_id in self.sf_selectivity:
@@ -188,12 +195,27 @@ class Estimator:
         """Rows processed by relational operator u on SF-unfiltered input
         (paper: 'estimated by the relational optimizer'). Equi joins are
         priced as their cheapest physical operator, putting physical
-        join selection inside the DP objective's C_rel term."""
+        join selection inside the DP objective's C_rel term.
+
+        With ``n_shards > 1`` (the partitioned mesh executor) the local
+        work of a Join / grouped Aggregate divides across shards while
+        every input row pays the exchange term ``w_exchange`` once —
+        so the DP sees that partitioning is not free, exactly like the
+        cache-probe charge of pulled-up filters (§5)."""
         if isinstance(node, Scan):
             return float(self.catalog.size(node.table))
-        if isinstance(node, Join) and self.params.price_physical_joins:
-            return self.choose_join_physical(node)[1]
+        p = self.params
+        if isinstance(node, Join) and p.price_physical_joins:
+            local = self.choose_join_physical(node)[1]
+            if p.n_shards > 1:
+                exchanged = sum(self.card(c) for c in node.children)
+                return local / p.n_shards + p.w_exchange * exchanged
+            return local
         ins = sum(self.card(c) for c in node.children)
+        if (p.n_shards > 1 and isinstance(node, Aggregate)
+                and node.group_by):
+            return (ins + self.card(node)) / p.n_shards \
+                + p.w_exchange * ins
         return ins + self.card(node)
 
     # -- N_{u,SF}: distinct rows of ref tables visible at u -------------------

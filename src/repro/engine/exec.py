@@ -1,6 +1,6 @@
 """Physical executor for hybrid plans over columnar JAX tables.
 
-Vectorised, mask-based execution (DuckDB-pipeline analogue, DESIGN.md §4.2):
+Vectorised, mask-based execution (DuckDB-pipeline analogue):
 
 * σ / SF update validity masks (no materialisation);
 * ⋈ / × / γ / sort / limit materialise compacted outputs — on device
@@ -127,8 +127,10 @@ class ExecStats:
     prompts_rendered: int = 0  # host renders (distinct keys, vectorized)
     pipeline_syncs: int = 0  # data-path device→host fetches in execute()
     serving_syncs: int = 0  # LLM-tier fetches (SERVING_SITES), separate
+    collective_ops: int = 0  # cross-device exchanges (mesh executors)
     # physical operator -> count of equi joins it served this query
-    # ("hash" | "stream" | "sort_merge" | "host" | "reference")
+    # ("hash" | "stream" | "sort_merge" | "partitioned" | "host" |
+    # "reference")
     join_physical: dict = field(default_factory=dict)
 
     def bump(self, op: str, key: str, v: float) -> None:
@@ -160,7 +162,8 @@ class Executor:
     def __init__(self, db: Database, runner: SemanticRunner,
                  fresh_cache_per_query: bool = True,
                  vectorized: bool = True,
-                 kernel_impl: str = "auto"):
+                 kernel_impl: str = "auto",
+                 mesh=None, partitioned: Optional[bool] = None):
         self.db = db
         self.runner = runner
         self.fresh_cache_per_query = fresh_cache_per_query
@@ -168,6 +171,32 @@ class Executor:
         # prompt and context dict per row) for equivalence testing.
         self.vectorized = vectorized
         self.kernel_impl = kernel_impl
+        # mesh= enables the key-partitioned data tier (sharding/data.py):
+        # grouped aggregates and equi joins over partitionable keys run
+        # shard-local under shard_map with one all_to_all exchange,
+        # producing row-for-row identical output; partitioned=False
+        # keeps a mesh-constructed executor on the single-device path.
+        self.mesh = mesh
+        self.partitioned = (partitioned if partitioned is not None
+                            else mesh is not None)
+        if self.partitioned and mesh is None:
+            raise ValueError("partitioned=True requires mesh=")
+        self._pcache = None
+        if mesh is not None:
+            from ..sharding.data import PartitionCache
+
+            self._pcache = PartitionCache(mesh)
+            # partition the runner's verdict table by the same key hash
+            # (docs/sharding.md): the default-constructed table is
+            # per-query cache state, so rebinding it empty is lossless;
+            # an explicitly mesh-bound (or custom) table is left alone
+            vt = runner.cache.verdicts
+            if vt.mesh is None:
+                from ..semantic.cache import VerdictTable
+
+                runner.cache.verdicts = VerdictTable(
+                    capacity=vt.capacity,
+                    impl="on" if vt.enabled else "off", mesh=mesh)
         # optional streaming.StreamContext: when set, hash joins whose
         # build side is covered by a live incremental StreamJoinBuild
         # probe it instead of rebuilding the table (join_physical
@@ -185,8 +214,10 @@ class Executor:
         t0 = time.perf_counter()
         syncs0 = HOST_SYNCS.syncs
         serving0 = HOST_SYNCS.site_total(SERVING_SITES)
+        coll0 = HOST_SYNCS.collectives
         table = self._run(plan, stats)
         stats.wall_s = time.perf_counter() - t0
+        stats.collective_ops = HOST_SYNCS.collectives - coll0
         # serving-tier fetches scale with decode length, not with the
         # data path — split them out so pipeline_syncs budgets compare
         # across serving disciplines (drained vs continuous)
@@ -392,6 +423,22 @@ class Executor:
         dt = np.dtype(col.dtype)
         return dt.kind in "iub" and dt.itemsize <= 4
 
+    def _partitioned_join(self, rt: Table, rk: str, pk_col):
+        """Match lists from the key-partitioned mesh join, or None when
+        the partitioned path does not apply (no mesh, host impl, or a
+        key the partitioner cannot route) — the caller then falls back
+        to single-device physical selection."""
+        if (not self.partitioned
+                or resolve_impl(self.kernel_impl, "host") == "host"):
+            return None
+        from ..sharding.data import is_partitionable, sharded_join_match
+
+        if not (is_partitionable(pk_col)
+                and is_partitionable(rt.col(rk))):
+            return None
+        return sharded_join_match(self._pcache, rt, rk, pk_col,
+                                  impl=self.kernel_impl)
+
     def _equi_join(self, left: Table, right: Table, lk: str, rk: str,
                    physical: Optional[str] = None,
                    stats: Optional[ExecStats] = None) -> Table:
@@ -425,8 +472,16 @@ class Executor:
         if self.vectorized:
             pk_col, bk_col = lt.col(lk), rt.col(rk)
             phys = physical or "auto"
-            if not (self._join_key_physical(pk_col)
-                    and self._join_key_physical(bk_col)):
+            matches = self._partitioned_join(rt, rk, pk_col)
+            if matches is not None:
+                # key-partitioned mesh join: np match lists in the
+                # probe-major contract order; device int32 indices keep
+                # the joined gather on its fused device path
+                phys = "partitioned"
+                out_l = jnp.asarray(matches[0], dtype=jnp.int32)
+                out_r = jnp.asarray(matches[1], dtype=jnp.int32)
+            elif not (self._join_key_physical(pk_col)
+                      and self._join_key_physical(bk_col)):
                 phys = "host"  # string/64-bit keys: shared code space
                 out_l, out_r = join_match_lists(pk_col, bk_col,
                                                 impl=self.kernel_impl)
@@ -550,6 +605,11 @@ class Executor:
             return Table(columns=cols, valid=jnp.ones(1, dtype=bool))
         if not self.vectorized or n == 0:
             return self._aggregate_ref(node, t)
+        if (self.partitioned
+                and resolve_impl(self.kernel_impl, "host") != "host"):
+            out = self._aggregate_partitioned(node, t)
+            if out is not None:
+                return out
         return self._aggregate_vectorized(node, t)
 
     def _aggregate_ref(self, node: Aggregate, t: Table) -> Table:
@@ -621,6 +681,52 @@ class Executor:
                                     impl=self.kernel_impl)[grp_order])
         # np.unique(axis=0) group order ascends by the first group key:
         # the pre-grouped guarantee sort-merge joins price as free
+        return Table(columns=cols, valid=jnp.ones(g, dtype=bool),
+                     _num_valid=g, sorted_by=node.group_by[0])
+
+    def _aggregate_partitioned(self, node: Aggregate, t: Table
+                               ) -> Optional[Table]:
+        """Grouped aggregation over the key-partitioned mesh layout, or
+        None when a group key cannot be partitioned (string / float /
+        64-bit — the single-device path handles those).
+
+        The layout's merged ``SegmentPlan`` is ALREADY in the reference
+        ``np.unique(axis=0)`` group order with rows in original order
+        inside each group, so ``segmented_aggregate`` accumulates in
+        the exact single-device order (bit-identical float64 sums) and
+        no G-sized output permute is needed; device-dtype min/max stay
+        on device through the shard-local ``sharded_segment_reduce``,
+        mirroring the single-device ``segment_reduce`` routing. A
+        repeated query over an unchanged table reuses the cached layout
+        and pays zero collectives."""
+        from ..kernels.segmented_reduce.ops import _DEVICE_DTYPES
+        from ..sharding.data import (
+            is_partitionable,
+            sharded_segment_reduce,
+        )
+
+        key_cols = [t.col(k) for k in node.group_by]
+        if not all(is_partitionable(c) for c in key_cols):
+            return None
+        st = self._pcache.layout(t, tuple(node.group_by),
+                                 site="exchange_aggregate",
+                                 impl=self.kernel_impl)
+        plan, reps_sorted = st.group_plan()
+        cols = {}
+        for i, k in enumerate(node.group_by):
+            cols[k] = key_cols[i][jnp.asarray(reps_sorted,
+                                              dtype=jnp.int32)]
+        for func, c, name in node.aggs:
+            values = None if func == "count" else t.col(c)
+            if (func in ("min", "max") and is_device(values)
+                    and np.dtype(values.dtype) in _DEVICE_DTYPES
+                    and plan.num_groups > 0):
+                out = sharded_segment_reduce(st, values, func)
+            else:
+                out = segmented_aggregate(plan, values, func,
+                                          impl=self.kernel_impl)
+            cols[f"agg.{name}"] = as_column(out)
+        g = plan.num_groups
         return Table(columns=cols, valid=jnp.ones(g, dtype=bool),
                      _num_valid=g, sorted_by=node.group_by[0])
 

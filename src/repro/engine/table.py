@@ -1,6 +1,6 @@
 """Columnar tables for the JAX relational engine.
 
-TPU-native analogue of DuckDB's vectorised pipeline (DESIGN.md §4.2):
+TPU-native analogue of DuckDB's vectorised pipeline:
 tables are dicts of fixed-length JAX arrays plus a validity mask. Filters
 only update the mask; joins and aggregations materialise compacted outputs.
 String data lives in a host-side ``TextStore``; columns hold int32 handles

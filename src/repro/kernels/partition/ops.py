@@ -1,0 +1,80 @@
+"""Host-facing wrappers for the partition family.
+
+``shard_destinations`` maps key rows to their owning shard (FNV-1a row
+hash -> Fibonacci top-bits, the routing contract ``ref.py`` pins down)
+and ``shard_rank`` assigns every row its stable position inside the
+fixed-stride exchange bucket. Both thread the three-impl ``impl=``
+token: ``"kernel"``/``"interpret"`` run the Pallas rank kernel,
+``"ref"`` the pure-jnp oracle, ``"host"`` the exact numpy oracle
+(recorded as a host fallback so the accelerated path can assert zero
+host-side servings). The mesh orchestration that consumes these —
+``shard_map``, the single ``all_to_all``, collective accounting —
+lives in ``sharding/data.py``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..hash_dedup.ops import hash_rows
+from ..hash_dedup.ref import hash_rows_np, hash_rows_ref
+from ..sync import HOST_SYNCS
+from ..util import is_device_array, resolve_impl
+from .partition import shard_rank_kernel
+from .ref import shard_of_np, shard_of_ref, shard_rank_np, shard_rank_ref
+
+
+def shard_destinations(keys, n_shards: int, *, impl: str = "auto"):
+    """(N, C) int32 key rows -> (N,) int32 owning shard.
+
+    Device impls hash on device (``hash_rows`` kernel family) and keep
+    the result on device; ``impl="host"`` is the exact numpy oracle
+    over host keys (a host fallback, like ``group_key_codes``)."""
+    impl = resolve_impl(impl, "ref")
+    if impl == "host":
+        HOST_SYNCS.fallback("shard_rank")
+        return shard_of_np(hash_rows_np(np.asarray(keys)), n_shards)
+    k = jnp.asarray(keys, dtype=jnp.int32)
+    h = (hash_rows_ref(k) if impl == "ref"
+         else hash_rows(k, impl=impl))
+    return shard_of_ref(h, n_shards)
+
+
+def shard_rank(dest, base, *, n_shards: int, impl: str = "auto",
+               block_rows: int = 1024):
+    """Stable scatter positions into fixed-stride shard buckets:
+    ``base[dest] + #{earlier rows with the same dest}``. Rows keep
+    their relative order inside each bucket — the property the
+    exchange leans on to reproduce single-device float accumulation
+    order after the all-to-all."""
+    impl = resolve_impl(impl, "ref")
+    if impl == "host":
+        HOST_SYNCS.fallback("shard_rank")
+        return shard_rank_np(np.asarray(dest), np.asarray(base), n_shards)
+    d = jnp.asarray(dest, dtype=jnp.int32)
+    b = jnp.asarray(base, dtype=jnp.int32)
+    if impl == "ref":
+        return shard_rank_ref(d, b, n_shards)
+    n = d.shape[0]
+    if n % block_rows:
+        pad = block_rows - n % block_rows
+        d = jnp.concatenate([d, jnp.zeros(pad, dtype=jnp.int32)])
+        out = shard_rank_kernel(d, b, n_shards=n_shards,
+                                block_rows=block_rows,
+                                interpret=(impl == "interpret"))
+        return out[:n]
+    return shard_rank_kernel(d, b, n_shards=n_shards,
+                             block_rows=block_rows,
+                             interpret=(impl == "interpret"))
+
+
+def is_partitionable(col) -> bool:
+    """True for columns the partitioned operators accept as keys:
+    device-resident narrow integers / booleans (the dtypes whose int32
+    cast is exact AND whose sort order survives it). Floats (NaN group
+    semantics), strings and 64-bit columns take the single-device
+    path."""
+    if not is_device_array(col):
+        return False
+    dt = np.dtype(col.dtype)
+    return dt.kind in "ib" and dt.itemsize <= 4

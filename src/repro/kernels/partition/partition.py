@@ -1,0 +1,61 @@
+"""Stable shard-rank — the Pallas kernel behind the data-tier exchange.
+
+The partitioned data tier (``sharding/data.py``) routes every row to
+the shard its key hash names, then performs ONE ``all_to_all``. The
+exchange needs each source device's rows laid out bucket-major: a
+fixed-stride (P, L) block where bucket p holds the local rows destined
+for shard p, in local row order. That layout is a stable counting-rank
+by destination — the single-digit case of the hash join's LSD radix
+rank, with the mesh's P shard buckets instead of 256 radix digits.
+
+As in ``hash_join.hash_join``, the TPU grid iterates row tiles
+sequentially and the kernel carries the (P,) per-bucket running counts
+across tiles in VMEM scratch; each row scatters to
+``base[dest] + seen_before[dest] + rank_in_tile``. The SAL KERNEL rule
+keeps this file numpy-free.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _shard_rank_kernel(dest_ref, base_ref, out_ref, carry):
+    r = pl.program_id(0)
+
+    @pl.when(r == 0)
+    def _():
+        carry[...] = jnp.zeros_like(carry)
+
+    n_shards = carry.shape[0]
+    d = dest_ref[...]                     # (block_rows,) int32 in [0, P)
+    buckets = jax.lax.broadcasted_iota(jnp.int32, (d.shape[0], n_shards), 1)
+    onehot = (d[:, None] == buckets).astype(jnp.int32)
+    # rank of each row among same-bucket rows within this tile (0-based)
+    rank = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=1) - 1
+    before = carry[...]                   # same-bucket rows in prior tiles
+    out_ref[...] = (jnp.sum(onehot * (base_ref[...] + before)[None, :],
+                            axis=1) + rank)
+    carry[...] = before + jnp.sum(onehot, axis=0)
+
+
+def shard_rank_kernel(dest, base, *, n_shards: int,
+                      block_rows: int = 1024, interpret: bool = False):
+    """dest: (N,) int32 in [0, n_shards) with N % block_rows == 0
+    (callers bucket N to a power of two); base: (n_shards,) int32
+    exclusive bucket offsets -> (N,) int32 stable scatter destinations:
+    row i lands at ``base[dest[i]] + #{j < i : dest[j] == dest[i]}``."""
+    n = dest.shape[0]
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        _shard_rank_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows,), lambda i: (i,)),
+                  pl.BlockSpec((n_shards,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((n_shards,), jnp.int32)],
+        interpret=interpret,
+    )(dest, base)

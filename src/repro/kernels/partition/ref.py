@@ -1,0 +1,72 @@
+"""Oracles for the data-tier partition ops: shard routing (Fibonacci
+top-bits over the FNV-1a row hash) and the stable bucket rank, as
+pure-jnp references plus their exact numpy mirrors.
+
+The routing contract the jnp and numpy implementations pin down bit
+for bit: a row with key hash ``h`` (uint32, ``hash_rows_ref`` /
+``hash_rows_np`` family) lives on shard
+``(h * FIB_MULT) >> (32 - log2 P)`` — the multiplicative spread uses
+the TOP bits, so it composes with structures that consume the LOW bits
+of the same hash (the ``VerdictTable`` keeps its in-shard slot from
+``h & (local_capacity - 1)``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# 2**32 / golden ratio — Fibonacci-hash multiplier (same constant as
+# the hash join's slot spread, ``hash_join.ref.fib_hash_jnp``)
+FIB_MULT = np.uint32(2654435769)
+
+
+def shard_bits(n_shards: int) -> int:
+    """log2 of a power-of-two shard count (validated)."""
+    if n_shards < 1 or n_shards & (n_shards - 1):
+        raise ValueError(f"n_shards must be a power of two: {n_shards}")
+    return n_shards.bit_length() - 1
+
+
+def shard_of_ref(h, n_shards: int):
+    """(N,) uint32 key hashes -> (N,) int32 owning shard (pure jnp)."""
+    bits = shard_bits(n_shards)
+    if bits == 0:
+        return jnp.zeros(h.shape, dtype=jnp.int32)
+    spread = h.astype(jnp.uint32) * jnp.uint32(FIB_MULT)
+    return (spread >> jnp.uint32(32 - bits)).astype(jnp.int32)
+
+
+def shard_of_np(h, n_shards: int) -> np.ndarray:
+    """Exact numpy mirror of ``shard_of_ref`` (integer wrap-around is
+    numpy's native modular arithmetic, matching jnp bit for bit)."""
+    bits = shard_bits(n_shards)
+    h = np.asarray(h, dtype=np.uint32)
+    if bits == 0:
+        return np.zeros(h.shape, dtype=np.int32)
+    spread = h * FIB_MULT
+    return (spread >> np.uint32(32 - bits)).astype(np.int32)
+
+
+def shard_rank_ref(dest, base, n_shards: int):
+    """Stable counting rank, pure jnp: (N,) int32 destinations in
+    [0, n_shards) + (n_shards,) int32 exclusive bucket offsets ->
+    (N,) int32 scatter positions ``base[dest] + seen_before`` — the
+    same contract as ``partition.shard_rank_kernel``."""
+    buckets = jnp.arange(n_shards, dtype=jnp.int32)
+    onehot = (dest[:, None] == buckets[None, :]).astype(jnp.int32)
+    within = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=1) - 1
+    return base[dest] + within
+
+
+def shard_rank_np(dest, base, n_shards: int) -> np.ndarray:
+    """Exact numpy oracle for the rank kernel (stable argsort)."""
+    dest = np.asarray(dest, dtype=np.int32)
+    base = np.asarray(base, dtype=np.int32)
+    out = np.empty(dest.shape[0], dtype=np.int32)
+    order = np.argsort(dest, kind="stable")
+    sorted_d = dest[order]
+    starts = np.searchsorted(sorted_d, np.arange(n_shards, dtype=np.int32),
+                             side="left")
+    within = np.arange(dest.shape[0]) - starts[sorted_d]
+    out[order] = base[sorted_d] + within.astype(np.int32)
+    return out

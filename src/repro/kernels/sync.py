@@ -34,11 +34,20 @@ class HostSyncStats:
     how often a wrapper served the request with host-side numpy instead
     of a device pass (``impl="host"`` — zero device fetches, but host
     ``np.unique``/``np.repeat`` work the accelerated path must avoid).
+
+    ``collectives`` counts cross-device exchanges (one per collective
+    launched by the partitioned data tier — the all-to-all behind a
+    partition, the gathered partials of a sharded reduce), broken down
+    by exchange site in ``by_collective``; they are the mesh analogue
+    of ``syncs`` and feed ``ExecStats.collective_ops`` the same way
+    ``pipeline_syncs`` is fed (see docs/sharding.md).
     """
 
     syncs: int = 0
     by_site: dict = field(default_factory=dict)
     host_fallbacks: dict = field(default_factory=dict)
+    collectives: int = 0
+    by_collective: dict = field(default_factory=dict)
 
     def tick(self, n: int = 1, site: str | None = None) -> None:
         """Record ``n`` device→host fetches, attributed to ``site``."""
@@ -55,11 +64,23 @@ class HostSyncStats:
         """Record ``n`` host-side numpy servings of ``site``'s request."""
         self.host_fallbacks[site] = self.host_fallbacks.get(site, 0) + n
 
+    def collective(self, site: str, n: int = 1) -> None:
+        """Record ``n`` cross-device exchanges launched at ``site``
+        (registered in ``tools/sal/registry.py::COLLECTIVE_SITES``)."""
+        self.collectives += n
+        self.by_collective[site] = self.by_collective.get(site, 0) + n
+
+    def collective_total(self, sites) -> int:
+        """Sum of ``by_collective`` counts over ``sites``."""
+        return sum(self.by_collective.get(s, 0) for s in sites)
+
     def reset(self) -> None:
         """Zero every counter (benchmarks call this between paths)."""
         self.syncs = 0
         self.by_site = {}
         self.host_fallbacks = {}
+        self.collectives = 0
+        self.by_collective = {}
 
     def snapshot(self) -> dict:
         """JSON-ready copy of all counters for bench artifacts."""
@@ -67,6 +88,8 @@ class HostSyncStats:
             "syncs": self.syncs,
             "by_site": dict(self.by_site),
             "host_fallbacks": dict(self.host_fallbacks),
+            "collectives": self.collectives,
+            "by_collective": dict(self.by_collective),
         }
 
 

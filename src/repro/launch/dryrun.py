@@ -1,9 +1,15 @@
 import os
-os.environ["XLA_FLAGS"] = (
-    os.environ.get("DRYRUN_XLA_FLAGS",
-                   "--xla_force_host_platform_device_count=512"))
-# The two lines above MUST run before any other import: jax locks the
-# device count on first initialisation.
+
+# The CLI needs a large forced host-device count, and it MUST be set
+# before any other import: jax locks the device count on first
+# initialisation. Only the `python -m repro.launch.dryrun` entry point
+# gets it — a plain library import (tests pull `collective_bytes`)
+# must NOT mutate the process's XLA flags, or every later jax user in
+# that process inherits 512 phantom devices.
+if __name__ == "__main__":
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("DRYRUN_XLA_FLAGS",
+                       "--xla_force_host_platform_device_count=512"))
 
 import argparse  # noqa: E402
 import json  # noqa: E402

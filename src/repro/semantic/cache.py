@@ -84,12 +84,30 @@ class VerdictTable:
     two distinct key rows colliding on both hashes is the accepted
     ~2^-64 caveat of the design; ``impl="off"`` disables the table
     outright. ``impl="auto"`` enables it only on TPU backends (the host
-    dict wins on CPU); ``impl="on"`` forces it (tests)."""
+    dict wins on CPU); ``impl="on"`` forces it (tests).
 
-    def __init__(self, capacity: int = 1 << 15, impl: str = "auto"):
+    ``mesh=`` partitions the table across a 1-D device mesh by the SAME
+    key-hash routing as the partitioned data tier (Fibonacci top bits of
+    the tag — ``kernels.partition.ref.shard_of_np``): a key's slot is
+    ``owner * (capacity / P) + (tag & (capacity / P - 1))``, and the
+    columns are placed shard-wise (``NamedSharding``) so the slot range
+    a probe touches lives on the shard the key's data rows occupy. The
+    top-bits/low-bits split keeps the two hash consumers independent;
+    verdict semantics are unchanged (only the collision pattern moves)."""
+
+    def __init__(self, capacity: int = 1 << 15, impl: str = "auto",
+                 mesh=None):
         if capacity & (capacity - 1):
             raise ValueError(f"capacity must be a power of two: {capacity}")
         self.capacity = capacity
+        self.mesh = mesh
+        self._n_shards = 1
+        if mesh is not None:
+            self._n_shards = int(np.prod(list(mesh.shape.values())))
+            if capacity % self._n_shards:
+                raise ValueError(
+                    f"capacity {capacity} must divide evenly across "
+                    f"{self._n_shards} shards")
         if impl == "auto":
             self.enabled = jax.default_backend() == "tpu"
         elif impl == "on":
@@ -108,6 +126,25 @@ class VerdictTable:
         self._fps = jnp.zeros(self.capacity, dtype=jnp.uint32)
         self._verdicts = jnp.full(self.capacity, VERDICT_MISS,
                                   dtype=jnp.int8)
+        if self.mesh is not None:
+            sh = jax.sharding.NamedSharding(
+                self.mesh, jax.sharding.PartitionSpec(
+                    self.mesh.axis_names[0]))
+            self._tags = jax.device_put(self._tags, sh)
+            self._fps = jax.device_put(self._fps, sh)
+            self._verdicts = jax.device_put(self._verdicts, sh)
+
+    def _slots(self, tags: np.ndarray) -> np.ndarray:
+        """Slot index per tag. Single-device: the tag's low bits.
+        Partitioned: owning shard (tag top bits, the data tier's
+        routing) * local capacity + the tag's low bits within it."""
+        if self._n_shards == 1:
+            return tags & np.uint32(self.capacity - 1)
+        from ..kernels.partition.ref import shard_of_np
+
+        local = self.capacity // self._n_shards
+        owner = shard_of_np(tags, self._n_shards).astype(np.uint32)
+        return owner * np.uint32(local) + (tags & np.uint32(local - 1))
 
     def clear(self) -> None:
         """Drop every binding (query-scope reset, with the host cache)."""
@@ -134,7 +171,7 @@ class VerdictTable:
         if not self.enabled or len(np.asarray(hashes)) == 0:
             return
         tags, fps = self._salted(phi, hashes, fps)
-        slots_np = tags & np.uint32(self.capacity - 1)
+        slots_np = self._slots(tags)
         first = np.unique(slots_np, return_index=True)[1]
         tags, fps = tags[first], fps[first]
         verdicts = np.asarray(verdicts, dtype=np.int8)[first]
@@ -158,8 +195,7 @@ class VerdictTable:
         if not self.enabled or g == 0 or self._n_bound == 0:
             return np.full(g, VERDICT_MISS, dtype=np.int8)
         tags, fps = self._salted(phi, hashes, fps)
-        slots = jnp.asarray(tags & np.uint32(self.capacity - 1),
-                            dtype=jnp.int32)
+        slots = jnp.asarray(self._slots(tags), dtype=jnp.int32)
         v = self._verdicts[slots]
         hit = ((v != VERDICT_MISS)
                & (self._tags[slots] == jnp.asarray(tags))

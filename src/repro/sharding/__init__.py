@@ -1,4 +1,21 @@
-"""Sharding policies: logical axis -> mesh axis mapping."""
+"""Sharding: model-tier policies (logical axis -> mesh axis mapping)
+and the key-partitioned data tier (``sharding.data``)."""
 from .policy import ShardingPolicy, spec_tree
 
-__all__ = ["ShardingPolicy", "spec_tree"]
+__all__ = ["ShardingPolicy", "spec_tree", "DATA_AXIS", "make_data_mesh",
+           "PartitionCache", "ShardedTable", "partition_table",
+           "partition_columns", "merge_partitions", "sharded_join_match",
+           "sharded_segment_reduce"]
+
+_DATA_NAMES = frozenset(__all__) - {"ShardingPolicy", "spec_tree"}
+
+
+def __getattr__(name):
+    # the data tier imports the engine (Table); loading it lazily keeps
+    # `import repro.sharding` usable from model-tier code that never
+    # touches the relational engine
+    if name in _DATA_NAMES:
+        from . import data
+
+        return getattr(data, name)
+    raise AttributeError(name)

@@ -7,7 +7,7 @@ Parameters and activations are annotated with *logical* axis names; a
     embed    -> FSDP shard of d_model-like dims (params only)
     heads    -> tensor-parallel 'model'
     kv_heads -> 'model' when the arch's KV head count divides TP, else
-                replicated (GQA replication, DESIGN.md §4.4)
+                replicated (GQA replication)
     mlp/vocab/expert -> 'model' (TP / EP)
     seq      -> 'model' when sequence parallelism is on (activations)
     layers / conv / state / None -> replicated
@@ -35,7 +35,7 @@ class ShardingPolicy:
     seq_parallel: bool = False
     # FSDP over params: when False, 'embed' maps to None (pure TP+DP)
     fsdp_params: bool = True
-    # serving-mode knobs (EXPERIMENTS.md §Perf):
+    # serving-mode knobs:
     # shard KV/latent caches along the sequence dim over the TP axis
     shard_cache_seq: bool = False
     # MoE expert-parallelism over (data x model) instead of model only —

@@ -90,3 +90,15 @@ class TestRooflineAlgebra:
         r = analyze(_cell(memory={"argument_bytes": 1e15, "temp_bytes": 0},
                           collectives={"_counts": {}}))
         assert r.roofline_frac <= 1.0
+
+
+def test_library_import_does_not_mutate_xla_flags():
+    """Importing the dry-run module for its parsing helpers must not
+    force a phantom host-device count on the whole process: the
+    512-device default is CLI-only (`python -m repro.launch.dryrun`).
+    A leak here poisons every later jax initialisation in the test
+    process — the data-tier mesh would silently become 512-way."""
+    import os
+
+    flags = os.environ.get("XLA_FLAGS", "")
+    assert "--xla_force_host_platform_device_count=512" not in flags

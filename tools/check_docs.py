@@ -30,11 +30,18 @@ Checks, per markdown file:
   ``src/repro/streaming``, its "Exports" table carries no stale rows,
   and its sync-site table names exactly the registry sites whose key
   contains ``stream`` — both directions fail;
+* ``docs/sharding.md`` documents every public def/class of
+  ``src/repro/sharding``, its "Exports" table carries no stale rows,
+  its collective-site table names exactly the keys of
+  ``tools/sal/registry.py::COLLECTIVE_SITES`` and its sync-site table
+  exactly the registry sites whose key contains ``shard`` — all in
+  both directions;
 * the repo-root perf-trajectory snapshots (``BENCH_dedup.json`` /
   ``BENCH_relational.json`` / ``BENCH_serving.json`` /
-  ``BENCH_streaming.json``, written by full-size benchmark runs) are
-  present, parse as JSON, name the existing benchmark command that
-  produced them and record a passing gate.
+  ``BENCH_streaming.json`` / ``BENCH_sharded.json``, written by
+  full-size benchmark runs) are present, parse as JSON, name the
+  existing benchmark command that produced them and record a passing
+  gate.
 
 Exit code 0 when everything resolves; 1 with a per-file report
 otherwise. Stdlib only — CI's docs job runs it with no deps installed.
@@ -69,6 +76,7 @@ REQUIRED = [
     "docs/joins.md",
     "docs/serving.md",
     "docs/streaming.md",
+    "docs/sharding.md",
 ]
 
 PUBLIC_DEF = re.compile(r"^def ([a-z][A-Za-z0-9_]*)", re.MULTILINE)
@@ -76,13 +84,15 @@ PUBLIC_CLASS = re.compile(r"^class ([A-Z][A-Za-z0-9_]*)", re.MULTILINE)
 HASH_JOIN_FAMILY = "src/repro/kernels/hash_join"
 SERVING_DIR = "src/repro/serving"
 STREAMING_DIR = "src/repro/streaming"
+SHARDING_DIR = "src/repro/sharding"
 README_MUST_CONTAIN = [
     "actions/workflows/ci.yml/badge.svg",   # the CI badge
     "examples/quickstart.py",               # the quickstart pointer
 ]
 # repo-root perf-trajectory snapshots written by full-size bench runs
 BENCH_ARTIFACTS = ["BENCH_dedup.json", "BENCH_relational.json",
-                   "BENCH_serving.json", "BENCH_streaming.json"]
+                   "BENCH_serving.json", "BENCH_streaming.json",
+                   "BENCH_sharded.json"]
 
 
 def check_bench_artifacts() -> list[str]:
@@ -116,15 +126,23 @@ def check_bench_artifacts() -> list[str]:
     return errors
 
 
-def _load_sync_sites() -> dict:
-    """Load ``SYNC_SITES`` from the SAL registry by file path (the
-    registry is pure data with no package-relative imports, so this
-    works without putting the repo root on ``sys.path``)."""
+def _load_registry():
+    """Load the SAL registry module by file path (pure data, no
+    package-relative imports, so this works without putting the repo
+    root on ``sys.path``)."""
     path = ROOT / "tools" / "sal" / "registry.py"
     spec = importlib.util.spec_from_file_location("_sal_registry", path)
     mod = importlib.util.module_from_spec(spec)
     spec.loader.exec_module(mod)
-    return mod.SYNC_SITES
+    return mod
+
+
+def _load_sync_sites() -> dict:
+    return _load_registry().SYNC_SITES
+
+
+def _load_collective_sites() -> dict:
+    return _load_registry().COLLECTIVE_SITES
 
 
 def check_sync_site_table() -> list[str]:
@@ -278,6 +296,73 @@ def check_streaming_doc() -> list[str]:
     return errors
 
 
+def check_sharding_doc() -> list[str]:
+    """docs/sharding.md must track ``src/repro/sharding``: every
+    public def/class documented, no stale rows in its Exports table,
+    its collective-site table matching ``COLLECTIVE_SITES`` exactly
+    and its sync-site table matching the registry's shard sites."""
+    md = ROOT / "docs" / "sharding.md"
+    if not md.exists():
+        return ["docs/sharding.md: missing (the partitioned-tier doc)"]
+    text = md.read_text()
+
+    exports = set()
+    for src in sorted((ROOT / SHARDING_DIR).glob("*.py")):
+        body = src.read_text()
+        exports |= set(PUBLIC_DEF.findall(body))
+        exports |= set(PUBLIC_CLASS.findall(body))
+    errors = []
+    for name in sorted(exports):
+        if f"`{name}`" not in text:
+            errors.append(f"docs/sharding.md: {SHARDING_DIR} export "
+                          f"`{name}` is undocumented")
+    head, sep, tail = text.partition("## Exports")
+    if not sep:
+        errors.append("docs/sharding.md: no 'Exports' section")
+    else:
+        rows = {m.group(1)
+                for m in SITE_ROW.finditer(tail.split("\n## ")[0])}
+        rows.discard("export")  # the header row, if backticked
+        for name in sorted(rows - exports):
+            errors.append(f"docs/sharding.md: Exports row `{name}` is "
+                          f"not a public def/class in {SHARDING_DIR}")
+
+    head, sep, tail = text.partition(
+        "## Exchange points and collective accounting")
+    if not sep:
+        errors.append("docs/sharding.md: no 'Exchange points and "
+                      "collective accounting' section")
+    else:
+        section = tail.split("\n## ")[0]
+        documented = {m.group(1) for m in SITE_ROW.finditer(section)}
+        documented.discard("site")
+        registered = set(_load_collective_sites())
+        for site in sorted(registered - documented):
+            errors.append(f"docs/sharding.md: registered collective "
+                          f"site `{site}` missing from the site table")
+        for site in sorted(documented - registered):
+            errors.append(f"docs/sharding.md: collective table row "
+                          f"`{site}` is not in tools/sal/registry.py"
+                          f"::COLLECTIVE_SITES")
+
+    head, sep, tail = text.partition("## Sync sites")
+    if not sep:
+        errors.append("docs/sharding.md: no 'Sync sites' section")
+        return errors
+    section = tail.split("\n## ")[0]
+    documented = {m.group(1) for m in SITE_ROW.finditer(section)}
+    documented.discard("site")
+    registered = {s for s in _load_sync_sites() if "shard" in s}
+    for site in sorted(registered - documented):
+        errors.append(f"docs/sharding.md: registered shard site "
+                      f"`{site}` missing from the site table")
+    for site in sorted(documented - registered):
+        errors.append(f"docs/sharding.md: site table row `{site}` is "
+                      f"not a shard site in "
+                      f"tools/sal/registry.py::SYNC_SITES")
+    return errors
+
+
 def _check_token(tok: str) -> str | None:
     """Return an error string if ``tok`` should resolve but doesn't."""
     if "*" in tok or "<" in tok:
@@ -333,7 +418,8 @@ def main() -> int:
         print(f"FAIL: {err}")
     failed = failed or bool(bench_errors)
     site_errors = (check_sync_site_table() + check_joins_doc()
-                   + check_serving_doc() + check_streaming_doc())
+                   + check_serving_doc() + check_streaming_doc()
+                   + check_sharding_doc())
     for err in site_errors:
         print(f"FAIL: {err}")
     failed = failed or bool(site_errors)

@@ -61,6 +61,21 @@ SYNC_SITES = {
     "stream_build": "StreamJoinBuild.distinct: lazy distinct-key scalar",
     "stream_probe": "incremental join probe returns its match total",
     "stream_groups": "incremental group snapshot fetch (reps/counts/ids)",
+    # sharding — partitioned data tier (see docs/sharding.md)
+    "shard_rank": "partition routing/rank served by the host oracle",
+    "shard_merge": "ShardedTable merge fetches layout + boundaries",
+    "shard_reduce": "sharded min/max gathers its (P, G) partials",
+    "shard_join_probe": "sharded join fetches totals + match pairs",
+}
+
+# collective-exchange sites: every string a ``HOST_SYNCS.collective``
+# call may name — ONE entry per cross-device all_to_all exchange the
+# partitioned data tier launches, keyed by the operator paying for it
+# (docs/sharding.md mirrors this table; tools/check_docs.py enforces).
+COLLECTIVE_SITES = {
+    "exchange_aggregate": "grouped aggregate partitions its input",
+    "exchange_join_build": "partitioned join exchanges the build side",
+    "exchange_join_probe": "partitioned join exchanges the probe side",
 }
 
 SANCTIONED = frozenset({

@@ -22,7 +22,7 @@ import ast
 
 from .core import FileCtx, ProjectCtx, Violation, file_rule, \
     project_rule
-from .registry import SYNC_SITES
+from .registry import COLLECTIVE_SITES, SYNC_SITES
 
 
 def _site_literals(ctx: FileCtx) -> list[tuple[int, str]]:
@@ -54,6 +54,42 @@ def _site_literals(ctx: FileCtx) -> list[tuple[int, str]]:
     return out
 
 
+# forwarders that accept ``site=`` and pass it to
+# ``HOST_SYNCS.collective`` (sharding/data.py partition entry points);
+# the literal naming the exchange lives at THEIR call sites
+_COLLECTIVE_FORWARDERS = frozenset({
+    "partition_columns", "partition_table", "layout"})
+
+
+def _collective_literals(ctx: FileCtx) -> list[tuple[int, str]]:
+    """(line, site) for every literal collective-site argument in the
+    file — the cross-device analogue of ``_site_literals``, checked
+    against ``COLLECTIVE_SITES``. Covers direct
+    ``HOST_SYNCS.collective`` calls and the ``site=`` keyword of the
+    partition forwarders that tick it."""
+    out: list[tuple[int, str]] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        name = fn.attr if isinstance(fn, ast.Attribute) else (
+            fn.id if isinstance(fn, ast.Name) else None)
+        site: ast.expr | None = None
+        if name == "collective":
+            site = node.args[0] if node.args else None
+            for kw in node.keywords:
+                if kw.arg == "site":
+                    site = kw.value
+        elif name in _COLLECTIVE_FORWARDERS:
+            for kw in node.keywords:
+                if kw.arg == "site":
+                    site = kw.value
+        if isinstance(site, ast.Constant) and \
+                isinstance(site.value, str):
+            out.append((node.lineno, site.value))
+    return out
+
+
 @file_rule
 def rule_site(ctx: FileCtx) -> list[Violation]:
     if not ctx.in_dir("src/repro/"):
@@ -66,12 +102,19 @@ def rule_site(ctx: FileCtx) -> list[Violation]:
                 f"sync site '{site}' is not registered — add it to "
                 f"tools/sal/registry.py::SYNC_SITES and document it "
                 f"in docs/kernels.md"))
+    for line, site in _collective_literals(ctx):
+        if site not in COLLECTIVE_SITES:
+            out.append(Violation(
+                ctx.rel, line, "SITE",
+                f"collective site '{site}' is not registered — add it "
+                f"to tools/sal/registry.py::COLLECTIVE_SITES and "
+                f"document it in docs/sharding.md"))
     return out
 
 
-def _registry_key_lines() -> dict[str, int]:
-    """Line number of each SYNC_SITES key in the registry source, so
-    stale-entry violations anchor to the entry itself."""
+def _registry_key_lines(var: str = "SYNC_SITES") -> dict[str, int]:
+    """Line number of each key of a registry dict in the registry
+    source, so stale-entry violations anchor to the entry itself."""
     from pathlib import Path
     reg_path = Path(__file__).resolve().parent / "registry.py"
     try:
@@ -81,7 +124,7 @@ def _registry_key_lines() -> dict[str, int]:
     for node in tree.body:
         if isinstance(node, ast.Assign) and \
                 isinstance(node.targets[0], ast.Name) and \
-                node.targets[0].id == "SYNC_SITES" and \
+                node.targets[0].id == var and \
                 isinstance(node.value, ast.Dict):
             return {k.value: k.lineno for k in node.value.keys
                     if isinstance(k, ast.Constant)}
@@ -91,9 +134,12 @@ def _registry_key_lines() -> dict[str, int]:
 @project_rule
 def rule_site_registry_live(proj: ProjectCtx) -> list[Violation]:
     used: set[str] = set()
+    used_coll: set[str] = set()
     for ctx in proj.files:
         if ctx.rel.startswith("src/repro/"):
             used.update(site for _ln, site in _site_literals(ctx))
+            used_coll.update(
+                site for _ln, site in _collective_literals(ctx))
     if proj.get("src/repro/engine/table.py") is None:
         return []  # a fixture tree, not the repo: staleness is a
         # whole-repo invariant anchored at the fetch choke point
@@ -105,5 +151,13 @@ def rule_site_registry_live(proj: ProjectCtx) -> list[Violation]:
             f"registered sync site '{site}' is named by no "
             f"fetch/tick/fallback call in src/repro — stale entries "
             f"must be removed (docs/kernels.md mirrors the "
+            f"registry)"))
+    coll_lines = _registry_key_lines("COLLECTIVE_SITES")
+    for site in sorted(set(COLLECTIVE_SITES) - used_coll):
+        out.append(Violation(
+            "tools/sal/registry.py", coll_lines.get(site, 1), "SITE",
+            f"registered collective site '{site}' is named by no "
+            f"HOST_SYNCS.collective call in src/repro — stale entries "
+            f"must be removed (docs/sharding.md mirrors the "
             f"registry)"))
     return out

@@ -34,7 +34,7 @@ from .registry import INT32_KERNEL_ENTRIES, SANCTIONED, WIDTH_EXEMPT
 
 SYNC_DIRS = ("src/repro/engine/", "src/repro/kernels/",
              "src/repro/semantic/", "src/repro/serving/",
-             "src/repro/streaming/")
+             "src/repro/streaming/", "src/repro/sharding/")
 
 MATERIALIZERS = frozenset({"asarray", "array", "ascontiguousarray",
                            "unique", "repeat", "isin"})
